@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: a small trained model (cached across
+benchmarks), timing helpers, CSV emission.
+
+All quality benchmarks run on a reduced-config model trained on the
+synthetic corpus — the CPU-feasible stand-in for the paper's LLaMA-3 +
+WikiText-2 setup. What must reproduce is the *ordering and relative gaps*
+between formats (Table 1) and block sizes (Table 3), not absolute PPL.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import SyntheticCorpus
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.train import loop as tl
+
+CACHE_DIR = os.environ.get("BENCH_CACHE", "/tmp/repro_bench_cache")
+RT = Runtime(compute_dtype=jnp.float32)
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "300"))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (CPU; comparative only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def trained_model(arch: str = "smollm-135m", steps: int = TRAIN_STEPS):
+    """Train (or load cached) reduced model on the synthetic corpus."""
+    cfg = reduced(get_config(arch))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=3)
+    cdir = os.path.join(CACHE_DIR, f"{arch}_{steps}")
+    state = tl.init_train_state(jax.random.PRNGKey(0), cfg)
+    if ckpt.latest_step(cdir) == steps:
+        state, _ = ckpt.restore(cdir, state)
+        return cfg, state.params, corpus
+    step = jax.jit(tl.make_train_step(cfg, RT, warmup=10, total_steps=steps,
+                                      lr_peak=3e-3))
+    for s in range(steps):
+        b = corpus.batch(s, 16, 64)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+    ckpt.save(cdir, steps, state)
+    return cfg, state.params, corpus
+
+
+def eval_loss(cfg, params, corpus, n: int = 6) -> float:
+    tot = 0.0
+    for b in corpus.eval_batches(n, 8, 64):
+        loss, _ = lm.forward_xent(params, jnp.asarray(b["tokens"]),
+                                  jnp.asarray(b["labels"]), RT, cfg)
+        tot += float(loss)
+    return tot / n

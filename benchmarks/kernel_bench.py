@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs reference paths, plus the
+analytic VMEM/roofline accounting for the fused kernel on TPU v5e.
+
+Interpret-mode wall times are NOT TPU times — the derived column carries
+the structural numbers that transfer: bytes streamed per output tile,
+VMEM working set, and arithmetic intensity of the fused kernel vs the
+dequant-then-matmul baseline.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import formats, qlinear
+from repro.kernels import ops
+
+BLOCK = 256
+
+
+def kernel_accounting(m, n, k, tm, tn, bpw=3.125):
+    kb = k // BLOCK
+    # per output tile (tm x tn): packed weights stream once per k-block
+    wbytes = tn * kb * (96 + 4)  # planes + scales/zps
+    xbytes = tm * k * 2  # bf16 activations
+    obytes = tm * tn * 4
+    flops = 2 * m * n * k + 2 * n * k * BLOCK  # matmul + in-kernel rotation
+    vmem = (tm * BLOCK * 4 + tn * (64 + 32 + 8) + BLOCK * BLOCK * 4
+            + tm * tn * 4 + tn * BLOCK * 4)
+    ai = flops / (wbytes * (m // tm) + xbytes * (n // tn) + obytes)
+    return wbytes, vmem, ai
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for (m, n, k) in [(8, 2048, 2048), (256, 2048, 2048)]:
+        w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        qt = formats.quantize(w, "itq3_s")
+
+        ref = jax.jit(functools.partial(qlinear.qmatmul, mode="dequant",
+                                        compute_dtype=jnp.float32))
+        us_ref = timeit(ref, x, qt, iters=2)
+        wb, vmem, ai = kernel_accounting(m, n, k, min(m, 256), 256)
+        emit(f"kernel/ref_dequant_m{m}", us_ref,
+             f"streams_full_bf16_weights={2*k*n/1e6:.1f}MB")
+        us_k = timeit(functools.partial(ops.qmatmul_kernel, mode="weights",
+                                        tm=min(m, 256), tn=256), x, qt, iters=1)
+        emit(f"kernel/fused_weights_m{m}", us_k,
+             f"streams_packed={k*n*3.125/8/1e6:.1f}MB vmem_tile={vmem/1024:.0f}KB "
+             f"arith_intensity={ai:.1f}flops/B (interpret-mode walltime)")
+        us_a = timeit(functools.partial(ops.qmatmul_kernel, mode="activations",
+                                        tm=min(m, 256), tn=256), x, qt, iters=1)
+        emit(f"kernel/fused_activations_m{m}", us_a,
+             f"rotations_per_matmul={k//BLOCK} (vs {n*k//BLOCK//BLOCK} weight-side)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir reports/dryrun]
+
+Per (arch x shape x mesh): the three roofline terms (seconds/step/device),
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, collective mix,
+and the derived roofline fraction (model-flops time / dominant-term time —
+the "how close to peak could this run" score).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def load(dirname: str, quant_mode: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        if quant_mode and r.get("quant_mode") != quant_mode:
+            continue
+        recs.append(r)
+    return recs
+
+
+def row(r):
+    rf = r["roofline"]
+    dom = r["bottleneck"]
+    # how long the *useful* model flops would take at peak, vs the dominant
+    # term: the roofline fraction this compiled program could achieve.
+    useful_s = r["model_flops_per_device"] / PEAK_FLOPS
+    frac = useful_s / max(rf[dom.replace("_s", "") + "_s"], 1e-12)
+    coll = r.get("collective_bytes", {})
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+        "collective_s": rf["collective_s"], "bottleneck": dom,
+        "useful_frac": r.get("useful_flops_frac", 0.0),
+        "roofline_frac": frac,
+        "coll_gb": sum(coll.values()) / 1e9,
+        "compile_s": r.get("compile_s"),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--quant-mode", default=None)
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    recs = [row(r) for r in load(args.dir, args.quant_mode)]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    hdr = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "useful_frac", "roofline_frac")
+    print("| " + " | ".join(hdr) + " |")
+    print("|" + "---|" * len(hdr))
+    for r in recs:
+        print("| " + " | ".join(
+            f"{r[h]:.4g}" if isinstance(r[h], float) else str(r[h])
+            for h in hdr) + " |")
+
+    if args.csv:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(recs[0].keys()))
+            w.writeheader()
+            w.writerows(recs)
+        print(f"\nwrote {args.csv}")
+
+    # hillclimb candidates
+    singles = [r for r in recs if r["mesh"] == "16x16"]
+    if singles:
+        worst = min(singles, key=lambda r: r["roofline_frac"])
+        collb = max(singles, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"] + r["memory_s"] + r["collective_s"], 1e-12))
+        print(f"\nworst roofline fraction : {worst['arch']} {worst['shape']} "
+              f"({worst['roofline_frac']:.4f})")
+        print(f"most collective-bound   : {collb['arch']} {collb['shape']} "
+              f"(coll={collb['collective_s']:.3f}s of "
+              f"{collb['compute_s']+collb['memory_s']+collb['collective_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+
+Emits ``name,us_per_call,derived`` CSV rows (stdout). The quality tables
+train/cache a small model on first run (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.table1_quality"),
+    ("table2", "benchmarks.table2_throughput"),
+    ("table3", "benchmarks.table3_blocksize"),
+    ("theory", "benchmarks.theory_smoothing"),
+    ("kernel", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(name for name, _ in MODULES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, modname in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failed.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

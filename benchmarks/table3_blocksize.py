@@ -1,0 +1,71 @@
+"""Paper Table 3: FWHT block-size ablation (32..512).
+
+Two quality measures per block size: reconstruction MSE on heavy-tailed
+synthetic weights, and eval-loss delta on the trained bench model. The
+paper's claim: quality improves monotonically with block size with
+diminishing returns past 256; the transform overhead grows with
+log2(block), reproduced here as the overhead column.
+
+CSV: name,us_per_call(=quantize time),derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_loss, trained_model
+from repro.core import grids
+from repro.core.fwht import blocked_fwht, fwht
+from repro.core.quantize import (dequantize_blocks_ternary,
+                                 quantize_blocks_ternary, to_blocks, from_blocks)
+
+
+def quantize_tensor_blocksize(w, block: int, rule: str = "paper"):
+    wb = to_blocks(w, block)
+    data = quantize_blocks_ternary(wb, rotate=True, rule=rule)
+    wh = dequantize_blocks_ternary(data, rotate=True)
+    return from_blocks(wh, w.shape[-2])
+
+
+def quantize_params_blocksize(params, block: int):
+    """Blockwise-requantize every QUANTIZABLE leaf at the given block."""
+    from repro.serve.quantized import QUANTIZABLE, MIN_REDUCTION
+
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 2 and QUANTIZABLE.search(name)
+                and leaf.shape[-2] >= MIN_REDUCTION):
+            fn = lambda ww: quantize_tensor_blocksize(ww, block)
+            for _ in range(leaf.ndim - 2):
+                fn = jax.vmap(fn)
+            return fn(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_t(df=4, size=(2048, 512)) * 0.02, jnp.float32)
+    cfg, params, corpus = trained_model()
+    base = eval_loss(cfg, params, corpus)
+
+    for block in [32, 64, 128, 256, 512]:
+        t0 = time.time()
+        wh = quantize_tensor_blocksize(w, block)
+        mse = float(jnp.mean((wh - w) ** 2)) / float(jnp.var(w))
+        us = (time.time() - t0) * 1e6
+        qp = quantize_params_blocksize(params, block)
+        dl = eval_loss(cfg, qp, corpus) - base
+        # transform overhead ~ log2(block)/block-matmul cost relative model
+        overhead = np.log2(block) / block * 100 * 256 / np.log2(256)
+        emit(f"table3/block_{block}", us,
+             f"rel_mse={mse:.4f} eval_delta={dl:+.4f} "
+             f"ifwht_overhead_pct={overhead:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Sharded numpy/msgpack checkpoints with async save and elastic restore.
+
+Layout per checkpoint:
+
+    <dir>/step_000123/
+        meta.json          step, leaf paths, shapes, dtypes
+        <leafpath>.npy     one file per pytree leaf (path-flattened)
+        _COMMITTED         atomic-rename marker written last
+
+Design points for the 1000-node posture:
+  * **Atomicity** — writes go to ``step_N.tmp`` and are renamed only after
+    every leaf + marker is durably written; a crashed save can never be
+    mistaken for a valid checkpoint (restore scans for _COMMITTED).
+  * **Async** — ``save_async`` snapshots leaves to host memory and writes on
+    a daemon thread so the train loop only blocks for the device->host copy.
+  * **Elastic restore** — leaves are loaded host-side and ``device_put`` with
+    whatever sharding the *new* mesh prescribes, so restarting on a
+    different topology (fewer hosts after failure, more after scale-up) is
+    the same code path as a plain resume.
+  * On a real multi-host cluster each host writes only the shards it owns
+    (addressable_shards); in this single-process container that reduces to
+    whole-leaf writes, but the layout/commit protocol is the deployable one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+
+_SEP = "__"
+_pending: list[threading.Thread] = []
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    meta = {"step": step, "leaves": {}}
+    for key, arr in flat.items():
+        np.save(os.path.join(tmp, key + ".npy"), arr)
+        meta["leaves"][key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> threading.Thread:
+    """Snapshot to host, then write on a background thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # blocking D2H only
+    th = threading.Thread(target=save, args=(ckpt_dir, step, host_tree),
+                          kwargs={"keep": keep}, daemon=True)
+    th.start()
+    _pending.append(th)
+    return th
+
+
+def wait_pending():
+    while _pending:
+        _pending.pop().join()
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(_committed_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def _committed_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "_COMMITTED")):
+                out.append(int(name[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _committed_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, *, step: Optional[int] = None,
+            shardings=None):
+    """Rebuild ``template``-shaped pytree from disk. ``shardings`` (optional
+    pytree of NamedSharding matching template) enables elastic restore onto
+    a new mesh: leaves are device_put directly into the new layout."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(flat_template))
+    leaves = []
+    for (path, leaf), shard in zip(flat_template, shard_leaves):
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path)
+        arr = np.load(os.path.join(d, key + ".npy"))
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shard) if shard is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

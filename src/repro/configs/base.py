@@ -1,0 +1,168 @@
+"""Model/shape configuration system.
+
+Each assigned architecture gets one module in this package defining
+``CONFIG: ModelConfig``; the registry below resolves ``--arch <id>`` names
+(dashes allowed) to configs. ``reduced()`` produces the CPU-smoke-test
+version of any config (same family/topology, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+__all__ = ["ModelConfig", "ShapeConfig", "get_config", "reduced", "ARCH_IDS", "SHAPES", "runnable_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    # --- norm / act / proj details ---
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    activation: str = "swiglu"  # swiglu | gelu | relu2
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0
+    # --- ssm / hybrid ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    attn_every: int = 0  # hybrid: shared attention block period (zamba2)
+    # --- enc-dec ---
+    encoder_layers: int = 0
+    is_encoder_decoder: bool = False
+    # --- modality frontend stub ---
+    frontend: Optional[str] = None  # "vision" | "audio"
+    frontend_dim: int = 0  # provided patch/frame embedding width
+    frontend_len: int = 0  # provided patch/frame count
+    tie_embeddings: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm" and self.attn_every == 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts (O(1)/O(T) decode state)?
+
+        Per the assignment, long_500k runs only for SSM/hybrid families."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate parameter count (matmul weights + embeddings)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        qo = d * self.num_heads * hd * 2
+        kv = d * self.num_kv_heads * hd * 2
+        attn = qo + kv
+        if self.activation == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.num_experts:
+            mlp = self.num_experts * 3 * d * f + d * self.num_experts
+        if self.family == "ssm":  # rwkv6-style block
+            mlp = 2 * d * (int(3.5 * d)) if f == 0 else int(1.5 * d * f)
+            attn = 6 * d * d
+        per_layer = attn + mlp
+        total = self.num_layers * per_layer + v * d * (1 if self.tie_embeddings else 2)
+        if self.is_encoder_decoder:
+            total += self.encoder_layers * per_layer
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+ARCH_IDS = [
+    "qwen3-moe-235b-a22b",
+    "olmoe-1b-7b",
+    "rwkv6-3b",
+    "phi-3-vision-4.2b",
+    "seamless-m4t-medium",
+    "qwen1.5-0.5b",
+    "nemotron-4-15b",
+    "smollm-135m",
+    "stablelm-3b",
+    "zamba2-7b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch_id!r}; options {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.CONFIG
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, honouring the assignment's skip
+    rules (long_500k only for sub-quadratic families)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                continue  # documented skip: full-attention arch
+            cells.append((arch, shape.name))
+    return cells
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests: few layers, small dims,
+    few experts — topology preserved (GQA ratio, MoE top-k, hybrid period,
+    enc-dec, frontends)."""
+    kv_ratio = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+    heads = 4
+    return dataclasses.replace(
+        cfg,
+        num_layers=min(cfg.num_layers, 4 if cfg.attn_every == 0 else 7),
+        d_model=128,
+        num_heads=heads,
+        num_kv_heads=max(1, heads // kv_ratio),
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 8) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.num_experts else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        attn_every=min(cfg.attn_every, 3) if cfg.attn_every else 0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        frontend_dim=64 if cfg.frontend else 0,
+        frontend_len=8 if cfg.frontend else 0,
+    )

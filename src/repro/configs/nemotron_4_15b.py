@@ -1,0 +1,20 @@
+"""Nemotron-4 15B [arXiv:2402.16819; unverified].
+
+32L, d_model 6144, 48H (GQA kv=8), d_ff 24576, vocab 256000, squared-ReLU
+MLP (no gate), rotary.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=256000,
+    norm="layernorm",
+    activation="relu2",
+    tie_embeddings=False,
+)

@@ -1,0 +1,25 @@
+"""Phi-3-vision 4.2B [hf:microsoft/Phi-3-vision-128k-instruct; hf].
+
+phi3-mini backbone (32L, d_model 3072, 32H MHA, d_ff 8192, vocab 32064)
++ CLIP vision frontend — STUBBED per assignment: input_specs() provides
+precomputed patch embeddings (frontend_dim x frontend_len), projected into
+the token stream by a learned linear.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    norm="rmsnorm",
+    activation="swiglu",
+    frontend="vision",
+    frontend_dim=1024,   # CLIP-L/14 patch embedding width
+    frontend_len=576,    # 24x24 patches
+    tie_embeddings=False,
+)

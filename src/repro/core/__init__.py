@@ -1,0 +1,8 @@
+"""The paper's primary contribution: rotation-domain ternary quantization.
+
+fwht (blocked Walsh-Hadamard), grids (optimal ternary scale theory),
+packing (planar 3-bit planes, 96 B / 256 weights), quantize (Algorithm 1 +
+QTensor pytree), formats (registry incl. every baseline the paper compares
+against), qlinear (dequant / weight-rotation / activation-rotation / auto
+execution paths).
+"""

@@ -1,0 +1,102 @@
+"""Blocked Fast Walsh-Hadamard Transform (FWHT).
+
+The paper's rotation primitive (§2.3): the normalized Walsh-Hadamard matrix
+
+    H_n = (1/sqrt(n)) * [[H_{n/2}, H_{n/2}], [H_{n/2}, -H_{n/2}]],  H_1 = [1]
+
+is symmetric and involutory (H @ H = I), so the transform is its own
+inverse. We provide two computation forms:
+
+  * ``fwht``          -- O(n log n) butterfly network (the paper's Algorithm 2
+                         structure, vectorized over leading axes). Used for
+                         offline quantization and as the CPU reference.
+  * ``hadamard_matrix`` -- explicit H_n for the MXU-matmul form used inside
+                         the Pallas kernels (TPU adaptation, DESIGN.md §2).
+
+Both operate *blockwise*: an array whose trailing dimension is a multiple of
+``block`` is transformed independently per contiguous 256-element (by
+default) block, matching the ITQ3_S block structure (§4.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "fwht",
+    "blocked_fwht",
+    "hadamard_matrix",
+    "is_pow2",
+]
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@functools.lru_cache(maxsize=32)
+def _hadamard_np(n: int) -> np.ndarray:
+    """Unnormalized +-1 Hadamard matrix of size n (Sylvester construction)."""
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of two, got {n}")
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32, normalized: bool = True) -> jax.Array:
+    """Normalized (or raw +-1) Walsh-Hadamard matrix H_n.
+
+    ``H_n @ H_n = I`` when normalized. Symmetric: ``H_n.T == H_n``.
+    """
+    h = _hadamard_np(n)
+    if normalized:
+        h = h / np.sqrt(n)
+    return jnp.asarray(h, dtype=dtype)
+
+
+def fwht(x: jax.Array, *, normalized: bool = True) -> jax.Array:
+    """FWHT along the last axis. Last dim must be a power of two.
+
+    Butterfly decomposition (paper Eq. 4): log2(n) stages of
+    (u, v) -> (u + v, u - v) on disjoint pairs. Vectorized over all leading
+    axes. Self-inverse when ``normalized=True``.
+    """
+    n = x.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"fwht requires power-of-two trailing dim, got {n}")
+    orig_dtype = x.dtype
+    # Accumulate in f32 at minimum: n=256 butterflies add 8 bits of dynamic
+    # range; bf16 accumulation would hit the Theorem-2 epsilon_FWHT term hard.
+    x = x.astype(jnp.promote_types(orig_dtype, jnp.float32))
+    shape = x.shape
+    h = 1
+    while h < n:
+        x = x.reshape(*shape[:-1], n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    x = x.reshape(shape)
+    if normalized:
+        x = x * (1.0 / np.sqrt(n))
+    return x.astype(orig_dtype)
+
+
+def blocked_fwht(x: jax.Array, block: int = 256, *, normalized: bool = True) -> jax.Array:
+    """Apply an independent ``block``-point FWHT to each contiguous block of
+    the trailing dimension (ITQ3_S §4.1 block structure).
+
+    Trailing dim must be divisible by ``block``.
+    """
+    n = x.shape[-1]
+    if n % block != 0:
+        raise ValueError(f"trailing dim {n} not divisible by block {block}")
+    shape = x.shape
+    x = x.reshape(*shape[:-1], n // block, block)
+    x = fwht(x, normalized=normalized)
+    return x.reshape(shape)

@@ -1,0 +1,133 @@
+"""ITQ3_S bit-plane packing (paper §4.2, adapted for TPU — DESIGN.md §2).
+
+Storage per 256-element block is exactly 96 bytes = 3 bits/weight:
+
+  * ``plane2`` — 64 bytes: the 2-bit payload plane. Byte ``i`` holds the
+    codes of elements ``{i, 64+i, 128+i, 192+i}`` in bit-pairs
+    (an *interleaved* layout: unpacking yields four contiguous 64-lane
+    vectors, each extracted with one uniform shift+mask — the VREG-lane
+    analogue of the paper's DP4A nibble interleave).
+  * ``plane1`` — 32 bytes: the 1-bit selector plane. Byte ``i`` holds the
+    selector bits of elements ``{i, 32+i, ..., 224+i}``.
+
+For the faithful ternary format the payload is the code q+z in {0,1,2} and
+the selector plane carries the interleave parity (paper Eq. 9's high nibble
+bit); for the ``itq3_x`` 5-level extension the selector is the magnitude
+escape bit, making the full 3-bit code ``sel*? ...`` — see formats.py.
+
+All functions are shape-polymorphic: they act on the trailing axis, which
+must equal the block size for ``pack_*``/planes for ``unpack_*``; leading
+axes are batched. Everything is pure jnp → usable under jit/pjit and inside
+Pallas interpret-mode reference paths.
+
+A byte-faithful implementation of the paper's Eq. (9) nibble codec is
+provided as ``pack_nibbles_reference``/``unpack_nibbles_reference`` for
+documentation and cross-tests (it costs 4 bits/value — the paper's own
+96-byte figure is only achievable with the planar layout above, which is one
+of the quiet corrections recorded in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pack_plane2",
+    "unpack_plane2",
+    "pack_plane1",
+    "unpack_plane1",
+    "pack_codes",
+    "unpack_codes",
+    "pack_nibbles_reference",
+    "unpack_nibbles_reference",
+]
+
+
+def pack_plane2(codes2: jax.Array) -> jax.Array:
+    """Pack 2-bit values (trailing axis length n, n % 4 == 0, values 0..3)
+    into n//4 bytes, interleaved: byte i <- codes2[..., [i, q+i, 2q+i, 3q+i]]
+    where q = n//4."""
+    n = codes2.shape[-1]
+    if n % 4 != 0:
+        raise ValueError(f"plane2 pack needs trailing dim % 4 == 0, got {n}")
+    q = n // 4
+    c = codes2.astype(jnp.uint8).reshape(*codes2.shape[:-1], 4, q)
+    return (
+        c[..., 0, :]
+        | (c[..., 1, :] << 2)
+        | (c[..., 2, :] << 4)
+        | (c[..., 3, :] << 6)
+    )
+
+
+def unpack_plane2(plane2: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_plane2`: n//4 bytes -> n 2-bit values."""
+    p = plane2.astype(jnp.uint8)
+    parts = [(p >> (2 * k)) & 0x3 for k in range(4)]
+    out = jnp.stack(parts, axis=-2)
+    return out.reshape(*plane2.shape[:-1], plane2.shape[-1] * 4)
+
+
+def pack_plane1(codes1: jax.Array) -> jax.Array:
+    """Pack 1-bit values (trailing n, n % 8 == 0) into n//8 bytes,
+    interleaved with stride n//8."""
+    n = codes1.shape[-1]
+    if n % 8 != 0:
+        raise ValueError(f"plane1 pack needs trailing dim % 8 == 0, got {n}")
+    q = n // 8
+    c = codes1.astype(jnp.uint8).reshape(*codes1.shape[:-1], 8, q)
+    out = c[..., 0, :]
+    for k in range(1, 8):
+        out = out | (c[..., k, :] << k)
+    return out
+
+
+def unpack_plane1(plane1: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_plane1`."""
+    p = plane1.astype(jnp.uint8)
+    parts = [(p >> k) & 0x1 for k in range(8)]
+    out = jnp.stack(parts, axis=-2)
+    return out.reshape(*plane1.shape[:-1], plane1.shape[-1] * 8)
+
+
+def pack_codes(codes3: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split 3-bit codes (0..7, trailing axis = block) into the two planes.
+
+    Returns ``(plane2, plane1)`` with trailing dims n//4 and n//8 bytes."""
+    return pack_plane2(codes3 & 0x3), pack_plane1((codes3 >> 2) & 0x1)
+
+
+def unpack_codes(plane2: jax.Array, plane1: jax.Array) -> jax.Array:
+    """Reassemble 3-bit codes from the two planes."""
+    lo = unpack_plane2(plane2)
+    hi = unpack_plane1(plane1)
+    return (lo | (hi << 2)).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Paper Eq. (9) nibble codec — byte-faithful reference (4 bits/value storage).
+# ---------------------------------------------------------------------------
+
+def pack_nibbles_reference(codes3: jax.Array) -> jax.Array:
+    """Paper Eq. (9): 8 nibbles per 32-bit word; low 2 bits = q mod 4, high
+    bit = interleave selector (code bit 2). Trailing axis n % 8 == 0; output
+    is uint32 words, n//8 per row."""
+    n = codes3.shape[-1]
+    if n % 8 != 0:
+        raise ValueError("nibble pack needs trailing dim % 8 == 0")
+    c = codes3.astype(jnp.uint32)
+    nib = (c & 0x3) | ((c >> 2) << 3)  # bit layout: s _ b b
+    nib = nib.reshape(*codes3.shape[:-1], n // 8, 8)
+    word = jnp.zeros(nib.shape[:-1], dtype=jnp.uint32)
+    for j in range(8):
+        word = word | (nib[..., j] << (4 * j))
+    return word
+
+
+def unpack_nibbles_reference(words: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles_reference`."""
+    w = words.astype(jnp.uint32)
+    nibs = [(w >> (4 * j)) & 0xF for j in range(8)]
+    nib = jnp.stack(nibs, axis=-1)
+    codes = (nib & 0x3) | (((nib >> 3) & 0x1) << 2)
+    return codes.reshape(*words.shape[:-1], words.shape[-1] * 8).astype(jnp.uint8)

@@ -1,0 +1,272 @@
+"""ITQ3_S blockwise quantization — paper Algorithm 1 and Eq. (10).
+
+Pipeline per 256-element block ``w`` (taken along the *reduction* dimension
+of each weight matrix):
+
+    w'  = FWHT(w)                               # rotation-domain smoothing
+    d_k = c_rule * std(w')                      # optimal ternary scale, §3.3
+    z_k = -round(mean(w') / d_k)                # zero-point offset
+    q   = clamp(round(w'/d_k) + z_k, -1, 1)     # ternary codes
+    store(pack3b(q + 1), d_k, z_k)              # planar 3-bit planes
+
+Dequantization (paper Prop. 1): ``w_hat = FWHT(d_k * (q - z_k))`` — exact up
+to grid error because H is involutory and isometric (Theorem 2).
+
+This module provides the block-level primitives plus the :class:`QTensor`
+pytree container used by every format in :mod:`repro.core.formats`. Weight
+tensors are shaped ``(..., K, N)`` (reduction-major, matching ``x @ W``);
+blocks tile K; internal storage is output-major ``(..., N, KB, block)`` so a
+row of packed bytes is one output feature's weight stream (GGUF-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grids, packing
+from repro.core.fwht import fwht
+
+__all__ = [
+    "QMeta",
+    "QTensor",
+    "quantize_blocks_ternary",
+    "dequantize_blocks_ternary",
+    "pad_reduction_dim",
+    "to_blocks",
+    "from_blocks",
+]
+
+DEFAULT_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class QMeta:
+    """Static (hashable) metadata for a quantized tensor."""
+
+    fmt: str
+    shape: tuple[int, ...]  # original (unpadded) shape (..., K, N)
+    block: int
+    rule: str = "paper"
+    rotate: bool = True
+    sub_blocks: int = 0  # 0 = single block scale; 8 = paper sub-block variant
+    fivelevel: bool = False
+    bits_per_weight: float = 3.125
+
+    @property
+    def k(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def k_padded(self) -> int:
+        return -(-self.k // self.block) * self.block
+
+    @property
+    def kb(self) -> int:
+        return self.k_padded // self.block
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["data"],
+    meta_fields=["meta"],
+)
+@dataclasses.dataclass
+class QTensor:
+    """A quantized weight tensor: dict of packed arrays + static meta.
+
+    ``data`` keys depend on the format; for the ITQ3_S family:
+      plane2  (..., N, KB, block//4) uint8   2-bit payload plane
+      plane1  (..., N, KB, block//8) uint8   1-bit selector plane
+      scales  (..., N, KB) f16 — or (..., N, KB, sub) for the sub variant
+      zps     (..., N, KB) f16 (integer-valued)
+      dsign   (block,) int8 — only for quip3 (random sign diagonal)
+    """
+
+    data: dict[str, jax.Array]
+    meta: QMeta
+
+    @property
+    def fmt(self) -> str:
+        return self.meta.fmt
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.meta.shape
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize for v in self.data.values())
+
+
+# ---------------------------------------------------------------------------
+# Shape plumbing: (..., K, N) <-> output-major blocks (..., N, KB, block)
+# ---------------------------------------------------------------------------
+
+def pad_reduction_dim(w: jax.Array, block: int) -> jax.Array:
+    """Zero-pad axis -2 (the reduction dim K) up to a multiple of ``block``
+    (paper §8, non-power-of-two layers)."""
+    k = w.shape[-2]
+    pad = (-k) % block
+    if pad == 0:
+        return w
+    widths = [(0, 0)] * w.ndim
+    widths[-2] = (0, pad)
+    return jnp.pad(w, widths)
+
+
+def to_blocks(w: jax.Array, block: int) -> jax.Array:
+    """(..., K, N) -> (..., N, KB, block); pads K as needed."""
+    w = pad_reduction_dim(w, block)
+    *lead, kp, n = w.shape
+    w = w.reshape(*lead, kp // block, block, n)
+    return jnp.moveaxis(w, -1, -3)  # (..., N, KB, block)
+
+
+def from_blocks(wb: jax.Array, k_orig: int) -> jax.Array:
+    """(..., N, KB, block) -> (..., K, N), trimming the K padding."""
+    *lead, n, kb, block = wb.shape
+    w = jnp.moveaxis(wb, -3, -1)  # (..., KB, block, N)
+    w = w.reshape(*lead, kb * block, n)
+    return w[..., :k_orig, :]
+
+
+# ---------------------------------------------------------------------------
+# Block-level ternary quantization (Algorithm 1) and its inverse
+# ---------------------------------------------------------------------------
+
+def _rotate(wb: jax.Array, dsign: jax.Array | None) -> jax.Array:
+    if dsign is not None:
+        wb = wb * dsign.astype(wb.dtype)
+    return fwht(wb)
+
+
+def quantize_blocks_ternary(
+    wb: jax.Array,
+    *,
+    rotate: bool = True,
+    rule: str = "paper",
+    sub_blocks: int = 0,
+    fivelevel: bool = False,
+    dsign: jax.Array | None = None,
+) -> dict[str, jax.Array]:
+    """Quantize blocks ``wb`` (..., block) -> packed planes + scales + zps.
+
+    Follows Algorithm 1 exactly for the default arguments; ``rotate=False``
+    gives the IQ3_S-style no-rotation baseline, ``sub_blocks=8`` the §4.1
+    sub-block-scale variant, ``fivelevel=True`` the beyond-paper escape grid.
+    """
+    wb = wb.astype(jnp.float32)
+    if rotate:
+        wb = _rotate(wb, dsign)
+    block = wb.shape[-1]
+
+    if sub_blocks:
+        sub = wb.reshape(*wb.shape[:-1], sub_blocks, block // sub_blocks)
+        sigma = jnp.std(sub, axis=-1)  # (..., sub)
+        alpha = grids.FIVELEVEL_ALPHA if fivelevel else grids.SCALE_RULES[rule]
+        d_sub = (alpha * sigma).astype(jnp.float16).astype(jnp.float32)
+        d_full = jnp.repeat(d_sub, block // sub_blocks, axis=-1)
+        d_block = jnp.mean(d_sub, axis=-1)  # stored block scale (compat)
+        zp = jnp.zeros_like(d_block)  # symmetric (paper: z absorbed)
+        scales = d_sub
+        d_for_codes = d_full
+        z_for_codes = 0.0
+    else:
+        sigma = jnp.std(wb, axis=-1)
+        alpha = grids.FIVELEVEL_ALPHA if fivelevel else grids.SCALE_RULES[rule]
+        d_block = (alpha * sigma).astype(jnp.float16).astype(jnp.float32)
+        mu = jnp.mean(wb, axis=-1)
+        safe_d = jnp.where(d_block > 0, d_block, 1.0)
+        zmax = 2.0 if fivelevel else 1.0
+        zp = jnp.clip(-jnp.round(mu / safe_d), -zmax, zmax)
+        scales = d_block
+        d_for_codes = d_block[..., None]
+        z_for_codes = zp[..., None]
+
+    safe_d = jnp.where(d_for_codes > 0, d_for_codes, 1.0)
+    if fivelevel:
+        q = jnp.clip(jnp.round(wb / safe_d) + z_for_codes, -2, 2)
+        codes3 = _fivelevel_to_codes3(q.astype(jnp.int8))
+    else:
+        q = jnp.clip(jnp.round(wb / safe_d) + z_for_codes, -1, 1)
+        # Payload {0,1,2}; selector plane carries the interleave parity bit
+        # (paper Eq. 9's high nibble bit — informational, not value-bearing).
+        payload = (q + 1).astype(jnp.uint8)
+        parity = (jnp.arange(block, dtype=jnp.uint8) & 1) * jnp.ones_like(payload)
+        codes3 = payload | (parity << 2)
+
+    plane2, plane1 = packing.pack_codes(codes3)
+    out = {
+        "plane2": plane2,
+        "plane1": plane1,
+        "scales": scales.astype(jnp.float16),
+        "zps": zp.astype(jnp.float16),
+    }
+    if dsign is not None:
+        out["dsign"] = dsign.astype(jnp.int8)
+    return out
+
+
+def _fivelevel_to_codes3(q: jax.Array) -> jax.Array:
+    """q in {-2..2} -> 3-bit code: payload = clip(q,-1,1)+1, sel = |q|==2."""
+    payload = (jnp.clip(q, -1, 1) + 1).astype(jnp.uint8)
+    sel = (jnp.abs(q) == 2).astype(jnp.uint8)
+    return payload | (sel << 2)
+
+
+def _codes3_to_fivelevel(codes3: jax.Array) -> jax.Array:
+    payload = (codes3 & 0x3).astype(jnp.int8) - 1
+    sel = ((codes3 >> 2) & 0x1).astype(jnp.int8)
+    return payload * (1 + sel)
+
+
+def decode_values(
+    plane2: jax.Array,
+    plane1: jax.Array,
+    *,
+    fivelevel: bool = False,
+) -> jax.Array:
+    """Packed planes -> integer grid values q~ (..., block):
+    {-1,0,1} (ternary) or {-2..2} (fivelevel). Shared by ref paths and the
+    Pallas kernels' interpret-mode oracle."""
+    codes3 = packing.unpack_codes(plane2, plane1)
+    if fivelevel:
+        return _codes3_to_fivelevel(codes3)
+    return (codes3 & 0x3).astype(jnp.int8) - 1
+
+
+def dequantize_blocks_ternary(
+    data: dict[str, jax.Array],
+    *,
+    rotate: bool = True,
+    sub_blocks: int = 0,
+    fivelevel: bool = False,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Inverse of :func:`quantize_blocks_ternary` (paper Algorithm 2 math):
+    unpack -> dequantize on the grid -> inverse FWHT (self-inverse) ->
+    undo sign diagonal. Returns (..., block)."""
+    qv = decode_values(data["plane2"], data["plane1"], fivelevel=fivelevel).astype(jnp.float32)
+    block = qv.shape[-1]
+    if sub_blocks:
+        d_sub = data["scales"].astype(jnp.float32)
+        d_full = jnp.repeat(d_sub, block // sub_blocks, axis=-1)
+        vals = d_full * qv
+    else:
+        d = data["scales"].astype(jnp.float32)[..., None]
+        z = data["zps"].astype(jnp.float32)[..., None]
+        vals = d * (qv - z)
+    if rotate:
+        vals = fwht(vals)  # H is self-inverse (normalized)
+        dsign = data.get("dsign")
+        if dsign is not None:
+            vals = vals * dsign.astype(vals.dtype)
+    return vals.astype(dtype)

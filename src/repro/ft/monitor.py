@@ -1,0 +1,121 @@
+"""Fault-tolerance layer: heartbeats, straggler detection, elastic re-mesh.
+
+On a real cluster this wraps the multi-controller runtime (heartbeats over
+the coordination service; each host runs the same driver). The logic —
+what counts as a straggler, when to declare a host dead, how to rebuild
+the mesh and resume — is hardware-independent and fully tested here with
+simulated clocks; ``examples/fault_tolerant_train.py`` drives an actual
+train loop through failure + elastic-restart on CPU.
+
+Policies:
+  * **Straggler**: host step latency > ``straggler_factor`` x rolling median
+    of the fleet -> flagged; the driver's response is configurable (log,
+    or exclude at the next re-mesh — "leave the slow host behind" is the
+    standard mitigation when checkpoints are cheap).
+  * **Failure**: no heartbeat for ``timeout_s`` -> host declared dead ->
+    ``ElasticPlan`` computes the largest viable (data, model) mesh from the
+    survivors (model axis preserved — TP degree is baked into weight
+    layouts; data axis shrinks), and the driver restores the latest
+    committed checkpoint onto the new mesh (checkpoint/ckpt.py handles the
+    resharding) and replays the data stream deterministically from the
+    restored step (data/pipeline.py is keyed by step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+__all__ = ["HeartbeatMonitor", "ElasticPlan", "plan_remesh"]
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    last_step: int = -1
+    step_times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=16))
+
+
+class HeartbeatMonitor:
+    """Tracks per-host liveness and step latency."""
+
+    def __init__(self, num_hosts: int, *, timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0, clock=time.monotonic):
+        self.num_hosts = num_hosts
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        now = clock()
+        self.hosts = {h: HostState(last_beat=now) for h in range(num_hosts)}
+        self.excluded: set[int] = set()
+
+    def beat(self, host: int, step: int, now: Optional[float] = None):
+        now = self.clock() if now is None else now
+        st = self.hosts[host]
+        if st.last_step >= 0 and step > st.last_step:
+            st.step_times.append((now - st.last_beat) / max(1, step - st.last_step))
+        st.last_beat = now
+        st.last_step = step
+
+    def _median_step_time(self) -> Optional[float]:
+        times = sorted(
+            t for h, st in self.hosts.items() if h not in self.excluded
+            for t in st.step_times)
+        return times[len(times) // 2] if times else None
+
+    def stragglers(self) -> list[int]:
+        med = self._median_step_time()
+        if med is None:
+            return []
+        out = []
+        for h, st in self.hosts.items():
+            if h in self.excluded or not st.step_times:
+                continue
+            mine = sorted(st.step_times)[len(st.step_times) // 2]
+            if mine > self.straggler_factor * med:
+                out.append(h)
+        return out
+
+    def failed(self, now: Optional[float] = None) -> list[int]:
+        now = self.clock() if now is None else now
+        return [h for h, st in self.hosts.items()
+                if h not in self.excluded and now - st.last_beat > self.timeout_s]
+
+    def exclude(self, hosts):
+        self.excluded.update(hosts)
+
+    def alive(self) -> list[int]:
+        return [h for h in self.hosts if h not in self.excluded]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """A re-mesh decision after failures/exclusions."""
+
+    data: int
+    model: int
+    pod: int = 1
+    dropped_hosts: tuple = ()
+
+    @property
+    def devices(self) -> int:
+        return self.pod * self.data * self.model
+
+
+def plan_remesh(alive_devices: int, *, model: int, prefer_pods: int = 1,
+                min_data: int = 1) -> Optional[ElasticPlan]:
+    """Largest mesh from survivors, preserving the TP degree.
+
+    TP (model) is baked into weight layouts, so we keep it fixed and shrink
+    data (and pods, if a whole pod is unusable). Returns None if survivors
+    cannot host even (min_data x model)."""
+    if alive_devices < min_data * model:
+        return None
+    for pods in range(prefer_pods, 0, -1):
+        per_pod = alive_devices // pods
+        data = per_pod // model
+        if data >= min_data:
+            # data axes must be uniform across pods
+            return ElasticPlan(data=data, model=model, pod=pods)
+    return None

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  fwht_kernel.py   blocked 256-point Walsh-Hadamard transform (MXU
+                   constant-matmul form — the TPU adaptation of the CUDA
+                   shared-memory butterfly, DESIGN.md §2)
+  itq3_matmul.py   fused unpack -> dequant -> rotate -> matmul for the
+                   ITQ3_S format family (the paper's load_tiles_itq3_s +
+                   MMQ pipeline as one pallas_call)
+  ops.py           jitted public wrappers (auto interpret on CPU)
+  ref.py           pure-jnp oracles; every kernel is allclose-swept
+                   against these in tests/test_kernels.py
+"""

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: blocked 256-point Walsh-Hadamard transform.
+
+TPU adaptation of the paper's ``ifwht_256`` CUDA shared-memory butterfly
+(Listing 2): instead of 8 ``__syncthreads``-separated butterfly stages, each
+grid cell performs a single (TM, 256) x (256, 256) matmul against the
+constant normalized Hadamard matrix on the MXU. On a systolic array this is
+one pipelined pass at full MXU rate — the analogue of "free in the load
+stage" — whereas a butterfly network would be 8 serial VPU op-chains over
+the same VMEM tile (see DESIGN.md §2). H is passed as a kernel operand
+mapped to the same (256, 256) block for every grid cell, so it is fetched
+into VMEM once and stays resident.
+
+Because H is involutory, this one kernel is both the forward FWHT (offline
+quantization, activation rotation) and the inverse FWHT (paper Algorithm 2
+step 3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fwht import hadamard_matrix, is_pow2
+
+__all__ = ["fwht_pallas"]
+
+DEFAULT_TM = 256
+
+
+def _fwht_kernel(h_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...]
+    o_ref[...] = jnp.dot(x, h, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tm", "interpret"))
+def fwht_pallas(
+    x: jax.Array,
+    *,
+    block: int = 256,
+    tm: int = DEFAULT_TM,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blockwise FWHT along the trailing axis of ``x`` (2-D ``(M, K)``,
+    K % block == 0). Returns same shape/dtype.
+
+    ``interpret=True`` executes on CPU for validation; on a real TPU pass
+    ``interpret=False``.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"fwht_pallas expects 2-D input, got {x.shape}")
+    m, k = x.shape
+    if not is_pow2(block) or k % block != 0:
+        raise ValueError(f"K={k} must be a multiple of pow2 block={block}")
+    tm = min(tm, m) if m >= 8 else m
+    pad_m = (-m) % tm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mp = x.shape[0]
+    h = hadamard_matrix(block, dtype=jnp.float32)
+
+    out = pl.pallas_call(
+        _fwht_kernel,
+        grid=(mp // tm, k // block),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (0, 0)),  # H: resident
+            pl.BlockSpec((tm, block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, k), x.dtype),
+        interpret=interpret,
+    )(h, x)
+    return out[:m]

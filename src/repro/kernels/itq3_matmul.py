@@ -1,0 +1,210 @@
+"""Pallas TPU kernel: fused ITQ3_S dequantize + rotate + matmul.
+
+The TPU analogue of the paper's ``load_tiles_itq3_s`` + MMQ pipeline (§5.2):
+packed 3-bit weights stream from HBM at 3.125 bits/weight and are expanded
+to a full-precision weight tile *inside VMEM*, never materialized in HBM.
+
+Per grid cell (i, j, k) — output tile (i, j), reduction block k:
+
+  1. **Load** the packed planes for TN output features of block k:
+     ``plane2`` (TN, 64) uint8 and ``plane1`` (TN, 32) uint8 — 96 bytes per
+     256 weights, the paper's exact storage budget.
+  2. **Unpack** with lane-parallel shifts/masks. The planar-interleaved
+     layout (packing.py) yields four contiguous 64-wide chunks per uniform
+     shift — the VREG-lane version of the paper's DP4A nibble interleave.
+  3. **Dequantize** on the grid: ``w = d_k * (q - z_k)`` (ternary) or the
+     5-level escape decode (itq3_x), or sub-block scales (itq3_s_sub).
+  4. **Rotate** (``rotate_weights=True``, paper-faithful): apply the inverse
+     FWHT as four (TN, 64) @ (64, 256) MXU matmuls against static row-slices
+     of H_256 — replacing the CUDA 8-stage shared-memory butterfly with
+     systolic-array passes (DESIGN.md §2), and avoiding any in-kernel
+     reshape of the unpacked chunks.
+  5. **Accumulate** ``acc += x_tile @ w_tile^T`` in f32 scratch; the output
+     tile is written once at k == KB-1.
+
+With ``rotate_weights=False`` the same kernel contracts the dequantized
+codes directly — used both for the IQ3_S no-rotation baseline and for the
+beyond-paper *activation-domain* path (ops.py rotates x blockwise first;
+the zero-point then couples in the rotated domain with no extra term since
+z is folded into the dequantized tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fwht import hadamard_matrix
+
+__all__ = ["itq3_matmul_pallas"]
+
+BLOCK = 256
+NCHUNK = 4  # 256 = 4 chunks of 64 (one per 2-bit position in a plane2 byte)
+CHUNK = BLOCK // NCHUNK  # 64
+
+
+def _decode_chunk(p2, p1, c: int, *, fivelevel: bool):
+    """Chunk c (elements c*64..c*64+63) integer grid values from the planes.
+
+    p2: (TN, 64) uint8, p1: (TN, 32) uint8. Planar-interleaved layout:
+    plane2 byte i, bit-pair c  <-> element c*64 + i;
+    plane1 byte i, bit b       <-> element b*32 + i.
+    """
+    payload = ((p2 >> (2 * c)) & 0x3).astype(jnp.int8) - 1  # {-1,0,1}
+    if not fivelevel:
+        return payload.astype(jnp.float32)
+    sel_lo = (p1 >> (2 * c)) & 0x1        # elements c*64 + [0..31]
+    sel_hi = (p1 >> (2 * c + 1)) & 0x1    # elements c*64 + [32..63]
+    sel = jnp.concatenate([sel_lo, sel_hi], axis=-1).astype(jnp.int8)
+    return (payload * (1 + sel)).astype(jnp.float32)
+
+
+def _itq3_matmul_kernel(
+    h_ref,    # (256, 256) f32 — Hadamard (only read when rotate_weights)
+    x_ref,    # (TM, 256)
+    p2_ref,   # (TN, 1, 64) uint8
+    p1_ref,   # (TN, 1, 32) uint8
+    sc_ref,   # (TN, 1) f32  |  (TN, 1, SUB) f32 for sub-block scales
+    zp_ref,   # (TN, 1) f32
+    o_ref,    # (TM, TN)
+    acc_ref,  # scratch (TM, TN) f32
+    *,
+    rotate_weights: bool,
+    fivelevel: bool,
+    sub_blocks: int,
+    kb: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p2 = p2_ref[:, 0, :]
+    p1 = p1_ref[:, 0, :]
+    x = x_ref[...].astype(jnp.float32)
+
+    if sub_blocks:
+        d_sub = sc_ref[:, 0, :].astype(jnp.float32)  # (TN, SUB)
+    else:
+        d = sc_ref[...].astype(jnp.float32)  # (TN, 1)
+        z = zp_ref[...].astype(jnp.float32)  # (TN, 1)
+
+    if rotate_weights:
+        w_rot = jnp.zeros((p2.shape[0], BLOCK), dtype=jnp.float32)
+
+    acc = jnp.zeros_like(acc_ref)
+    for c in range(NCHUNK):
+        q = _decode_chunk(p2, p1, c, fivelevel=fivelevel)  # (TN, 64)
+        if sub_blocks:
+            # element e = c*64 + i lives in sub-block e // (256//SUB).
+            per = BLOCK // sub_blocks  # elements per sub-block
+            lo = (c * CHUNK) // per
+            # chunk spans CHUNK//per sub-blocks, each of `per` elements
+            reps = [d_sub[:, lo + s : lo + s + 1] for s in range(CHUNK // per)]
+            d_c = jnp.concatenate(
+                [jnp.broadcast_to(r, (r.shape[0], per)) for r in reps], axis=-1
+            )
+            w_c = d_c * q
+        else:
+            w_c = d * (q - z)
+
+        if rotate_weights:
+            # IFWHT via MXU: accumulate w_c @ H[c*64:(c+1)*64, :]
+            h_slice = h_ref[c * CHUNK : (c + 1) * CHUNK, :]
+            w_rot = w_rot + jnp.dot(w_c, h_slice, preferred_element_type=jnp.float32)
+        else:
+            x_c = x[:, c * CHUNK : (c + 1) * CHUNK]
+            acc = acc + jax.lax.dot_general(
+                x_c, w_c, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    if rotate_weights:
+        acc = jax.lax.dot_general(
+            x, w_rot, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    acc_ref[...] += acc
+
+    @pl.when(k == kb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rotate_weights", "fivelevel", "sub_blocks", "tm", "tn", "interpret", "out_dtype",
+    ),
+)
+def itq3_matmul_pallas(
+    x: jax.Array,        # (M, K_pad) — K_pad = KB * 256
+    plane2: jax.Array,   # (N, KB, 64) uint8
+    plane1: jax.Array,   # (N, KB, 32) uint8
+    scales: jax.Array,   # (N, KB) f16/f32  |  (N, KB, SUB)
+    zps: jax.Array,      # (N, KB) f16/f32
+    *,
+    rotate_weights: bool = True,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused ITQ3_S matmul: returns ``x @ W_hat`` of shape (M, N)."""
+    m, kpad = x.shape
+    n, kb = plane2.shape[0], plane2.shape[1]
+    if kpad != kb * BLOCK:
+        raise ValueError(f"x K dim {kpad} != KB*256 = {kb * BLOCK}")
+
+    tm = max(1, min(tm, m))
+    tn = max(1, min(tn, n))
+    pad_m, pad_n = (-m) % tm, (-n) % tn
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    if pad_n:
+        pad = [(0, pad_n)] + [(0, 0)] * (plane2.ndim - 1)
+        plane2 = jnp.pad(plane2, pad)
+        plane1 = jnp.pad(plane1, [(0, pad_n)] + [(0, 0)] * (plane1.ndim - 1))
+        scales = jnp.pad(scales, [(0, pad_n)] + [(0, 0)] * (scales.ndim - 1))
+        zps = jnp.pad(zps, [(0, pad_n)] + [(0, 0)] * (zps.ndim - 1))
+    mp, np_ = x.shape[0], plane2.shape[0]
+
+    scales = scales.astype(jnp.float32)
+    zps = zps.astype(jnp.float32)
+    h = hadamard_matrix(BLOCK, dtype=jnp.float32)
+
+    if sub_blocks:
+        sc_spec = pl.BlockSpec((tn, 1, sub_blocks), lambda i, j, k: (j, k, 0))
+    else:
+        sc_spec = pl.BlockSpec((tn, 1), lambda i, j, k: (j, k))
+
+    kernel = functools.partial(
+        _itq3_matmul_kernel,
+        rotate_weights=rotate_weights,
+        fivelevel=fivelevel,
+        sub_blocks=sub_blocks,
+        kb=kb,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // tm, np_ // tn, kb),
+        in_specs=[
+            pl.BlockSpec((BLOCK, BLOCK), lambda i, j, k: (0, 0)),  # H resident
+            pl.BlockSpec((tm, BLOCK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, 1, CHUNK), lambda i, j, k: (j, k, 0)),
+            pl.BlockSpec((tn, 1, BLOCK // 8), lambda i, j, k: (j, k, 0)),
+            sc_spec,
+            pl.BlockSpec((tn, 1), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(h, x, plane2, plane1, scales, zps)
+    return out[:m, :n]

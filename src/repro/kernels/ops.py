@@ -1,0 +1,116 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``qmatmul_kernel`` is the kernel-backed counterpart of
+:func:`repro.core.qlinear.qmatmul`: it accepts the same QTensor and mode
+vocabulary and dispatches:
+
+  mode="weights"      -> fused kernel with in-kernel IFWHT (paper §5.2)
+  mode="activations"  -> blocked-FWHT kernel on x, then the same fused
+                         kernel with rotation disabled (DESIGN.md §2
+                         dual-domain optimization)
+
+``interpret`` defaults to "auto": interpret=True unless running on real TPU
+hardware. All wrappers handle reduction-dim padding and arbitrary leading
+batch dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor
+from repro.kernels.fwht_kernel import fwht_pallas
+from repro.kernels.itq3_matmul import BLOCK, itq3_matmul_pallas
+
+__all__ = ["auto_interpret", "blocked_fwht_op", "qmatmul_kernel"]
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def blocked_fwht_op(x: jax.Array, block: int = 256, *, interpret: bool | None = None) -> jax.Array:
+    """Blockwise FWHT along the last axis for any-rank ``x``."""
+    if interpret is None:
+        interpret = auto_interpret()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    out = fwht_pallas(x2, block=block, interpret=interpret)
+    return out.reshape(*lead, k)
+
+
+def _pad_last(x: jax.Array, to: int) -> jax.Array:
+    pad = (-x.shape[-1]) % to
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[-1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmatmul_kernel(
+    x: jax.Array,
+    qt: QTensor,
+    *,
+    mode: str = "weights",
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Kernel-backed ``x (..., K) @ W_hat (K, N) -> (..., N)`` for the
+    ITQ3_S format family."""
+    if interpret is None:
+        interpret = auto_interpret()
+    m = qt.meta
+    if m.fmt not in ("iq3_s", "itq3_s", "itq3_s_sub", "itq3_x", "quip3"):
+        raise ValueError(f"kernel path supports the ternary family, got {m.fmt}")
+    if m.fmt == "quip3" and mode == "weights":
+        # sign diagonal lives outside the kernel: fold into x (exact dual).
+        pass
+
+    if mode == "auto":
+        rows = 1
+        for d in x.shape[:-1]:
+            rows *= d
+        mode = "activations" if rows <= m.n else "weights"
+    lead = x.shape[:-1]
+    xp = _pad_last(x.reshape(-1, x.shape[-1]), m.block)
+
+    dsign = qt.data.get("dsign")
+    rotate = m.rotate
+    if rotate:
+        if mode == "activations":
+            xb = xp.reshape(xp.shape[0], -1, m.block)
+            if dsign is not None:
+                xb = xb * dsign.astype(xb.dtype)
+            xp = xb.reshape(xp.shape)
+            xp = blocked_fwht_op(xp, block=m.block, interpret=interpret)
+            rotate_weights = False
+        elif mode == "weights":
+            if dsign is not None:
+                # w_hat = D H v  =>  y = (H v)^T (D x): pre-scale x by D.
+                xb = xp.reshape(xp.shape[0], -1, m.block) * dsign.astype(xp.dtype)
+                xp = xb.reshape(xp.shape)
+            rotate_weights = True
+        else:
+            raise ValueError(f"unknown kernel mode {mode!r}")
+    else:
+        rotate_weights = False  # iq3_s baseline: contract codes directly
+
+    out = itq3_matmul_pallas(
+        xp,
+        qt.data["plane2"],
+        qt.data["plane1"],
+        qt.data["scales"],
+        qt.data["zps"],
+        rotate_weights=rotate_weights,
+        fivelevel=m.fivelevel,
+        sub_blocks=m.sub_blocks,
+        tm=tm,
+        tn=tn,
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )
+    return out.reshape(*lead, m.n)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function computes exactly what the corresponding kernel must produce,
+built from the independently-tested :mod:`repro.core` primitives. Kernel
+tests sweep shapes/dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fwht import blocked_fwht
+from repro.core.quantize import decode_values
+
+__all__ = ["fwht_ref", "itq3_matmul_ref"]
+
+
+def fwht_ref(x: jax.Array, block: int = 256) -> jax.Array:
+    """Oracle for kernels.fwht_kernel.fwht_pallas."""
+    return blocked_fwht(x.astype(jnp.float32), block=block).astype(x.dtype)
+
+
+def itq3_matmul_ref(
+    x: jax.Array,
+    plane2: jax.Array,
+    plane1: jax.Array,
+    scales: jax.Array,
+    zps: jax.Array,
+    *,
+    rotate_weights: bool = True,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for kernels.itq3_matmul.itq3_matmul_pallas.
+
+    x: (M, KB*256); planes (N, KB, 64)/(N, KB, 32); scales (N, KB[, SUB]).
+    """
+    block = plane2.shape[-1] * 4
+    n, kb = plane2.shape[0], plane2.shape[1]
+    qv = decode_values(plane2, plane1, fivelevel=fivelevel).astype(jnp.float32)
+    if sub_blocks:
+        d = jnp.repeat(scales.astype(jnp.float32), block // sub_blocks, axis=-1)
+        vals = d * qv
+    else:
+        vals = scales.astype(jnp.float32)[..., None] * (
+            qv - zps.astype(jnp.float32)[..., None]
+        )
+    if rotate_weights:
+        vals = blocked_fwht(vals, block=block)
+    w = vals.reshape(n, kb * block).T  # (K_pad, N)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)

@@ -1,0 +1,199 @@
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, SPMD-partitions, and compiles on the production topology — and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST precede any jax-importing code: jax locks the
+device count at first backend init, and only this entry point should see
+512 placeholder devices (tests/benches see the real host).
+
+Per cell we record into a JSON report (EXPERIMENTS.md §Dry-run reads it):
+  * compile wall time, per-device HLO memory analysis (when the backend
+    provides it) + analytic params/cache bytes per device,
+  * cost_analysis() FLOPs and our while-aware HLO reparse (flops,
+    collective bytes by kind — scan bodies multiplied by trip count),
+  * the §Roofline three terms against TPU v5e constants.
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out reports/dryrun
+"""
+from __future__ import annotations
+
+# The dry-run (and ONLY the dry-run) sees 512 placeholder devices; this must
+# run before ANY other import — jax locks the device count on first init.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+# v5e-class hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (assume 1 usable link/collective)
+
+
+def _analytic_param_bytes(sds_tree, spec_tree, mesh) -> float:
+    """Per-device bytes for a spec'd pytree (sum leaf_bytes / shard_count)."""
+    from jax.sharding import PartitionSpec as P
+
+    leaves = jax.tree_util.tree_leaves(sds_tree)
+    specs = jax.tree_util.tree_leaves(spec_tree,
+                                      is_leaf=lambda x: isinstance(x, P))
+    total = 0.0
+    for leaf, spec in zip(leaves, specs):
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        nbytes = n * leaf.dtype.itemsize
+        denom = 1
+        if isinstance(spec, P):
+            for ax in spec:
+                if ax is None:
+                    continue
+            for ax in spec:
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    if a is not None:
+                        denom *= mesh.shape[a]
+        total += nbytes / denom
+    return total
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             quant_mode: str = "activations", quant_rule: str = "paper",
+             quant_fmt: str = "itq3_s", skip_analysis: bool = False) -> dict:
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.models.lm import model_flops
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = int(np.prod(list(mesh.shape.values())))
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.shape.values()),
+        "chips": nchips, "quant_mode": quant_mode, "status": "started",
+    }
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, quant_mode=quant_mode,
+                      quant_rule=quant_rule, quant_fmt=quant_fmt)
+    lowered = cell.lower()
+    rec["lower_s"] = round(time.time() - t0, 1)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    rec["status"] = "compiled"
+
+    # --- memory ---
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: getattr(ma, k) for k in dir(ma)
+            if not k.startswith("_") and isinstance(getattr(ma, k), (int, float))
+        }
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis"] = f"unavailable: {type(e).__name__}"
+    rec["param_bytes_per_device"] = _analytic_param_bytes(
+        cell.args_sds[0], cell.in_shardings[0] and jax.tree.map(
+            lambda s: s.spec, cell.in_shardings[0],
+            is_leaf=lambda x: hasattr(x, "spec")), mesh)
+
+    # --- cost analysis (XLA) ---
+    try:
+        ca = compiled.cost_analysis()
+        if ca:
+            rec["xla_flops"] = float(ca.get("flops", 0.0))
+            rec["xla_bytes"] = float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+
+    # --- while-aware HLO reparse ---
+    if not skip_analysis:
+        t2 = time.time()
+        stats = analyze_hlo(compiled.as_text())
+        rec["analysis_s"] = round(time.time() - t2, 1)
+        rec["hlo_flops"] = stats.flops
+        rec["hlo_bytes"] = stats.bytes_accessed
+        rec["collective_bytes"] = stats.collective_bytes
+        rec["collective_counts"] = stats.collective_counts
+        rec["dynamic_whiles"] = stats.dynamic_whiles
+
+        # --- roofline terms (per device, seconds) ---
+        flops_dev = stats.flops  # HLO is already per-partition under SPMD
+        bytes_dev = stats.bytes_accessed
+        coll_dev = stats.total_collective_bytes
+        rec["roofline"] = {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll_dev / ICI_BW,
+        }
+        dom = max(rec["roofline"], key=rec["roofline"].get)
+        rec["bottleneck"] = dom
+        mf = model_flops(cell.cfg, cell.shape.seq_len, cell.shape.global_batch,
+                         decode=cell.shape.is_decode)
+        if cell.shape.kind == "train":
+            mf *= 3.0  # fwd + bwd
+        rec["model_flops_global"] = mf
+        rec["model_flops_per_device"] = mf / nchips
+        rec["useful_flops_frac"] = (mf / nchips) / max(stats.flops, 1.0)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--quant-mode", default="activations",
+                    choices=["activations", "weights", "dequant", "auto"])
+    ap.add_argument("--quant-rule", default="paper")
+    ap.add_argument("--quant-fmt", default="itq3_s")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--skip-analysis", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import runnable_cells
+
+    if args.all:
+        cells = runnable_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}_{shape}_{'multi' if multi else 'single'}_{args.quant_mode}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (exists)")
+                continue
+            print(f"[run ] {tag}", flush=True)
+            try:
+                rec = run_cell(arch, shape, multi, quant_mode=args.quant_mode,
+                               quant_rule=args.quant_rule,
+                               quant_fmt=args.quant_fmt,
+                               skip_analysis=args.skip_analysis)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if multi else "single",
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2, default=float)
+            print(f"       -> {rec['status']}"
+                  + (f" compile={rec.get('compile_s')}s"
+                     f" bottleneck={rec.get('bottleneck')}" if rec["status"] == "ok" else
+                     f" {rec.get('error', '')[:200]}"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Step builders + input specs for every (arch x shape) cell.
+
+``build_cell(arch, shape, mesh)`` returns everything the dry-run, trainer
+and server need: the jittable step function, ShapeDtypeStruct stand-ins for
+its inputs (weak-type-correct, no allocation), and in/out shardings —
+one coherent definition reused by launch/dryrun.py, launch/train.py and
+launch/serve.py.
+
+Cell kinds:
+  train   -> train_step(TrainState, batch)            [bf16 fwd, f32 optim]
+  prefill -> serve_prefill(qparams, tokens[, frames]) -> logits
+  decode  -> serve_decode(qparams, tokens, cache, pos) -> (logits, cache)
+
+Serving cells consume ITQ3_S-quantized parameter trees (the paper's
+deployment path); training cells consume full-precision params. Both are
+built abstractly via jax.eval_shape so a 235B config costs nothing to
+stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_config, SHAPES
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.serve.quantized import quantize_params
+from repro.sharding import rules as rules_mod
+from repro.train import loop as train_loop
+
+__all__ = ["Cell", "build_cell", "input_specs"]
+
+
+def input_specs(arch: str, shape_name: str) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of the (arch, shape) cell
+    — weak-type-correct, shardable, no device allocation (the dry-run
+    contract). For training that's (TrainState, {tokens, labels[,
+    frontend]}); for prefill (qparams, batch); for decode (qparams, tokens,
+    cache, pos)."""
+    import jax as _jax
+
+    mesh = _jax.sharding.Mesh(
+        np.asarray(_jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    return build_cell(arch, shape_name, mesh).args_sds
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    mesh: Mesh
+    rules: Any
+    step_fn: Any  # jittable
+    args_sds: tuple  # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        with self.mesh:
+            return jitted.lower(*self.args_sds)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _runtime(cfg, rules, mesh, *, quant_mode="activations") -> Runtime:
+    return Runtime(compute_dtype=jnp.bfloat16, quant_mode=quant_mode,
+                   use_kernel=False, attn_chunk=256, rules=rules, mesh=mesh)
+
+
+def _batch_sds(cfg, shape: ShapeConfig, *, with_labels: bool):
+    gb, t = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((gb, t), jnp.int32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((gb, t), jnp.int32)
+    if cfg.frontend:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (gb, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+    return out
+
+
+def _batch_axis_for(n_rows: int, rules, mesh):
+    """Largest prefix of the (pod, data) batch axes that divides n_rows —
+    long_500k has global_batch=1 (a single 500k-token stream), which simply
+    cannot data-shard; it falls back to replicated-batch + model-parallel."""
+    b = rules.assignments["batch"]
+    if b is None:
+        return None
+    axes = b if isinstance(b, tuple) else (b,)
+    keep = []
+    size = 1
+    for a in axes:
+        if n_rows % (size * mesh.shape[a]) == 0:
+            keep.append(a)
+            size *= mesh.shape[a]
+    if not keep:
+        return None
+    return tuple(keep) if len(keep) > 1 else keep[0]
+
+
+def _batch_specs(batch_sds, rules, mesh):
+    def spec(leaf):
+        b = _batch_axis_for(leaf.shape[0], rules, mesh)
+        return P(*([b] + [None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, batch_sds)
+
+
+def _cache_pspec(leaf, rules, mesh) -> P:
+    """(L, B, ...) cache leaves: batch on dim 1; model on the first trailing
+    dim it divides (kv heads or sequence per the adaptive rule)."""
+    msize = rules.mesh.shape.get("model", 1)
+    kv_ax = rules.assignments.get("kv_heads")
+    seq_ax = rules.assignments.get("kv_seq")
+    dims = list(leaf.shape)
+    spec = [None, _batch_axis_for(dims[1], rules, mesh)] + [None] * (len(dims) - 2)
+    if len(dims) >= 5:  # (L, B, KV, T, HD) attention cache
+        if kv_ax and dims[2] % msize == 0:
+            spec[2] = kv_ax
+        elif seq_ax and dims[3] % msize == 0:
+            spec[3] = seq_ax
+    elif len(dims) >= 3 and msize > 1:
+        for i in range(2, len(dims)):
+            if dims[i] % msize == 0 and dims[i] >= msize:
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               quant_fmt: str = "itq3_s", quant_rule: str = "paper",
+               quant_mode: str = "activations",
+               num_micro: int = 1) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules_mod.make_rules(mesh, cfg)
+    rt = _runtime(cfg, rules, mesh, quant_mode=quant_mode)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(
+            functools.partial(train_loop.init_train_state, cfg=cfg), key)
+        pspecs = rules_mod.param_pspecs(state_sds.params, cfg, rules)
+        # optimizer moments share the param specs (ZeRO-sharded by construction)
+        from repro.train.optim import OptState
+        state_specs = train_loop.TrainState(
+            params=pspecs, opt=OptState(mu=pspecs, nu=pspecs, step=P()),
+            step=P())
+        batch_sds = _batch_sds(cfg, shape, with_labels=True)
+        batch_specs = _batch_specs(batch_sds, rules, mesh)
+        step_fn = train_loop.make_train_step(cfg, rt, num_micro=num_micro)
+        in_sh = (_named(mesh, state_specs), _named(mesh, batch_specs))
+        out_sh = (_named(mesh, state_specs), None)
+        return Cell(arch, shape, cfg, mesh, rules, step_fn,
+                    (state_sds, batch_sds), in_sh, out_sh,
+                    donate_argnums=(0,))
+
+    # ---- serving cells: quantized params ----
+    params_sds = jax.eval_shape(functools.partial(lm.init_params, cfg=cfg), key)
+    qparams_sds = jax.eval_shape(
+        functools.partial(quantize_params, fmt=quant_fmt, rule=quant_rule),
+        params_sds)
+    qspecs = rules_mod.param_pspecs(qparams_sds, cfg, rules)
+
+    if shape.kind == "prefill":
+        batch_sds = _batch_sds(cfg, shape, with_labels=False)
+        batch_specs = _batch_specs(batch_sds, rules, mesh)
+
+        def prefill_step(params, batch):
+            # serving prefill: head over the last position only (the full
+            # (B, 32k, V) logits tensor is never wanted in deployment)
+            logits, _, _ = lm.forward(params, batch["tokens"], rt, cfg,
+                                      frontend_feats=batch.get("frontend"),
+                                      last_only=True)
+            return logits
+
+        in_sh = (_named(mesh, qspecs), _named(mesh, batch_specs))
+        return Cell(arch, shape, cfg, mesh, rules, prefill_step,
+                    (qparams_sds, batch_sds), in_sh, None)
+
+    # ---- decode ----
+    gb = shape.global_batch
+    cache_sds = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, gb, shape.seq_len,
+                          dtype=jnp.bfloat16))
+    cache_specs = jax.tree.map(lambda l: _cache_pspec(l, rules, mesh), cache_sds)
+    tok_sds = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((gb,), jnp.int32)
+
+    def decode_fn(params, tokens, cache, pos):
+        return lm.decode_step(params, tokens, cache, pos, rt, cfg)
+
+    b = _batch_axis_for(gb, rules, mesh)
+    in_sh = (_named(mesh, qspecs), NamedSharding(mesh, P(b, None)),
+             _named(mesh, cache_specs), NamedSharding(mesh, P(b)))
+    out_sh = (None, _named(mesh, cache_specs))
+    return Cell(arch, shape, cfg, mesh, rules, decode_fn,
+                (qparams_sds, tok_sds, cache_sds, pos_sds), in_sh, out_sh,
+                donate_argnums=(2,))

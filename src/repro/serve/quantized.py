@@ -1,0 +1,68 @@
+"""Whole-model quantization pass: params pytree -> pytree with QTensor
+matmul leaves (the offline half of ITQ3_S deployment, paper Algorithm 1
+applied model-wide).
+
+Which leaves quantize: 2-D+ matmul weights (attention/MLP/MoE projections,
+LM head, frontend proj). Which stay fp: norms, biases, decay vectors, conv
+kernels, router (quality-critical, ~0.01% of params), and by default the
+embedding table (gather, not matmul; knob to include it for tied-embedding
+models). Stacked leaves (layers, experts) are quantized with nested vmap so
+block statistics are computed per-matrix exactly as the paper specifies.
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+from repro.core.quantize import QTensor
+
+__all__ = ["quantize_params", "quantized_bytes", "QUANTIZABLE"]
+
+QUANTIZABLE = re.compile(
+    r"(wq|wk|wv|wo|wg|wr|wz|wx|gate|up|down|lm_head|out_proj|cm_k|cm_v|frontend_proj)$")
+MIN_REDUCTION = 64  # don't quantize degenerate tiny projections
+
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", getattr(path[-1], "name", path[-1])))
+
+
+def quantize_params(params, fmt: str = "itq3_s", *, rule: str = "paper",
+                    include_embed: bool = False, seed: int = 0):
+    """Map over the param tree quantizing matmul leaves into ``fmt``."""
+
+    def q2d(w):
+        return formats.quantize(w, fmt, rule=rule, seed=seed)
+
+    def visit(path, leaf):
+        name = _leaf_name(path)
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        if name == "embed" and include_embed:
+            # table is gathered, not matmul'd: quantize as (V, D) blocks
+            return formats.quantize(leaf.T, fmt, rule=rule, seed=seed)
+        if not QUANTIZABLE.search(name):
+            return leaf
+        if leaf.ndim < 2 or leaf.shape[-2] < MIN_REDUCTION:
+            return leaf
+        fn = q2d
+        for _ in range(leaf.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(leaf)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def quantized_bytes(params) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes()
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

@@ -1,0 +1,233 @@
+"""Logical-axis sharding rules: DP / TP / EP / SP / FSDP over the
+(pod, data, model) production mesh.
+
+Strategy (1000-node posture, DESIGN.md §5):
+
+  * ``pod``   — pure data parallelism. Only gradient/weight-reduction
+    collectives cross pods (DCN-tolerant); TP/EP stay intra-pod.
+  * ``data``  — data parallelism + FSDP/ZeRO weight sharding (params are
+    stored sharded over `data` and all-gathered at use; optimizer states
+    stay sharded — ZeRO-1/3 hybrid).
+  * ``model`` — tensor parallelism (heads / ffn / vocab / experts) chosen
+    *adaptively per architecture*: a logical dim is model-sharded only when
+    divisible by the mesh axis; GQA KV heads that don't divide fall back to
+    sequence-sharded KV (flash-decode style — softmax reductions over the
+    sharded length are handled by the SPMD partitioner).
+
+``Rules`` resolves logical names to mesh axes once per (config, mesh);
+``constrain`` applies with_sharding_constraint, silently dropping axes that
+don't divide (so the same model code runs on 1-device CPU and 512-way pods).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "make_rules", "param_pspecs", "batch_pspec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    assignments: dict  # logical name -> mesh axis | tuple | None
+
+    def axis_for(self, name: Optional[str]):
+        if name is None:
+            return None
+        return self.assignments.get(name)
+
+    def spec(self, names: tuple) -> P:
+        return P(*[self.axis_for(n) for n in names])
+
+    def constrain(self, x: jax.Array, names: tuple, mesh=None) -> jax.Array:
+        mesh = mesh or self.mesh
+        axes = []
+        used: set = set()
+        for dim, n in enumerate(names):
+            ax = self.axis_for(n)
+            if ax is None:
+                axes.append(None)
+                continue
+            ax_tuple = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in ax_tuple):
+                axes.append(None)  # a mesh axis can shard only one dim
+                continue
+            size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+            if dim < x.ndim and x.shape[dim] % size == 0 and x.shape[dim] > 0:
+                axes.append(ax)
+                used.update(ax_tuple)
+            else:
+                axes.append(None)
+        while len(axes) < x.ndim:
+            axes.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*axes[: x.ndim])))
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def make_rules(mesh: Mesh, cfg, *, fsdp: bool = True) -> Rules:
+    """Resolve logical axes for one (arch, mesh)."""
+    axes = dict(mesh.shape)
+    model = "model" if "model" in axes else None
+    msize = axes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes) or None
+    if batch_axes and len(batch_axes) == 1:
+        batch_axes = batch_axes[0]
+
+    kv_ok = _div(cfg.num_kv_heads, msize)
+    assignments = {
+        "batch": batch_axes,
+        "seq": None,  # SP applied selectively via "seq_sp"
+        "seq_sp": model,
+        "ffn": model if _div(cfg.d_ff, msize) else None,
+        "heads": model if _div(cfg.num_heads * cfg.resolved_head_dim, msize) else None,
+        "kv_heads": model if kv_ok else None,
+        # flash-decode fallback: shard the KV length when heads can't shard
+        "kv_seq": None if kv_ok else model,
+        "experts": model if _div(cfg.num_experts, msize) else None,
+        "vocab": model if _div(cfg.vocab_size, msize) else None,
+        "embed": model if _div(cfg.d_model, msize) else None,
+        "fsdp": "data" if (fsdp and "data" in axes) else None,
+    }
+    return Rules(mesh=mesh, assignments=assignments)
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (walk the param tree by path)
+# ---------------------------------------------------------------------------
+
+_COL = re.compile(r"(wq|wk|wv|wg|wr|gate|up|wz|wx|lm_head|frontend_proj|w_lora_a)$")
+_ROW = re.compile(r"(wo|down|out_proj|cm_v|w_lora_b)$")
+_REPL = re.compile(r"(scale|bias|mu|cm_mu|A_log|dt_bias|conv_\w+|router|w_base|u|D)$")
+
+
+def _leaf_spec(path: str, shape: tuple, rules: Rules, msize: int, dsize: int,
+               stacked: int) -> P:
+    """Spec for one parameter leaf. ``stacked`` = number of leading stacked
+    layer dims (never sharded)."""
+    lead = [None] * stacked
+    dims = shape[stacked:]
+    model = rules.assignments.get("heads") and "model"  # mesh has model axis?
+    model = "model" if rules.mesh.shape.get("model", 1) > 1 else None
+    fsdp = rules.assignments.get("fsdp")
+
+    def div(d, k):
+        return k > 1 and d % k == 0
+
+    name = path.split("/")[-1]
+    if len(dims) == 0:
+        return P(*lead) if lead else P()
+
+    if _REPL.search(name) and "embed" not in path:
+        return P(*(lead + [None] * len(dims)))
+
+    if name == "embed":  # (V, D): fsdp on vocab rows, TP on embed dim
+        spec = [fsdp if div(dims[0], dsize) else None,
+                model if div(dims[1], msize) else None]
+        return P(*(lead + spec))
+
+    if "moe" in path and name in ("gate", "up", "down"):
+        # (E, K, N): experts over model (EP); fsdp the K dim
+        e, k, n = dims
+        return P(*(lead + [model if div(e, msize) else None,
+                           fsdp if div(k, dsize) else None, None]))
+
+    if _COL.search(name) and len(dims) == 2:
+        k, n = dims
+        return P(*(lead + [fsdp if div(k, dsize) else None,
+                           model if div(n, msize) else None]))
+    if _ROW.search(name) and len(dims) == 2:
+        k, n = dims
+        return P(*(lead + [model if div(k, msize) else None,
+                           fsdp if div(n, dsize) else None]))
+    # default: fsdp the largest divisible dim
+    spec = [None] * len(dims)
+    order = sorted(range(len(dims)), key=lambda i: -dims[i])
+    for i in order:
+        if div(dims[i], dsize):
+            spec[i] = fsdp
+            break
+    return P(*(lead + spec))
+
+
+def _stack_depth(path_parts: tuple) -> int:
+    """Leading stacked dims: 1 for layer stacks, 2 for hybrid macroblocks."""
+    parts = [getattr(p, "key", getattr(p, "name", str(p))) for p in path_parts]
+    if "mamba_blocks" in parts:
+        return 2
+    for tag in ("layers", "encoder", "mamba_tail"):
+        if tag in parts:
+            return 1
+    return 0
+
+
+_QDATA = {"plane2", "plane1", "scales", "zps", "q", "w", "dsign"}
+
+
+def _qtensor_leaf_spec(path: str, name: str, shape: tuple, rules: Rules,
+                       msize: int, stacked: int) -> P:
+    """Specs for packed QTensor data leaves (serving).
+
+    plane2/plane1 are (..., N, KB, bytes); scales/zps (..., N, KB[, sub]).
+    The output-feature dim N is the TP dim (matches the matmul's
+    model-sharded output); the packed reduction stream is replicated —
+    3.125 bpw makes that cheap, and it keeps decode free of weight
+    all-gathers. MoE expert stacks shard the expert dim instead (EP)."""
+    if name == "dsign":
+        return P(*([None] * len(shape)))
+    lead = [None] * stacked
+    dims = list(shape[stacked:])
+    model = "model" if msize > 1 else None
+    spec = [None] * len(dims)
+    if "moe" in path and stacked >= 1:
+        # expert dim sits right after the layer stack: (L, E, ...)
+        lead2 = [None] * (stacked - 1)
+        edim = shape[stacked - 1] if stacked >= 1 else 0
+        # re-derive: leaf = (L, E, N, ...); stacked counted only the L dim
+        if len(dims) >= 1 and model and shape[stacked] % msize == 0:
+            spec[0] = model  # E over model (EP)
+        return P(*(lead + spec))
+    if model and len(dims) >= 1 and dims[0] % msize == 0:
+        spec[0] = model  # N over model
+    return P(*(lead + spec))
+
+
+_RWKV_TMIX = {"wr", "wk", "wv", "wg", "wo"}
+
+
+def param_pspecs(params, cfg, rules: Rules):
+    """PartitionSpec pytree matching ``params`` (arrays or QTensor leaves)."""
+    msize = rules.mesh.shape.get("model", 1)
+    dsize = rules.mesh.shape.get("data", 1)
+
+    def spec_of(path_parts, leaf):
+        parts = [getattr(p, "key", getattr(p, "name", str(p))) for p in path_parts]
+        path = "/".join(str(p) for p in parts)
+        stacked = _stack_depth(path_parts)
+        if not hasattr(leaf, "shape"):
+            return P()
+        name = parts[-1]
+        if "data" in parts and name in _QDATA:
+            return _qtensor_leaf_spec(path, name, tuple(leaf.shape), rules,
+                                      msize, stacked)
+        # NB (perf log C3, refuted): replicating the RWKV time-mix
+        # projections (to avoid the SPMD involuntary-remat reshard at the
+        # (B,T,2560)->(B,T,40,64) head split) costs 16x per-device matmul +
+        # elementwise work — strictly worse. The real fix is padding
+        # 40 heads -> 48 so heads tile the model axis (future work); until
+        # then TP + reshard wins.
+        return _leaf_spec(path, tuple(leaf.shape), rules, msize, dsize, stacked)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def batch_pspec(rules: Rules) -> P:
+    return P(rules.assignments["batch"])

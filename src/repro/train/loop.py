@@ -1,0 +1,96 @@
+"""Training step: loss, remat, microbatching, optimizer — pjit-ready.
+
+``make_train_step(cfg, rules, ...)`` returns a pure function
+``train_step(state, batch) -> (state, metrics)`` suitable for
+``jax.jit(..., in_shardings=..., out_shardings=...)`` on any mesh. The
+layer stack is rematerialized (configurable policy) and the vocab-sharded
+cross-entropy uses a stable logsumexp whose reductions the SPMD partitioner
+turns into model-axis collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.train import optim
+from repro.train.grad import accumulate_grads
+
+__all__ = ["TrainState", "make_train_step", "init_train_state", "softmax_xent"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: optim.OptState
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(TrainState, data_fields=["params", "opt", "step"],
+                                 meta_fields=[])
+
+
+def init_train_state(key, cfg) -> TrainState:
+    params = lm.init_params(key, cfg)
+    return TrainState(params=params, opt=optim.adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits may be vocab-sharded (logsumexp
+    reductions become model-axis all-reduces under SPMD)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_train_step(
+    cfg,
+    rt: Runtime,
+    *,
+    lr_peak: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    num_micro: int = 1,
+    aux_weight: float = 0.01,
+    remat: bool = True,
+    remat_policy: Optional[str] = "dots",
+):
+    """Build the jittable train step for one architecture."""
+
+    # remat is applied PER LAYER inside the scan bodies (lm._maybe_remat):
+    # backward re-runs each layer, so 32k-context attention internals are
+    # never all live — the flash-attention memory discipline.
+    rt = dataclasses.replace(rt, remat=remat,
+                             remat_policy=remat_policy or "none")
+
+    def loss_fn(params, batch):
+        loss, aux = lm.forward_xent(params, batch["tokens"], batch["labels"],
+                                    rt, cfg,
+                                    frontend_feats=batch.get("frontend"))
+        return loss + aux_weight * aux, aux
+
+    def train_step(state: TrainState, batch):
+        lr = optim.cosine_lr(state.step, peak=lr_peak, warmup=warmup,
+                             total=total_steps)
+        if num_micro > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape(num_micro, x.shape[0] // num_micro, *x.shape[1:]),
+                batch)
+            loss, grads, aux = accumulate_grads(loss_fn, state.params, mb,
+                                                num_micro=num_micro)
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+        new_params, new_opt, gnorm = optim.adamw_update(
+            grads, state.opt, state.params, lr)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr, "moe_aux": aux}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,48 @@
+"""Fault-tolerance logic: heartbeats, stragglers, failure, elastic plans."""
+from repro.ft.monitor import HeartbeatMonitor, plan_remesh
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+    def __call__(self):
+        return self.t
+
+
+def test_straggler_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(4, timeout_s=60, straggler_factor=2.0, clock=clk)
+    for step in range(1, 6):
+        for h in range(4):
+            clk.t = step * 10 + (25 if h == 3 else 0) * step / step
+            mon.beat(h, step, now=step * 10 + (step * 25 if h == 3 else 0))
+    assert mon.stragglers() == [3]
+
+
+def test_failure_detection_and_exclusion():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(3, timeout_s=30, clock=clk)
+    clk.t = 10
+    for h in (0, 1):
+        mon.beat(h, 1)
+    clk.t = 35  # host 2 silent since t=0 (>30s); hosts 0/1 fresh (25s)
+    assert mon.failed() == [2]
+    mon.exclude([2])
+    assert mon.failed() == []
+    assert mon.alive() == [0, 1]
+
+
+def test_plan_remesh_preserves_tp():
+    plan = plan_remesh(240, model=16)
+    assert plan.model == 16 and plan.data == 15 and plan.devices == 240
+
+
+def test_plan_remesh_multi_pod_shrink():
+    plan = plan_remesh(srv := 512 - 256, model=16, prefer_pods=2)
+    # one whole pod lost -> single pod plan
+    assert plan.pod * plan.data * plan.model <= srv
+    assert plan.model == 16
+
+
+def test_plan_remesh_infeasible():
+    assert plan_remesh(8, model=16) is None

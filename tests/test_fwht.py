@@ -1,0 +1,66 @@
+"""FWHT invariants: involution, isometry, equivalence of butterfly and
+matmul forms (Theorem 2's epsilon_FWHT is what bounds the tolerances)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fwht as F
+
+
+@pytest.mark.parametrize("n", [2, 8, 32, 256])
+def test_involution(rng, n):
+    x = jnp.asarray(rng.normal(size=(4, n)), jnp.float32)
+    assert np.allclose(F.fwht(F.fwht(x)), x, atol=1e-4)
+
+
+def test_isometry(rng):
+    x = jnp.asarray(rng.normal(size=(8, 256)), jnp.float32)
+    y = F.fwht(x)
+    assert np.allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                       np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_matches_matmul_form(rng):
+    x = jnp.asarray(rng.normal(size=(5, 256)), jnp.float32)
+    h = F.hadamard_matrix(256)
+    assert np.allclose(F.fwht(x), x @ h, atol=1e-4)
+
+
+def test_hadamard_symmetric_involutory():
+    h = np.asarray(F.hadamard_matrix(64, dtype=jnp.float64))
+    assert np.allclose(h, h.T)
+    assert np.allclose(h @ h, np.eye(64), atol=1e-12)
+
+
+def test_blocked_independent_blocks(rng):
+    x = jnp.asarray(rng.normal(size=(3, 512)), jnp.float32)
+    y = F.blocked_fwht(x, 256)
+    y0 = F.fwht(x[:, :256])
+    assert np.allclose(y[:, :256], y0, atol=1e-5)
+
+
+def test_outlier_energy_spreading(rng):
+    """Corollary 1: a single outlier M contributes M/sqrt(n) per coefficient."""
+    x = np.zeros((1, 256), np.float32)
+    x[0, 17] = 160.0
+    y = np.asarray(F.fwht(jnp.asarray(x)))
+    assert np.allclose(np.abs(y), 10.0, atol=1e-4)  # 160/sqrt(256)
+
+
+def test_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        F.fwht(jnp.zeros((2, 100)))
+    with pytest.raises(ValueError):
+        F.blocked_fwht(jnp.zeros((2, 100)), 256)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([16, 64, 256]))
+def test_property_involution_isometry(seed, n):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(2, n)) * r.uniform(0.1, 100), jnp.float32)
+    y = F.fwht(x)
+    assert np.allclose(F.fwht(y), x, atol=1e-3 * float(jnp.max(jnp.abs(x)) + 1))
+    assert np.allclose(np.sum(np.square(np.asarray(y))),
+                       np.sum(np.square(np.asarray(x))), rtol=1e-4)

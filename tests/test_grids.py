@@ -1,0 +1,50 @@
+"""Optimal-scale theory (paper §3.3 / App. A) and its documented
+discrepancy: the Eq.-10 encoder's true optimum is Lloyd-Max 1.224σ, not
+the paper's 0.798σ."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import grids
+
+
+def test_alpha_constants():
+    assert abs(grids.ALPHA_PAPER - 0.7979) < 1e-4
+    assert abs(grids.ALPHA_ERFINV - 0.9674) < 1e-3
+    assert abs(grids.ALPHA_LLOYD - 1.2240) < 1e-2
+
+
+def test_mse_oracle_limits():
+    # alpha -> 0 and alpha -> inf both give MSE -> sigma^2
+    assert abs(grids.ternary_mse(1e-6) - 1.0) < 1e-3
+    assert abs(grids.ternary_mse(50.0) - 1.0) < 1e-3
+
+
+def test_lloyd_is_stationary_minimum():
+    a = grids.ALPHA_LLOYD
+    for d in (-0.05, 0.05):
+        assert grids.ternary_mse(a + d) > grids.ternary_mse(a)
+
+
+def test_rule_ordering():
+    mses = {r: grids.ternary_mse(c) for r, c in grids.SCALE_RULES.items()}
+    assert mses["lloyd"] < mses["erfinv"] < mses["paper"]
+
+
+def test_empirical_mse_matches_oracle(rng):
+    x = rng.normal(size=500_000).astype(np.float32)
+    for alpha in (0.8, 1.0, 1.224):
+        q = np.clip(np.round(x / alpha), -1, 1) * alpha
+        emp = np.mean((x - q) ** 2)
+        assert abs(emp - grids.ternary_mse(alpha)) < 5e-3, alpha
+
+
+def test_fivelevel_beats_ternary():
+    assert grids.fivelevel_mse(grids.FIVELEVEL_ALPHA) < grids.ternary_mse(grids.ALPHA_LLOYD)
+
+
+def test_code_functions(rng):
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    c3 = grids.ternary_quantize_codes(x, jnp.float32(0.8))
+    assert set(np.unique(np.asarray(c3))).issubset({0, 1, 2})
+    c5 = grids.fivelevel_quantize_codes(x, jnp.float32(0.8))
+    assert set(np.unique(np.asarray(c5))).issubset({0, 1, 2, 3, 4})

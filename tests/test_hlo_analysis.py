@@ -1,0 +1,70 @@
+"""The roofline analyzer itself: dot flops, while multipliers, collective
+bytes, aliasing-aware slice accounting — against a hand-built HLO fixture."""
+from repro.launch.hlo_analysis import analyze_hlo, _op_bytes
+
+FIXTURE = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r = f32[8,16]{1,0} all-reduce(%y), to_apply=%sum
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i, %r)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %arg)
+  %loop = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_while_multiplied_dot_flops():
+    st = analyze_hlo(FIXTURE)
+    # dot: 2 * (8*16) * 16 = 4096 flops, x10 trips
+    assert st.flops == 4096 * 10, st.flops
+    assert st.dot_count == 10
+
+
+def test_collective_bytes_multiplied():
+    st = analyze_hlo(FIXTURE)
+    # all-reduce operand: 8*16*4 = 512 B, x10
+    assert st.collective_bytes["all-reduce"] == 512 * 10
+    assert st.collective_counts["all-reduce"] == 10
+
+
+def test_op_bytes_aliasing_model():
+    # DUS charges 2x the update (2nd operand), not the buffer
+    assert _op_bytes("dynamic-update-slice", [1000.0, 10.0], 1000.0) == 20.0
+    # dynamic-slice charges 2x the result
+    assert _op_bytes("dynamic-slice", [1000.0], 10.0) == 20.0
+    # scatter: 2x updates + indices
+    assert _op_bytes("scatter", [1000.0, 4.0, 10.0], 1000.0) == 24.0
+    # plain op: operands + result
+    assert _op_bytes("add", [8.0, 8.0], 8.0) == 24.0
+
+
+def test_dynamic_while_counted():
+    txt = FIXTURE.replace("constant(10)", "parameter(0)").replace(
+        "%n = s32[] parameter(0)", "%n = s32[] get-tuple-element(%p), index=0")
+    st = analyze_hlo(txt)
+    assert st.dynamic_whiles >= 0  # falls back to 1 trip without constants

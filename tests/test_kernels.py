@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.kernels import ops, ref
+from repro.kernels.fwht_kernel import fwht_pallas
+from repro.kernels.itq3_matmul import itq3_matmul_pallas
+
+
+@pytest.mark.parametrize("m,k,dtype", [
+    (8, 256, jnp.float32), (32, 512, jnp.float32), (7, 256, jnp.float32),
+    (16, 1024, jnp.bfloat16), (256, 256, jnp.float32),
+])
+def test_fwht_kernel_sweep(rng, m, k, dtype):
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    got = fwht_pallas(x, interpret=True)
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("fmt", ["itq3_s", "iq3_s", "itq3_s_sub", "itq3_x", "quip3"])
+@pytest.mark.parametrize("mode", ["weights", "activations"])
+def test_itq3_kernel_formats(rng, fmt, mode):
+    w = jnp.asarray(rng.standard_t(df=4, size=(512, 320)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(6, 512)), jnp.float32)
+    qt = formats.quantize(w, fmt)
+    want = ref.itq3_matmul_ref(
+        x, qt.data["plane2"], qt.data["plane1"], qt.data["scales"], qt.data["zps"],
+        rotate_weights=(qt.meta.rotate and mode == "weights"),
+        fivelevel=qt.meta.fivelevel, sub_blocks=qt.meta.sub_blocks,
+    ) if False else None
+    y0 = np.asarray(jnp.matmul(x, formats.dequantize(qt, jnp.float32)))
+    yk = np.asarray(ops.qmatmul_kernel(x, qt, mode=mode, tm=8, tn=128,
+                                       interpret=True))
+    np.testing.assert_allclose(yk, y0, atol=2e-3)
+
+
+@pytest.mark.parametrize("m,n,k,tm,tn", [
+    (1, 128, 256, 8, 128),       # decode-like (MMVQ path)
+    (4, 64, 512, 8, 32),         # small tiles
+    (130, 320, 768, 64, 128),    # ragged M/N vs tiles
+    (256, 256, 256, 256, 256),   # single tile
+])
+def test_itq3_kernel_shapes(rng, m, n, k, tm, tn):
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    qt = formats.quantize(w, "itq3_s")
+    y0 = np.asarray(jnp.matmul(x, formats.dequantize(qt, jnp.float32)))
+    yk = np.asarray(ops.qmatmul_kernel(x, qt, mode="weights", tm=tm, tn=tn,
+                                       interpret=True))
+    np.testing.assert_allclose(yk, y0, atol=3e-3)
+
+
+def test_kernel_raw_call_matches_ref(rng):
+    """Direct pallas_call vs ref.py oracle (no wrapper plumbing)."""
+    w = jnp.asarray(rng.normal(size=(512, 128)) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(16, 512)), jnp.float32)
+    qt = formats.quantize(w, "itq3_s")
+    want = np.asarray(ref.itq3_matmul_ref(
+        x, qt.data["plane2"], qt.data["plane1"],
+        qt.data["scales"], qt.data["zps"], rotate_weights=True))
+    got = np.asarray(itq3_matmul_pallas(
+        x, qt.data["plane2"], qt.data["plane1"],
+        qt.data["scales"], qt.data["zps"],
+        rotate_weights=True, tm=8, tn=64, interpret=True))
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+def test_fwht_kernel_involution(rng):
+    x = jnp.asarray(rng.normal(size=(12, 512)), jnp.float32)
+    y = fwht_pallas(fwht_pallas(x, interpret=True), interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+def test_full_model_through_kernels():
+    """Whole smollm forward with every ternary matmul routed through the
+    Pallas fused kernel (interpret mode) == reference path."""
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm
+    from repro.models.layers import Runtime
+    from repro.serve.quantized import quantize_params
+
+    cfg = reduced(get_config("smollm-135m"))
+    key = jax.random.PRNGKey(0)
+    q = quantize_params(lm.init_params(key, cfg), "itq3_s")
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    l0, _, _ = lm.forward(q, toks, Runtime(compute_dtype=jnp.float32), cfg)
+    l1, _, _ = lm.forward(q, toks, Runtime(compute_dtype=jnp.float32,
+                                           use_kernel=True), cfg)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), atol=1e-3)
+
+
+def test_quantize_kernel_matches_algorithm1(rng):
+    """Offline-quantizer kernel == core.quantize Algorithm 1 (codes+scales)."""
+    from repro.core.quantize import quantize_blocks_ternary
+    from repro.core.packing import unpack_codes
+    from repro.kernels.quantize_kernel import quantize_blocks_pallas
+
+    wb = jnp.asarray(rng.standard_t(df=4, size=(40, 256)) * 0.05, jnp.float32)
+    codes_k, d_k, z_k = quantize_blocks_pallas(wb, rule="paper", tm=8)
+    ref = quantize_blocks_ternary(wb, rotate=True, rule="paper")
+    ref_codes = unpack_codes(ref["plane2"], ref["plane1"]) & 0x3
+    np.testing.assert_allclose(np.asarray(d_k, np.float32),
+                               np.asarray(ref["scales"], np.float32), rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(z_k), np.asarray(ref["zps"]))
+    agree = np.mean(np.asarray(codes_k) == np.asarray(ref_codes))
+    assert agree > 0.999, agree  # fp16-grid rounding ties only

@@ -1,0 +1,49 @@
+"""Rotated int8 KV cache (paper §7.2 extension)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_quant
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_roundtrip_error_small():
+    x = jax.random.normal(KEY, (4, 8, 128, 64)) * 2.0
+    q, s = kv_quant.kv_encode(x)
+    xh = kv_quant.kv_decode(q, s)
+    rel = float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x))
+    assert rel < 0.01, rel  # int8 on a rotated (smoothed) vector
+
+
+def test_rotation_helps_outliers():
+    """per-vector outliers: rotated-int8 beats plain-int8."""
+    x = jax.random.normal(KEY, (64, 64))
+    x = x.at[:, 7].mul(30.0)  # channel outlier
+
+    def plain_int8(v):
+        s = jnp.max(jnp.abs(v), -1, keepdims=True) / 127.0
+        return jnp.round(v / s) * s
+
+    plain_err = float(jnp.linalg.norm(plain_int8(x) - x))
+    q, s = kv_quant.kv_encode(x)
+    rot_err = float(jnp.linalg.norm(kv_quant.kv_decode(q, s) - x))
+    assert rot_err < plain_err * 0.6, (rot_err, plain_err)
+
+
+def test_dequantize_free_scores():
+    """q.k == (Hq).(Hk) up to int8 grid error (isometry)."""
+    q = jax.random.normal(KEY, (2, 4, 1, 3, 64))   # (B, KV, G, Tq, HD)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16, 64))  # (B,KV,Tk,HD)
+    want = jnp.einsum("bkgqd,bktd->bkgqt", q, k)
+    from repro.core.fwht import fwht
+    q_rot = fwht(q)
+    codes, scale = kv_quant.kv_encode(k)
+    got = kv_quant.kv_scores(q_rot, codes, scale)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 0.05 * float(jnp.max(jnp.abs(want))), err
+
+
+def test_bytes_ratio():
+    assert abs(kv_quant.cache_bytes_ratio(128) - 0.508) < 0.01
+    assert kv_quant.cache_bytes_ratio(64) < 0.6

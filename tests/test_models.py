@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (reduced configs, CPU): forward shapes,
+no NaNs, decode==full-forward equivalence, family-specific behaviours."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, reduced, runnable_cells
+from repro.models import lm
+from repro.models.layers import Runtime
+
+RT = Runtime(compute_dtype=jnp.float32, capacity_factor=64.0)
+KEY = jax.random.PRNGKey(0)
+
+
+def make(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_params(KEY, cfg)
+    return cfg, params
+
+
+def inputs(cfg, b, t):
+    tokens = jax.random.randint(KEY, (b, t), 0, cfg.vocab_size)
+    ff = None
+    if cfg.frontend:
+        ff = jax.random.normal(KEY, (b, cfg.frontend_len, cfg.frontend_dim),
+                               jnp.float32)
+    return tokens, ff
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg, params = make(arch)
+    tokens, ff = inputs(cfg, 2, 16)
+    logits, _, aux = lm.forward(params, tokens, RT, cfg, frontend_feats=ff)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    if cfg.num_experts:
+        assert float(aux) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    from repro.train import loop as tl
+    cfg = reduced(get_config(arch))
+    rt = Runtime(compute_dtype=jnp.float32, capacity_factor=4.0)
+    step = jax.jit(tl.make_train_step(cfg, rt, warmup=1, total_steps=10))
+    state = tl.init_train_state(KEY, cfg)
+    tokens, ff = inputs(cfg, 2, 16)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if ff is not None:
+        batch["frontend"] = ff
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg, params = make(arch)
+    T = 12
+    tokens, ff = inputs(cfg, 2, T + 1)
+    full, _, _ = lm.forward(params, tokens, RT, cfg, frontend_feats=ff)
+    cache = lm.init_cache(cfg, 2, 24, dtype=jnp.float32)
+    _, cache, _ = lm.forward(params, tokens[:, :T], RT, cfg,
+                             frontend_feats=ff, cache=cache, pos=0)
+    dpos = T + (cfg.frontend_len if (cfg.frontend and cfg.family != "audio") else 0)
+    dec, _ = lm.decode_step(params, tokens[:, T:T + 1], cache,
+                            jnp.int32(dpos), RT, cfg)
+    err = float(jnp.max(jnp.abs(dec[:, 0] - full[:, T])))
+    assert err < 1e-3 * max(float(jnp.max(jnp.abs(full[:, T]))), 1.0), arch
+
+
+def test_ragged_positions_decode():
+    """Per-row cache positions (continuous batching) match row-wise decode."""
+    cfg, params = make("smollm-135m")
+    toks = jax.random.randint(KEY, (2, 9), 0, cfg.vocab_size)
+    # row 0 has 5 ctx tokens, row 1 has 8
+    cache = lm.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    _, cache, _ = lm.forward(params, toks[:, :8], RT, cfg, cache=cache, pos=0)
+    pos = jnp.asarray([5, 8], jnp.int32)
+    dec, _ = lm.decode_step(params, toks[:, 8:9], cache, pos, RT, cfg)
+    # reference: single-row decode
+    for row in range(2):
+        c1 = lm.init_cache(cfg, 1, 16, dtype=jnp.float32)
+        p = int(pos[row])
+        _, c1, _ = lm.forward(params, toks[row:row+1, :p], RT, cfg, cache=c1, pos=0)
+        d1, _ = lm.decode_step(params, toks[row:row+1, 8:9], c1,
+                               jnp.int32(p), RT, cfg)
+        err = float(jnp.max(jnp.abs(d1[0, 0] - dec[row, 0])))
+        assert err < 1e-3 * max(float(jnp.max(jnp.abs(d1))), 1.0), row
+
+
+def test_last_only_prefill():
+    cfg, params = make("qwen1.5-0.5b")
+    tokens, _ = inputs(cfg, 2, 16)
+    full, _, _ = lm.forward(params, tokens, RT, cfg)
+    last, _, _ = lm.forward(params, tokens, RT, cfg, last_only=True)
+    assert last.shape == (2, 1, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(last[:, 0]), np.asarray(full[:, -1]),
+                               atol=1e-4)
+
+
+def test_forward_xent_matches_explicit_loss():
+    from repro.train.loop import softmax_xent
+    cfg, params = make("stablelm-3b")
+    tokens, _ = inputs(cfg, 2, 16)
+    labels = jnp.roll(tokens, -1, axis=1)
+    logits, _, _ = lm.forward(params, tokens, RT, cfg)
+    want = float(softmax_xent(logits, labels))
+    got, _ = lm.forward_xent(params, tokens, labels, RT, cfg, chunk=8)
+    assert abs(float(got) - want) < 1e-3
+
+
+def test_runnable_cells_accounting():
+    cells = runnable_cells()
+    assert len(cells) == 32  # 40 assigned minus 8 documented long_500k skips
+    assert ("rwkv6-3b", "long_500k") in cells
+    assert ("zamba2-7b", "long_500k") in cells
+    assert ("nemotron-4-15b", "long_500k") not in cells
+
+
+def test_model_flops_sane():
+    cfg = get_config("smollm-135m")
+    f = lm.model_flops(cfg, 4096, 256)
+    # ~6ND: N~135M (won't be exact; order check)
+    assert 1e14 < f < 1e16

@@ -1,0 +1,43 @@
+"""Planar 3-bit packing (96 B / 256 weights, the paper's storage budget)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+def test_sizes(rng):
+    codes = jnp.asarray(rng.integers(0, 8, size=(256,)), jnp.uint8)
+    p2, p1 = packing.pack_codes(codes)
+    assert p2.shape == (64,) and p1.shape == (32,)
+    assert p2.nbytes + p1.nbytes == 96  # exactly 3 bits/weight
+
+
+def test_roundtrip_batched(rng):
+    codes = jnp.asarray(rng.integers(0, 8, size=(5, 3, 256)), jnp.uint8)
+    assert np.array_equal(packing.unpack_codes(*packing.pack_codes(codes)), codes)
+
+
+def test_nibble_reference_roundtrip(rng):
+    codes = jnp.asarray(rng.integers(0, 8, size=(4, 256)), jnp.uint8)
+    words = packing.pack_nibbles_reference(codes)
+    assert np.array_equal(packing.unpack_nibbles_reference(words), codes)
+
+
+def test_interleave_layout(rng):
+    """byte i of plane2 holds elements {i, 64+i, 128+i, 192+i} (VREG-lane
+    interleave, DESIGN.md §2)."""
+    codes = np.zeros(256, np.uint8)
+    codes[64 + 7] = 3  # element 71 -> byte 7, bit-pair 1
+    p2, _ = packing.pack_codes(jnp.asarray(codes))
+    assert int(p2[7]) == 3 << 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_property_roundtrip(seed):
+    r = np.random.default_rng(seed)
+    codes = jnp.asarray(r.integers(0, 8, size=(2, 256)), jnp.uint8)
+    assert np.array_equal(packing.unpack_codes(*packing.pack_codes(codes)), codes)
+    w = packing.pack_nibbles_reference(codes)
+    assert np.array_equal(packing.unpack_nibbles_reference(w), codes)

@@ -1,0 +1,126 @@
+"""Format-level properties: Theorem 2 reconstruction bound, rotation
+benefit on heavy-tailed weights, bpw accounting, qlinear mode agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats, grids, qlinear
+from repro.core.quantize import QTensor, to_blocks, from_blocks
+
+TERNARY = ["iq3_s", "quip3", "itq3_s", "itq3_s_sub", "itq3_x"]
+
+
+def heavy_tailed(rng, k=1024, n=64, scale=0.02):
+    return jnp.asarray(rng.standard_t(df=4, size=(k, n)) * scale, jnp.float32)
+
+
+def test_theorem2_bound(rng):
+    """Theorem 2, as stated: |Q_T(x) - x| <= d_k/2 for x *within the
+    representable range* (|x - z d| <= 3d/2); outside it the clamp
+    dominates — which is exactly why the rotation (making blocks Gaussian
+    so the tails are light) is the paper's whole point."""
+    from repro.core.fwht import fwht
+    from repro.core.quantize import quantize_blocks_ternary, dequantize_blocks_ternary
+    w = jnp.asarray(np.random.default_rng(0).standard_t(df=4, size=(64, 256)), jnp.float32)
+    data = quantize_blocks_ternary(w, rotate=True, rule="paper")
+    wh = dequantize_blocks_ternary(data, rotate=True)
+    # rotated-domain elementwise error
+    rot_w = np.asarray(fwht(w))
+    rot_wh = np.asarray(fwht(wh))
+    d = np.asarray(data["scales"], np.float32)[:, None]
+    z = np.asarray(data["zps"], np.float32)[:, None]
+    err = np.abs(rot_w - rot_wh)
+    in_range = np.abs(rot_w - z * d) <= 1.5 * d + 1e-6
+    assert in_range.mean() > 0.75  # rotation Gaussianizes: most in range
+    assert np.all(err[in_range] <= d.repeat(256, 1)[in_range] / 2 + 1e-4)
+
+
+def test_isometry_of_error(rng):
+    """Theorem 2 core: rotated-domain quant error equals weight-domain error."""
+    from repro.core.quantize import quantize_blocks_ternary, dequantize_blocks_ternary
+    from repro.core.fwht import fwht
+    w = jnp.asarray(rng.normal(size=(8, 256)) * 0.1, jnp.float32)
+    data = quantize_blocks_ternary(w, rotate=True)
+    wh = dequantize_blocks_ternary(data, rotate=True)
+    rot_err = np.asarray(fwht(w) - fwht(wh))
+    dom_err = np.asarray(w - wh)
+    assert np.allclose(np.linalg.norm(rot_err, axis=-1),
+                       np.linalg.norm(dom_err, axis=-1), rtol=1e-4)
+
+
+def test_rotation_beats_no_rotation_on_heavy_tails(rng):
+    w = heavy_tailed(rng)
+    errs = {}
+    for f in ["iq3_s", "itq3_s"]:
+        wh = formats.dequantize(formats.quantize(w, f), jnp.float32)
+        errs[f] = float(jnp.mean((wh - w) ** 2))
+    assert errs["itq3_s"] < errs["iq3_s"]
+
+
+def test_quality_ladder(rng):
+    w = heavy_tailed(rng)
+    errs = {}
+    for f in ["q8_0", "q4_0", "itq3_x", "itq3_s_sub", "itq3_s"]:
+        wh = formats.dequantize(formats.quantize(w, f), jnp.float32)
+        errs[f] = float(jnp.mean((wh - w) ** 2))
+    assert errs["q8_0"] < errs["q4_0"] < errs["itq3_x"]
+    assert errs["itq3_s_sub"] <= errs["itq3_s"]
+
+
+def test_lloyd_rule_beats_paper_rule(rng):
+    """The documented scale-rule discrepancy, measurably."""
+    w = jnp.asarray(rng.normal(size=(2048, 32)) * 0.05, jnp.float32)
+    e = {}
+    for rule in ("paper", "lloyd"):
+        wh = formats.dequantize(formats.quantize(w, "itq3_s", rule=rule), jnp.float32)
+        e[rule] = float(jnp.mean((wh - w) ** 2))
+    assert e["lloyd"] < e["paper"] * 0.85
+
+
+def test_bits_per_weight_storage(rng):
+    w = heavy_tailed(rng, 1024, 64)
+    for f, bpw in [("itq3_s", 3.125), ("itq3_s_sub", 3.625), ("q8_0", 8.5),
+                   ("q4_0", 4.5)]:
+        qt = formats.quantize(w, f)
+        actual = qt.nbytes() * 8 / (1024 * 64)
+        assert actual <= bpw + 0.05, (f, actual)
+
+
+def test_padding_path(rng):
+    w = jnp.asarray(rng.normal(size=(576, 48)) * 0.05, jnp.float32)  # smollm dims
+    qt = formats.quantize(w, "itq3_s")
+    wh = formats.dequantize(qt, jnp.float32)
+    assert wh.shape == w.shape
+    rel = float(jnp.linalg.norm(wh - w) / jnp.linalg.norm(w))
+    assert rel < 0.8
+
+
+@pytest.mark.parametrize("fmt", TERNARY + ["q8_0", "q4_0", "bf16"])
+def test_qlinear_modes_agree(rng, fmt):
+    w = heavy_tailed(rng, 512, 96)
+    x = jnp.asarray(rng.normal(size=(3, 512)), jnp.float32)
+    qt = formats.quantize(w, fmt)
+    y0 = qlinear.qmatmul(x, qt, mode="dequant", compute_dtype=jnp.float32)
+    for mode in ("weights", "activations"):
+        y = qlinear.qmatmul(x, qt, mode=mode, compute_dtype=jnp.float32)
+        assert np.allclose(y, y0, atol=2e-3), (fmt, mode)
+
+
+def test_qtensor_pytree(rng):
+    import jax
+    qt = formats.quantize(heavy_tailed(rng, 256, 8), "itq3_s")
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert qt2.meta == qt.meta
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["itq3_s", "itq3_x", "iq3_s"]))
+def test_property_roundtrip_error_bounded(seed, fmt):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(256, 16)) * r.uniform(1e-3, 10), jnp.float32)
+    qt = formats.quantize(w, fmt)
+    wh = formats.dequantize(qt, jnp.float32)
+    rel = float(jnp.linalg.norm(wh - w) / (jnp.linalg.norm(w) + 1e-9))
+    assert rel < 1.0  # quantization never increases energy beyond the signal

@@ -1,0 +1,97 @@
+"""Serving engine + whole-model quantization pass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.quantized import quantize_params, quantized_bytes
+from repro.core.quantize import QTensor
+
+KEY = jax.random.PRNGKey(0)
+RT = Runtime(compute_dtype=jnp.float32, capacity_factor=8.0)
+
+
+def test_continuous_batching_more_requests_than_slots():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=48, rt=RT)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i) % cfg.vocab_size, max_new=5)
+            for i in range(5)]
+    done = eng.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.out) >= 5 for r in done)
+
+
+def test_engine_matches_direct_decode():
+    """Engine greedy output == hand-rolled prefill+decode."""
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = lm.init_params(KEY, cfg)
+    prompt = np.arange(6) % cfg.vocab_size
+    eng = ServeEngine(params, cfg, slots=1, max_len=32, rt=RT, prompt_pad=8)
+    [req] = eng.run([Request(rid=0, prompt=prompt, max_new=4)])
+
+    cache = lm.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    toks = jnp.asarray(prompt[None].astype(np.int32))
+    # engine pads prompts to prompt_pad; replicate exactly
+    toks_p = jnp.pad(toks, ((0, 0), (0, 2)))
+    logits, cache, _ = lm.forward(params, toks_p, RT, cfg, cache=cache, pos=0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    # NB engine reads last REAL logit: recompute via pos masking
+    # simpler: compare unpadded path
+    cache = lm.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    logits, cache, _ = lm.forward(params, toks, RT, cfg, cache=cache, pos=0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(3):
+        l, cache = lm.decode_step(params, jnp.asarray([[out[-1]]], jnp.int32),
+                                  cache, jnp.int32(pos), RT, cfg)
+        out.append(int(jnp.argmax(l[0, 0])))
+        pos += 1
+    assert req.out[:4] == out[:4]
+
+
+def test_quantize_params_selective():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    params = lm.init_params(KEY, cfg)
+    q = quantize_params(params, "itq3_s")
+    # expert weights quantized (stacked), router and norms untouched
+    layer = q["layers"]
+    assert isinstance(layer["moe"]["up"], QTensor)
+    assert not isinstance(layer["moe"]["router"], QTensor)
+    assert not isinstance(layer["ln1"]["scale"], QTensor)
+    assert isinstance(layer["attn"]["wq"], QTensor)
+    assert quantized_bytes(q) < quantized_bytes(params)
+
+
+def test_quantized_forward_close_enough():
+    cfg = reduced(get_config("stablelm-3b"))
+    params = lm.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    lf, _, _ = lm.forward(params, toks, RT, cfg)
+    for fmt, tol in [("q8_0", 0.05), ("itq3_s", 1.5)]:
+        lq, _, _ = lm.forward(quantize_params(params, fmt), toks, RT, cfg)
+        rmse = float(jnp.sqrt(jnp.mean((lf - lq) ** 2)))
+        assert rmse < tol, (fmt, rmse)
+
+
+def test_quantized_serving_all_ternary_formats():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    for fmt in ("itq3_s", "itq3_x", "iq3_s"):
+        q = quantize_params(params, fmt)
+        eng = ServeEngine(q, cfg, slots=1, max_len=24, rt=RT)
+        [r] = eng.run([Request(rid=0, prompt=np.arange(4), max_new=3)])
+        assert len(r.out) >= 3, fmt
+
+
+def test_ssm_engine_no_padding():
+    cfg = reduced(get_config("rwkv6-3b"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, rt=RT)
+    done = eng.run([Request(rid=0, prompt=np.arange(5), max_new=4),
+                    Request(rid=1, prompt=np.arange(9), max_new=4)])
+    assert all(len(r.out) >= 4 for r in done)

@@ -1,0 +1,155 @@
+"""Sharding rules + multi-device execution (subprocess with 8 host devices;
+this process keeps seeing 1 device per the dry-run isolation rule)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import rules as R
+
+
+def test_adaptive_kv_rules():
+    mesh = make_host_mesh(1, 1)  # axis sizes 1: divisibility trivially true
+    cfg = get_config("nemotron-4-15b")
+    r = R.make_rules(mesh, cfg)
+    assert r.assignments["batch"] in ("data", ("data",), None)
+
+
+def test_rules_on_fake_mesh():
+    """Check the adaptive choices against the production-mesh sizes without
+    building the mesh (pure dict math)."""
+    import dataclasses
+    from unittest import mock
+    cfg = get_config("nemotron-4-15b")  # kv=8 not divisible by 16
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    r = R.make_rules(FakeMesh(), cfg)
+    assert r.assignments["kv_heads"] is None
+    assert r.assignments["kv_seq"] == "model"  # flash-decode fallback
+    assert r.assignments["ffn"] == "model"
+
+    cfg2 = get_config("olmoe-1b-7b")  # kv=16 divisible
+    r2 = R.make_rules(FakeMesh(), cfg2)
+    assert r2.assignments["kv_heads"] == "model"
+    assert r2.assignments["kv_seq"] is None
+    assert r2.assignments["experts"] == "model"
+
+    cfg3 = get_config("smollm-135m")  # kv 3: seq-sharded KV fallback
+    r3 = R.make_rules(FakeMesh(), cfg3)
+    # heads shard by the flat H*HD projection width (9*64=576 % 16 == 0)
+    assert r3.assignments["heads"] == "model"
+    assert r3.assignments["kv_seq"] == "model"
+    assert r3.assignments["ffn"] == "model"  # 1536 % 16 == 0
+
+
+def test_param_pspecs_cover_tree():
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+        axis_names = ("data", "model")
+    import jax.numpy as jnp
+    from repro.models import lm
+    cfg = get_config("smollm-135m")
+    import functools
+    sds = jax.eval_shape(functools.partial(lm.init_params, cfg=cfg),
+                         jax.random.PRNGKey(0))
+    r = R.make_rules(FakeMesh(), cfg)
+    specs = R.param_pspecs(sds, cfg, r)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(sds)
+    assert len(flat_s) == len(flat_l)
+    for leaf, spec in zip(flat_l, flat_s):
+        assert isinstance(spec, P)
+        # every sharded dim must divide
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = {"data": 4, "model": 2}[ax if isinstance(ax, str) else ax[0]]
+            assert leaf.shape[dim] % size == 0, (leaf.shape, spec)
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_config, reduced
+    from repro.launch.train import build_trainer
+    from repro.train import loop as tl
+    from repro.data.pipeline import SyntheticCorpus
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    jitted, shardings, rules = build_trainer(cfg, mesh, total_steps=4)
+    with mesh:
+        state = tl.init_train_state(jax.random.PRNGKey(0), cfg)
+        state = jax.device_put(state, shardings)
+        corpus = SyntheticCorpus(cfg.vocab_size, seed=5)
+        losses = []
+        for s in range(4):
+            b = corpus.batch(s, 8, 32)
+            state, m = jitted(state, {k: jnp.asarray(v) for k, v in b.items()})
+            losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), losses
+    print("MULTIDEV_OK", losses[0], losses[-1])
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_train_subprocess():
+    """Real 8-device SPMD execution of the sharded train step."""
+    res = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "MULTIDEV_OK" in res.stdout, res.stdout + res.stderr
+
+
+SINGLE_VS_MULTI = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm
+    from repro.models.layers import Runtime
+    from repro.sharding import rules as R
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+    rt0 = Runtime(compute_dtype=jnp.float32, capacity_factor=8.0)
+    base, _, _ = lm.forward(params, toks, rt0, cfg)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rules = R.make_rules(mesh, cfg)
+    rt = Runtime(compute_dtype=jnp.float32, capacity_factor=8.0,
+                 rules=rules, mesh=mesh)
+    specs = R.param_pspecs(params, cfg, rules)
+    with mesh:
+        sp = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        st = jax.device_put(toks, NamedSharding(mesh, P("data", None)))
+        out, _, _ = jax.jit(lambda p, t: lm.forward(p, t, rt, cfg))(sp, st)
+    err = float(jnp.max(jnp.abs(out - base)))
+    print("SPMD_MATCH", err)
+    assert err < 1e-3, err
+""")
+
+
+@pytest.mark.slow
+def test_sharded_forward_matches_single_device():
+    """SPMD-sharded forward == single-device forward (numerics)."""
+    res = subprocess.run([sys.executable, "-c", SINGLE_VS_MULTI],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "SPMD_MATCH" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,85 @@
+"""SSM blocks: Mamba2 chunked-scan vs stepwise equivalence, RWKV6 state
+continuity (prefill-then-decode == one pass)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.models import ssm
+from repro.models.layers import Runtime
+
+RT = Runtime(compute_dtype=jnp.float32)
+KEY = jax.random.PRNGKey(1)
+
+
+def test_mamba2_chunked_equals_stepwise():
+    cfg = reduced(get_config("zamba2-7b"))
+    p = ssm.mamba2_init(KEY, cfg)
+    B, T = 2, 9  # not a multiple of chunk => exercises padding
+    x = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.float32) * 0.3
+    st0 = ssm.mamba2_empty_state(cfg, B)
+    y_full, st_full = ssm.mamba2_apply(p, x, RT, cfg, state=st0)
+    # stepwise decode
+    st = ssm.mamba2_empty_state(cfg, B)
+    ys = []
+    for t in range(T):
+        y, st = ssm.mamba2_apply(p, x[:, t:t+1], RT, cfg, state=st, decode=True)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st["ssm"]), np.asarray(st_full["ssm"]),
+                               atol=2e-4)
+
+
+def test_mamba2_long_chunking(rng):
+    """T spanning multiple chunks agrees with single-chunk reference."""
+    cfg = reduced(get_config("zamba2-7b"))
+    p = ssm.mamba2_init(KEY, cfg)
+    B, T = 1, 300  # > CHUNK=128 => 3 chunks
+    x = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.float32) * 0.2
+    st0 = ssm.mamba2_empty_state(cfg, B)
+    y_full, _ = ssm.mamba2_apply(p, x, RT, cfg, state=st0)
+    # split into two calls (state carry across call boundary)
+    st = ssm.mamba2_empty_state(cfg, B)
+    y1, st = ssm.mamba2_apply(p, x[:, :150], RT, cfg, state=st)
+    y2, st = ssm.mamba2_apply(p, x[:, 150:], RT, cfg, state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=3e-4)
+
+
+def test_rwkv6_state_continuity():
+    cfg = reduced(get_config("rwkv6-3b"))
+    p = ssm.rwkv6_init(KEY, cfg)
+    B, T = 2, 10
+    x = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.float32) * 0.3
+    st0 = ssm.rwkv6_empty_state(cfg, B)
+    y_full, st_full = ssm.rwkv6_apply(p, x, RT, cfg, state=st0)
+    st = ssm.rwkv6_empty_state(cfg, B)
+    y1, st = ssm.rwkv6_apply(p, x[:, :6], RT, cfg, state=st)
+    ys = [y1]
+    for t in range(6, T):
+        y, st = ssm.rwkv6_apply(p, x[:, t:t+1], RT, cfg, state=st, decode=True)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st["wkv"]), np.asarray(st_full["wkv"]),
+                               atol=2e-4)
+
+
+def test_rwkv6_decay_in_range():
+    cfg = reduced(get_config("rwkv6-3b"))
+    p = ssm.rwkv6_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 4, cfg.d_model), jnp.float32)
+    # decay w = exp(-exp(...)) must be in (0, 1): probe via state norm decay
+    st = ssm.rwkv6_empty_state(cfg, 1)
+    _, st1 = ssm.rwkv6_apply(p, x, RT, cfg, state=st)
+    assert np.all(np.isfinite(np.asarray(st1["wkv"])))
+
+
+def test_segsum_stability():
+    """all exponentiated quantities <= 0 (DESIGN: stable for any chunk len)."""
+    logd = -jnp.abs(jax.random.normal(KEY, (4, 128)))
+    seg = ssm._segsum(logd)
+    finite = np.asarray(jnp.where(jnp.isfinite(seg), seg, 0.0))
+    assert np.all(finite <= 1e-6)

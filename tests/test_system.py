@@ -1,0 +1,107 @@
+"""End-to-end system behaviour: the paper's full lifecycle on CPU.
+
+train (fp) -> checkpoint -> crash -> elastic restore -> resume ->
+quantize (ITQ3_S + baselines) -> eval-quality ordering -> serve.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import SyntheticCorpus
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.quantized import quantize_params
+from repro.train import loop as tl
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train a tiny model until it clearly learns the synthetic grammar."""
+    cfg = reduced(get_config("smollm-135m"))
+    rt = Runtime(compute_dtype=jnp.float32)
+    step = jax.jit(tl.make_train_step(cfg, rt, warmup=10, total_steps=250,
+                                      lr_peak=3e-3))
+    state = tl.init_train_state(KEY, cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=3)
+    for s in range(250):
+        b = corpus.batch(s, 16, 64)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+    return cfg, state, corpus, float(m["loss"])
+
+
+def eval_loss(cfg, params, corpus, n=4, rt=None):
+    rt = rt or Runtime(compute_dtype=jnp.float32)
+    tot = 0.0
+    for b in corpus.eval_batches(n, 8, 64):
+        loss, _ = lm.forward_xent(params, jnp.asarray(b["tokens"]),
+                                  jnp.asarray(b["labels"]), rt, cfg)
+        tot += float(loss)
+    return tot / n
+
+
+def test_training_learned(trained):
+    cfg, state, corpus, last_loss = trained
+    assert last_loss < 5.0  # well below ln(512)=6.24 uniform entropy
+
+
+def test_checkpoint_resume_deterministic(trained, tmp_path):
+    """Crash/restore: resumed training produces identical loss trajectory."""
+    cfg, state, corpus, _ = trained
+    rt = Runtime(compute_dtype=jnp.float32)
+    step = jax.jit(tl.make_train_step(cfg, rt, warmup=10, total_steps=300))
+    d = str(tmp_path)
+    ckpt.save(d, int(state.step), state)
+
+    def run(state, start, n):
+        out = []
+        for s in range(start, start + n):
+            b = corpus.batch(s, 16, 64)
+            state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+            out.append(float(m["loss"]))
+        return state, out
+
+    _, direct = run(state, int(state.step), 3)
+    restored, rstep = ckpt.restore(d, state)
+    _, resumed = run(restored, rstep, 3)
+    np.testing.assert_allclose(direct, resumed, rtol=1e-6)
+
+
+def test_quality_ordering_reproduces_table1(trained):
+    """Paper Table 1 proxy: eval-loss deltas must order
+    fp < q8 < itq3_s < iq3_s (rotation closes the 3-bit gap)."""
+    cfg, state, corpus, _ = trained
+    base = eval_loss(cfg, state.params, corpus)
+    deltas = {}
+    for fmt in ("q8_0", "itq3_s", "iq3_s"):
+        q = quantize_params(state.params, fmt)
+        deltas[fmt] = eval_loss(cfg, q, corpus) - base
+    assert deltas["q8_0"] < 0.05
+    assert deltas["itq3_s"] < deltas["iq3_s"], deltas
+    assert deltas["itq3_s"] >= -0.05
+
+
+def test_lloyd_rule_improves_model_quality(trained):
+    cfg, state, corpus, _ = trained
+    base = eval_loss(cfg, state.params, corpus)
+    d = {}
+    for rule in ("paper", "lloyd"):
+        q = quantize_params(state.params, "itq3_s", rule=rule)
+        d[rule] = eval_loss(cfg, q, corpus) - base
+    assert d["lloyd"] <= d["paper"] + 0.02, d
+
+
+def test_serve_trained_quantized(trained):
+    cfg, state, corpus, _ = trained
+    q = quantize_params(state.params, "itq3_s")
+    eng = ServeEngine(q, cfg, slots=2, max_len=48,
+                      rt=Runtime(compute_dtype=jnp.float32))
+    done = eng.run([Request(rid=i, prompt=np.arange(6 + i), max_new=6)
+                    for i in range(3)])
+    assert all(len(r.out) >= 6 for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)

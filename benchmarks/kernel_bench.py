@@ -18,7 +18,6 @@ import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core import formats, qlinear
-from repro.kernels import ops
 
 BLOCK = 256
 
@@ -49,12 +48,14 @@ def main() -> None:
         wb, vmem, ai = kernel_accounting(m, n, k, min(m, 256), 256)
         emit(f"kernel/ref_dequant_m{m}", us_ref,
              f"streams_full_bf16_weights={2*k*n/1e6:.1f}MB")
-        us_k = timeit(functools.partial(ops.qmatmul_kernel, mode="weights",
+        us_k = timeit(functools.partial(qlinear.qmatmul, mode="weights",
+                                        backend="pallas", interpret=True,
                                         tm=min(m, 256), tn=256), x, qt, iters=1)
         emit(f"kernel/fused_weights_m{m}", us_k,
              f"streams_packed={k*n*3.125/8/1e6:.1f}MB vmem_tile={vmem/1024:.0f}KB "
              f"arith_intensity={ai:.1f}flops/B (interpret-mode walltime)")
-        us_a = timeit(functools.partial(ops.qmatmul_kernel, mode="activations",
+        us_a = timeit(functools.partial(qlinear.qmatmul, mode="activations",
+                                        backend="pallas", interpret=True,
                                         tm=min(m, 256), tn=256), x, qt, iters=1)
         emit(f"kernel/fused_activations_m{m}", us_a,
              f"rotations_per_matmul={k//BLOCK} (vs {n*k//BLOCK//BLOCK} weight-side)")

@@ -22,7 +22,8 @@ import time
 import jax
 
 from benchmarks.common import emit, eval_loss, trained_model
-from repro.serve.quantized import quantize_params, quantized_bytes
+from repro.configs.base import mixed_precision_recipe
+from repro.serve.quantized import QuantPolicy, quantize_params, quantized_bytes
 
 FORMATS = [
     ("bf16", "paper"), ("q8_0", "paper"), ("q4_0", "paper"),
@@ -49,6 +50,18 @@ def main() -> None:
         emit(f"table1/{fmt}[{rule}]", qt_us,
              f"eval_loss={loss:.4f} delta={delta:+.4f} "
              f"ppl_ratio={math.exp(delta):.4f} bytes={quantized_bytes(q)}")
+
+    # beyond-paper row: the default mixed-precision QuantPolicy (head 8-bit,
+    # MLP sub-block scales, rest itq3_s) — the quality/bytes middle ground
+    # policy-level control buys (TernaryLLM/Tequila-style).
+    t0 = time.time()
+    q = quantize_params(params, QuantPolicy.from_dict(mixed_precision_recipe(cfg)))
+    jax.block_until_ready(jax.tree.leaves(q)[0])
+    qt_us = (time.time() - t0) * 1e6
+    loss = eval_loss(cfg, q, corpus)
+    emit("table1/policy_mixed", qt_us,
+         f"eval_loss={loss:.4f} delta={loss-base:+.4f} "
+         f"bytes={quantized_bytes(q)}")
 
     # the paper's headline: fraction of the 3-bit gap closed by rotation
     gap_iq3 = rows[("iq3_s", "paper")]

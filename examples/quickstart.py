@@ -6,8 +6,9 @@
 2. Rotate + ternary-quantize it (paper Algorithm 1) into 3.125 bits/weight.
 3. Reconstruct and compare against the no-rotation 3-bit baseline.
 4. Run a matmul through all three execution paths (dequant / fused
-   weight-rotation / dual-domain activation-rotation) and the Pallas
-   kernel (interpret mode), showing they agree.
+   weight-rotation / dual-domain activation-rotation) on both qmatmul
+   backends (ref and the Pallas kernel in interpret mode), showing they
+   agree — one entrypoint, ``qlinear.qmatmul(..., backend=...)``.
 """
 import jax
 import jax.numpy as jnp
@@ -15,7 +16,6 @@ import numpy as np
 
 from repro.core import formats, qlinear
 from repro.core.fwht import fwht
-from repro.kernels import ops
 
 rng = np.random.default_rng(0)
 W = jnp.asarray(rng.standard_t(df=4, size=(1024, 256)) * 0.02, jnp.float32)
@@ -36,12 +36,14 @@ for fmt in ("iq3_s", "itq3_s", "itq3_x"):
     print(f"{fmt:8s} rel-err={rel:.4f}  {bpw:.3f} bits/weight "
           f"({'with' if qt.meta.rotate else 'no'} rotation)")
 
-print("\n== execution paths agree ==")
+print("\n== execution paths agree (one qmatmul, two backends) ==")
 qt = formats.quantize(W, "itq3_s")
 y0 = qlinear.qmatmul(x, qt, mode="dequant", compute_dtype=jnp.float32)
 for mode in ("weights", "activations"):
-    yj = qlinear.qmatmul(x, qt, mode=mode, compute_dtype=jnp.float32)
-    yk = ops.qmatmul_kernel(x, qt, mode=mode, tm=4, tn=128, interpret=True)
-    print(f"mode={mode:12s} |jnp-dequant|={float(jnp.max(jnp.abs(yj-y0))):.2e} "
+    yj = qlinear.qmatmul(x, qt, mode=mode, backend="ref",
+                         compute_dtype=jnp.float32)
+    yk = qlinear.qmatmul(x, qt, mode=mode, backend="pallas", interpret=True,
+                         tm=4, tn=128, compute_dtype=jnp.float32)
+    print(f"mode={mode:12s} |ref-dequant|={float(jnp.max(jnp.abs(yj-y0))):.2e} "
           f"|pallas-dequant|={float(jnp.max(jnp.abs(yk-y0))):.2e}")
 print("\nOK — see examples/train_then_serve_quantized.py for the full lifecycle.")

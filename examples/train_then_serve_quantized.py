@@ -1,12 +1,14 @@
 """End-to-end driver: train a ~100M-class (reduced) model a few hundred
-steps, checkpoint it, quantize to ITQ3_S, and serve batched requests.
+steps, checkpoint it, quantize with a mixed-precision QuantPolicy, and
+serve batched requests — straight from the quantized checkpoint.
 
     PYTHONPATH=src python examples/train_then_serve_quantized.py \
         [--arch smollm-135m] [--steps 300]
 
 This is the paper's deployment story in one script: full-precision
-training -> Algorithm 1 offline quantization -> 3.125-bpw serving, with
-eval-loss measured before/after quantization for every 3-bit format.
+training -> Algorithm 1 offline quantization (policy-controlled per
+layer) -> packed-plane checkpoint -> serving from disk, with eval-loss
+measured before/after quantization for every 3-bit format.
 """
 import argparse
 import time
@@ -16,12 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.configs.base import get_config, reduced
+from repro.configs.base import get_config, mixed_precision_recipe, reduced
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import lm
 from repro.models.layers import Runtime
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.quantized import quantize_params, quantized_bytes
+from repro.serve.quantized import (
+    QuantPolicy, describe_quantized, quantize_params, quantized_bytes,
+)
 from repro.train import loop as tl
 
 ap = argparse.ArgumentParser()
@@ -59,16 +63,25 @@ def eval_loss(params):
 
 base = eval_loss(state.params)
 print(f"\n== quantization quality (eval loss; fp={base:.4f}) ==")
-qparams = None
 for fmt in ("q8_0", "iq3_s", "itq3_s", "itq3_x"):
     q = quantize_params(state.params, fmt)
     dl = eval_loss(q) - base
     print(f"  {fmt:8s} delta={dl:+.4f}  bytes={quantized_bytes(q)/1e6:.1f}MB")
-    if fmt == "itq3_s":
-        qparams = q
 
-print("\n== serving the ITQ3_S model (continuous batching) ==")
-eng = ServeEngine(qparams, cfg, slots=4, max_len=96, rt=rt)
+print("\n== mixed-precision policy (head 8-bit, MLP sub-block, rest itq3_s) ==")
+policy = QuantPolicy.from_dict(mixed_precision_recipe(cfg))
+qparams = quantize_params(state.params, policy)
+for path, fmt in sorted(describe_quantized(qparams).items()):
+    print(f"  {path:24s} -> {fmt}")
+print(f"  eval delta={eval_loss(qparams)-base:+.4f}  "
+      f"bytes={quantized_bytes(qparams)/1e6:.1f}MB")
+
+qdir = args.ckpt + "_quantized"
+ckpt.save(qdir, args.steps, qparams)
+print(f"saved packed-plane checkpoint to {qdir}")
+
+print("\n== serving the policy-quantized model from disk ==")
+eng = ServeEngine.from_checkpoint(qdir, cfg, slots=4, max_len=96, rt=rt)
 rng = np.random.default_rng(1)
 reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + i % 4),
                 max_new=12) for i in range(10)]

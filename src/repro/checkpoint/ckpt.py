@@ -3,7 +3,7 @@
 Layout per checkpoint:
 
     <dir>/step_000123/
-        meta.json          step, leaf paths, shapes, dtypes
+        meta.json          step, leaf paths, shapes, dtypes, QTensor metas
         <leafpath>.npy     one file per pytree leaf (path-flattened)
         _COMMITTED         atomic-rename marker written last
 
@@ -17,6 +17,15 @@ Design points for the 1000-node posture:
     whatever sharding the *new* mesh prescribes, so restarting on a
     different topology (fewer hosts after failure, more after scale-up) is
     the same code path as a plain resume.
+  * **Quantized params are first-class** — a
+    :class:`~repro.core.quantize.QTensor` leaf is stored as its packed
+    ``data`` arrays (``<leafpath>__Q__<key>.npy``) plus its static
+    :class:`~repro.core.quantize.QMeta` serialized into ``meta.json``, and
+    restored to an identical pytree. ``restore`` rebuilds QTensors even when
+    the template holds the full-precision weight (quantize -> save ->
+    serve-from-disk never re-runs Algorithm 1), and ``restore_tree``
+    rebuilds a params tree with **no template at all** — what a serving node
+    booting from a bare checkpoint directory needs.
   * On a real multi-host cluster each host writes only the shards it owns
     (addressable_shards); in this single-process container that reduces to
     whole-leaf writes, but the layout/commit protocol is the deployable one.
@@ -32,28 +41,50 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+from repro.core.quantize import QMeta, QTensor
+
+__all__ = ["save", "save_async", "restore", "restore_tree", "restore_params",
+           "latest_step", "wait_pending"]
 
 _SEP = "__"
+_QMARK = _SEP + "Q" + _SEP  # <leafpath>__Q__<datakey>.npy
 _pending: list[threading.Thread] = []
 
 
-def _flatten(tree) -> dict[str, np.ndarray]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
-            for p in path)
-        flat[key] = np.asarray(leaf)
-    return flat
+def _pathkey(path) -> str:
+    return _SEP.join(
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+        for p in path)
+
+
+def _is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, dict]]:
+    """Path-flatten ``tree``; QTensor leaves expand to their packed arrays
+    plus a JSON-able meta record."""
+    flat: dict[str, np.ndarray] = {}
+    qmetas: dict[str, dict] = {}
+    pairs = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_qtensor)[0]
+    for path, leaf in pairs:
+        key = _pathkey(path)
+        if _is_qtensor(leaf):
+            qmetas[key] = {"meta": leaf.meta.to_dict(),
+                           "keys": sorted(leaf.data)}
+            for dkey in leaf.data:
+                flat[key + _QMARK + dkey] = np.asarray(leaf.data[dkey])
+        else:
+            flat[key] = np.asarray(leaf)
+    return flat, qmetas
 
 
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
-    flat = _flatten(tree)
+    flat, qmetas = _flatten(tree)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    meta = {"step": step, "leaves": {}}
+    meta: dict[str, Any] = {"step": step, "leaves": {}, "qtensors": qmetas}
     for key, arr in flat.items():
         np.save(os.path.join(tmp, key + ".npy"), arr)
         meta["leaves"][key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
@@ -105,26 +136,102 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, template, *, step: Optional[int] = None,
-            shardings=None):
-    """Rebuild ``template``-shaped pytree from disk. ``shardings`` (optional
-    pytree of NamedSharding matching template) enables elastic restore onto
-    a new mesh: leaves are device_put directly into the new layout."""
+def _step_dir(ckpt_dir: str, step: Optional[int]) -> tuple[str, int]:
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
-    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+    return os.path.join(ckpt_dir, f"step_{step:08d}"), step
+
+
+def _load_qtensor(d: str, key: str, rec: dict) -> QTensor:
+    data = {dkey: np.load(os.path.join(d, key + _QMARK + dkey + ".npy"))
+            for dkey in rec["keys"]}
+    return QTensor(data, QMeta.from_dict(rec["meta"]))
+
+
+def _put_qtensor(qt: QTensor, shard) -> QTensor:
+    """Device_put a restored QTensor into the prescribed layout. ``shard``
+    is whatever the shardings pytree holds at the QTensor's template slot: a
+    single (Named)Sharding applied to every packed array, a dict keyed like
+    ``qt.data``, a QTensor-of-shardings (tree_map over a QTensor template
+    produces one), or None (host arrays, caller places them)."""
+    if shard is None:
+        return qt
+    per = shard.data if isinstance(shard, QTensor) else shard
+    if not isinstance(per, dict):
+        per = {k: per for k in qt.data}
+    return QTensor({k: jax.device_put(v, per[k]) for k, v in qt.data.items()},
+                   qt.meta)
+
+
+def restore(ckpt_dir: str, template, *, step: Optional[int] = None,
+            shardings=None):
+    """Rebuild ``template``-shaped pytree from disk. ``shardings`` (optional
+    pytree of NamedSharding matching template) enables elastic restore onto
+    a new mesh: leaves are device_put directly into the new layout.
+
+    A leaf saved as a QTensor is rebuilt as a QTensor (its QMeta comes from
+    meta.json) whether the template holds a QTensor or the original
+    full-precision array — restoring a quantized checkpoint into an fp
+    param template yields the quantized tree, ready to serve."""
+    d, step = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, "meta.json")) as f:
+        qmetas = json.load(f).get("qtensors", {})
+    flat_template, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_is_qtensor)
+    # flatten_up_to keeps shardings aligned one-to-one with template leaves
+    # even when a QTensor leaf spans a whole sharding subtree.
+    shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(flat_template))
     leaves = []
     for (path, leaf), shard in zip(flat_template, shard_leaves):
-        key = _SEP.join(
-            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
-            for p in path)
+        key = _pathkey(path)
+        if key in qmetas:
+            leaves.append(_put_qtensor(_load_qtensor(d, key, qmetas[key]), shard))
+            continue
         arr = np.load(os.path.join(d, key + ".npy"))
         if hasattr(leaf, "dtype"):
             arr = arr.astype(leaf.dtype)
         leaves.append(jax.device_put(arr, shard) if shard is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def restore_tree(ckpt_dir: str, *, step: Optional[int] = None):
+    """Template-free restore: rebuild a nested-dict pytree purely from
+    ``meta.json`` (params trees are string-keyed dicts all the way down).
+    QTensor leaves are reconstructed from their packed planes + stored
+    QMeta — this is how a serving process boots a quantized model from a
+    bare checkpoint directory (see ServeEngine.from_checkpoint)."""
+    d, step = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    qmetas = meta.get("qtensors", {})
+
+    tree: dict[str, Any] = {}
+
+    def insert(key: str, value):
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+
+    for key, rec in qmetas.items():
+        insert(key, _load_qtensor(d, key, rec))
+    owned = {k + _QMARK + dk for k, rec in qmetas.items() for dk in rec["keys"]}
+    for key in meta["leaves"]:
+        if key not in owned:
+            insert(key, np.load(os.path.join(d, key + ".npy")))
+    return tree, step
+
+
+def restore_params(ckpt_dir: str, *, step: Optional[int] = None):
+    """Template-free restore of a servable params tree: a bare params
+    checkpoint is returned as-is, a TrainState checkpoint is unwrapped to
+    its ``params`` member. The one entrypoint for serving-from-disk
+    (ServeEngine.from_checkpoint and the serve launcher both use it)."""
+    tree, step = restore_tree(ckpt_dir, step=step)
+    if isinstance(tree, dict) and "params" in tree:
+        tree = tree["params"]
+    return tree, step

@@ -11,7 +11,8 @@ import dataclasses
 import importlib
 from typing import Optional
 
-__all__ = ["ModelConfig", "ShapeConfig", "get_config", "reduced", "ARCH_IDS", "SHAPES", "runnable_cells"]
+__all__ = ["ModelConfig", "ShapeConfig", "get_config", "reduced", "ARCH_IDS",
+           "SHAPES", "runnable_cells", "mixed_precision_recipe"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +142,30 @@ def runnable_cells() -> list[tuple[str, str]]:
                 continue  # documented skip: full-attention arch
             cells.append((arch, shape.name))
     return cells
+
+
+def mixed_precision_recipe(cfg: ModelConfig, *, head_fmt: str = "q8_0",
+                           mlp_fmt: str = "itq3_s_sub",
+                           rest_fmt: str = "itq3_s") -> dict:
+    """Default mixed-precision serving recipe for ``cfg``, as a
+    :class:`~repro.serve.quantized.QuantPolicy` dict (JSON-safe, usable from
+    configs, examples, and benchmarks):
+
+      * the LM head (quality-critical output projection) at 8-bit;
+        tied-embedding models project through ``embed.T``, so the head rule
+        targets the table there instead,
+      * MLP/expert projections at the sub-block-scale ternary variant,
+      * every other matmul projection at plain ITQ3_S,
+      * router/norms/biases fp via the policy's no-match default.
+    """
+    from repro.serve.quantized import MATMUL_LEAVES  # leaf-name vocabulary
+
+    head_pattern = r"(^|\.)embed$" if cfg.tie_embeddings else r"(^|\.)lm_head$"
+    return {"rules": [
+        {"pattern": head_pattern, "fmt": head_fmt},
+        {"pattern": r"(^|\.)(gate|up|down)$", "fmt": mlp_fmt},
+        {"pattern": MATMUL_LEAVES, "fmt": rest_fmt},
+    ]}
 
 
 def reduced(cfg: ModelConfig) -> ModelConfig:

@@ -1,4 +1,4 @@
-"""Quantization format registry.
+"""Pluggable quantization-format registry.
 
 Every format the paper's experiment tables mention is implemented here so
 Table 1/2/3 can be reproduced as like-for-like comparisons:
@@ -9,158 +9,365 @@ Table 1/2/3 can be reproduced as like-for-like comparisons:
   iq3_s          3-bit ternary *without* rotation — the paper's 3-bit baseline
   quip3          random-sign diagonal + FWHT (QuIP#-3bit analogue), ternary
   itq3_s         THE PAPER: FWHT rotation + optimal-scale ternary (3.125 bpw)
-  itq3_s_sub     §4.1 sub-block-scale variant (3.625 bpw)
+  itq3_s_sub     §4.1 sub-block-scale variant (~3.6 bpw)
   itq3_x         beyond-paper: 5-level magnitude-escape grid, same 3.125 bpw
 
-All quantize along the reduction dim (axis -2) of ``(..., K, N)`` weights.
-``quantize(w, fmt)`` / ``dequantize(qt)`` are the public API; formats are
-simple singletons in ``FORMATS``.
+A :class:`Format` is an object with three capabilities:
+
+  ``quantize_blocks``    block-major weights -> packed ``data`` dict
+  ``dequantize_blocks``  packed ``data`` dict -> block-major weights
+  ``contract``           the reference ``x @ W_hat`` contraction for that
+                         storage layout (what ``qmatmul(backend="ref")`` runs)
+
+plus tensor-level ``quantize``/``dequantize`` wrappers that own the
+``(..., K, N) <-> (..., N, KB, block)`` shape plumbing and :class:`QMeta`
+construction. New formats plug in via :func:`register_format`:
+
+    @register_format
+    class MyFormat(TernaryFormat):
+        def __init__(self):
+            super().__init__("my_fmt", rotate=True, sub_blocks=4)
+
+All formats quantize along the reduction dim (axis -2) of ``(..., K, N)``
+weights. ``quantize(w, fmt)`` / ``dequantize(qt)`` remain as module-level
+shims so existing call sites keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import packing
 from repro.core.quantize import (
     DEFAULT_BLOCK,
     QMeta,
     QTensor,
     dequantize_blocks_ternary,
+    decode_values,
     from_blocks,
+    pad_last_dim,
     quantize_blocks_ternary,
     to_blocks,
 )
+from repro.core.fwht import fwht
 
-__all__ = ["FORMATS", "quantize", "dequantize", "bits_per_weight", "Format"]
+__all__ = [
+    "FORMATS", "Format", "TernaryFormat", "FloatFormat", "AbsmaxFormat",
+    "register_format", "get_format", "quantize", "dequantize",
+    "bits_per_weight",
+]
 
 
-@dataclasses.dataclass(frozen=True)
 class Format:
-    name: str
-    bits_per_weight: float
-    block: int
-    rotate: bool = False
-    sub_blocks: int = 0
-    fivelevel: bool = False
-    sign_diag: bool = False  # quip3: random Rademacher diagonal before H
+    """Base class: a named storage format for matmul weights.
+
+    Subclasses implement the three-method contract below. ``supports_fused``
+    marks formats the Pallas ITQ3 kernel can consume directly (packed
+    ternary planes) — the single source of truth that used to be duplicated
+    as string allowlists in ``core/qlinear.py`` and ``kernels/ops.py``.
+    """
+
+    name: str = ""
+    bits_per_weight: float = 16.0
+    block: int = 1
     is_float: bool = False
-    float_dtype: str = "bfloat16"
+    supports_fused: bool = False
+
+    # --- block-level contract -------------------------------------------
+    def quantize_blocks(self, wb: jax.Array, *, rule: str = "paper",
+                        seed: int = 0) -> dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def dequantize_blocks(self, data: dict[str, jax.Array]) -> jax.Array:
+        raise NotImplementedError
+
+    def contract(self, x: jax.Array, qt: QTensor, *, mode: str = "dequant",
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+        """Reference ``x (..., K) @ W_hat (K, N)``. The base implementation
+        materializes the weight; ternary formats override with the fused
+        weight-/activation-rotation contractions."""
+        w = self.dequantize(qt, dtype=compute_dtype)
+        return jnp.matmul(x.astype(compute_dtype), w)
+
+    # --- tensor-level wrappers ------------------------------------------
+    def make_meta(self, shape: tuple[int, ...], *, rule: str = "paper") -> QMeta:
+        return QMeta(self.name, shape, block=self.block, rule=rule,
+                     rotate=False, bits_per_weight=self.bits_per_weight)
+
+    def quantize(self, w: jax.Array, *, rule: str = "paper",
+                 seed: int = 0) -> QTensor:
+        wb = to_blocks(w, self.block)
+        data = self.quantize_blocks(wb, rule=rule, seed=seed)
+        return QTensor(data, self.make_meta(tuple(w.shape), rule=rule))
+
+    def dequantize(self, qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+        wb = self.dequantize_blocks(qt.data)
+        return from_blocks(wb, qt.meta.k).astype(dtype)
 
 
-FORMATS: dict[str, Format] = {
-    "fp16": Format("fp16", 16.0, block=1, is_float=True, float_dtype="float16"),
-    "bf16": Format("bf16", 16.0, block=1, is_float=True, float_dtype="bfloat16"),
-    "q8_0": Format("q8_0", 8.5, block=32),
-    "q4_0": Format("q4_0", 4.5, block=32),
-    "iq3_s": Format("iq3_s", 3.125, block=DEFAULT_BLOCK, rotate=False),
-    "quip3": Format("quip3", 3.125, block=DEFAULT_BLOCK, rotate=True, sign_diag=True),
-    "itq3_s": Format("itq3_s", 3.125, block=DEFAULT_BLOCK, rotate=True),
-    "itq3_s_sub": Format("itq3_s_sub", 3.625, block=DEFAULT_BLOCK, rotate=True, sub_blocks=8),
-    "itq3_x": Format("itq3_x", 3.125, block=DEFAULT_BLOCK, rotate=True, fivelevel=True),
-}
+FORMATS: dict[str, Format] = {}
 
-_TERNARY_FAMILY = {"iq3_s", "quip3", "itq3_s", "itq3_s_sub", "itq3_x"}
 
+def register_format(fmt):
+    """Register a :class:`Format` (instance or zero-arg class) under its
+    ``name``. Usable as a decorator; re-registration overwrites, so formats
+    can be patched in tests or downstream packages."""
+    inst = fmt() if isinstance(fmt, type) else fmt
+    if not inst.name:
+        raise ValueError(f"format {inst!r} has no name")
+    FORMATS[inst.name] = inst
+    return fmt
+
+
+def get_format(name: str) -> Format:
+    try:
+        return FORMATS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown format {name!r}; options {sorted(FORMATS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Float identity formats (the FP16/BF16 baseline rows)
+# ---------------------------------------------------------------------------
+
+class FloatFormat(Format):
+    is_float = True
+
+    def __init__(self, name: str, dtype: str):
+        self.name = name
+        self.float_dtype = dtype
+        self.bits_per_weight = 16.0
+        self.block = 1
+
+    def quantize(self, w: jax.Array, *, rule: str = "paper",
+                 seed: int = 0) -> QTensor:
+        meta = self.make_meta(tuple(w.shape), rule=rule)
+        return QTensor({"w": w.astype(self.float_dtype)}, meta)
+
+    def dequantize(self, qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+        return qt.data["w"].astype(dtype)
+
+    def quantize_blocks(self, wb, *, rule="paper", seed=0):
+        return {"w": wb.astype(self.float_dtype)}
+
+    def dequantize_blocks(self, data):
+        return data["w"]
+
+
+# ---------------------------------------------------------------------------
+# GGUF-style absmax integer formats (q8_0 / q4_0 baselines)
+# ---------------------------------------------------------------------------
+
+class AbsmaxFormat(Format):
+    """Blockwise absmax scaling to a symmetric int grid; q4_0 packs two
+    offset-8 nibbles per byte."""
+
+    def __init__(self, name: str, qbits: int, bits_per_weight: float):
+        self.name = name
+        self.qbits = qbits
+        self.bits_per_weight = bits_per_weight
+        self.block = 32
+        self.qmax = float(2 ** (qbits - 1) - 1)
+
+    def quantize_blocks(self, wb, *, rule="paper", seed=0):
+        wb = wb.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(wb), axis=-1)
+        scale = (amax / self.qmax).astype(jnp.float16).astype(jnp.float32)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(wb / safe[..., None]),
+                     -self.qmax, self.qmax).astype(jnp.int8)
+        if self.qbits == 4:
+            u = (q + 8).astype(jnp.uint8)
+            lo, hi = u[..., 0::2], u[..., 1::2]
+            q = lo | (hi << 4)
+        return {"q": q, "scales": scale.astype(jnp.float16)}
+
+    def dequantize_blocks(self, data):
+        q = data["q"]
+        if self.qbits == 4:
+            lo = (q & 0xF).astype(jnp.int8) - 8
+            hi = ((q >> 4) & 0xF).astype(jnp.int8) - 8
+            q = jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1],
+                                                     q.shape[-1] * 2)
+        return q.astype(jnp.float32) * data["scales"].astype(jnp.float32)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# The ternary family (iq3_s / quip3 / itq3_s / itq3_s_sub / itq3_x)
+# ---------------------------------------------------------------------------
+
+class TernaryFormat(Format):
+    """Rotation-domain ternary storage (paper Algorithm 1). Parameterized by
+    the rotation/scale-structure knobs; per-call ``sub_blocks`` overrides are
+    honoured so a :class:`~repro.serve.quantized.QuantPolicy` rule can
+    request finer scales on selected layers."""
+
+    supports_fused = True
+
+    def __init__(self, name: str, *, rotate: bool = True, sub_blocks: int = 0,
+                 fivelevel: bool = False, sign_diag: bool = False,
+                 block: int = DEFAULT_BLOCK):
+        self.name = name
+        self.rotate = rotate
+        self.sub_blocks = sub_blocks
+        self.fivelevel = fivelevel
+        self.sign_diag = sign_diag
+        self.block = block
+        self.bits_per_weight = self._bpw(sub_blocks)
+
+    def _bpw(self, sub_blocks: int) -> float:
+        # 3-bit planes + fp16 scale metadata per block: scale+zp, or one
+        # scale per sub-block plus the zp in the §4.1 variant.
+        scale_bits = 16 * (sub_blocks + 1 if sub_blocks else 2)
+        return 3.0 + scale_bits / self.block
+
+    def _dsign(self, seed: int) -> jax.Array | None:
+        if not self.sign_diag:
+            return None
+        key = jax.random.PRNGKey(seed)
+        return (jax.random.bernoulli(key, 0.5, (self.block,)).astype(jnp.int8)
+                * 2 - 1)
+
+    def make_meta(self, shape, *, rule="paper", sub_blocks=None) -> QMeta:
+        sub = self.sub_blocks if sub_blocks is None else sub_blocks
+        return QMeta(self.name, shape, block=self.block, rule=rule,
+                     rotate=self.rotate, sub_blocks=sub,
+                     fivelevel=self.fivelevel, bits_per_weight=self._bpw(sub))
+
+    def quantize_blocks(self, wb, *, rule="paper", seed=0, sub_blocks=None):
+        sub = self.sub_blocks if sub_blocks is None else sub_blocks
+        return quantize_blocks_ternary(
+            wb, rotate=self.rotate, rule=rule, sub_blocks=sub,
+            fivelevel=self.fivelevel, dsign=self._dsign(seed))
+
+    def dequantize_blocks(self, data, *, sub_blocks=None):
+        sub = self.sub_blocks if sub_blocks is None else sub_blocks
+        return dequantize_blocks_ternary(
+            data, rotate=self.rotate, sub_blocks=sub,
+            fivelevel=self.fivelevel, dtype=jnp.float32)
+
+    def quantize(self, w, *, rule="paper", seed=0, sub_blocks=None) -> QTensor:
+        wb = to_blocks(w, self.block)
+        data = self.quantize_blocks(wb, rule=rule, seed=seed,
+                                    sub_blocks=sub_blocks)
+        return QTensor(data, self.make_meta(tuple(w.shape), rule=rule,
+                                            sub_blocks=sub_blocks))
+
+    def dequantize(self, qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+        wb = self.dequantize_blocks(qt.data, sub_blocks=qt.meta.sub_blocks)
+        return from_blocks(wb, qt.meta.k).astype(dtype)
+
+    # --- reference contractions (oracles for the Pallas kernel) ---------
+    def contract(self, x, qt, *, mode="dequant", compute_dtype=jnp.bfloat16):
+        """Three execution paths, all computing ``y = x @ W_hat``:
+
+        * ``dequant``     — materialize W_hat then matmul (base class).
+        * ``weights``     — paper-faithful: per weight tile, unpack ->
+          dequantize -> inverse-FWHT the *weights*, then matmul; the pure-JAX
+          oracle of the fused Pallas kernel.
+        * ``activations`` — dual-domain (DESIGN.md §2): H is involutory and
+          blocks tile the reduction dim, so
+
+              y_n = sum_b (H (d_b (q_b - z_b 1))) . x_b
+                  = sum_b d_b q_b . (H x_b) - d_b z_b sqrt(block) * x_b[0]
+
+          (using ``H 1 = sqrt(block) e_0``): rotate each *activation* block
+          once (O(K) transforms per row of x, independent of N) and contract
+          against the raw ternary codes. For the sub-block-scale variant the
+          elementwise scale lives in the rotated domain so it folds into the
+          same contraction with no correction (z=0 there).
+
+        All paths are bit-identical in exact arithmetic (tested); they
+        differ only in where the rotation FLOPs land.
+        """
+        if mode == "dequant":
+            return super().contract(x, qt, compute_dtype=compute_dtype)
+
+        m = qt.meta
+        block, kb, n = m.block, m.kb, m.n
+        qv = decode_values(qt.data["plane2"], qt.data["plane1"],
+                           fivelevel=m.fivelevel)
+        qv = qv.astype(compute_dtype)  # (N, KB, block)
+
+        if mode == "weights":
+            if m.sub_blocks:
+                d = qt.data["scales"].astype(jnp.float32)  # (N, KB, sub)
+                d = jnp.repeat(d, block // m.sub_blocks, axis=-1)
+                vals = d * qv.astype(jnp.float32)
+            else:
+                d = qt.data["scales"].astype(jnp.float32)[..., None]
+                z = qt.data["zps"].astype(jnp.float32)[..., None]
+                vals = d * (qv.astype(jnp.float32) - z)
+            if m.rotate:
+                vals = fwht(vals)
+                dsign = qt.data.get("dsign")
+                if dsign is not None:
+                    vals = vals * dsign.astype(vals.dtype)
+            w = vals.reshape(n, kb * block).T.astype(compute_dtype)  # (K_pad, N)
+            xp = pad_last_dim(x, block).astype(compute_dtype)
+            return jnp.matmul(xp, w)
+
+        if mode != "activations":
+            raise ValueError(f"unknown contraction mode {mode!r}")
+
+        xp = pad_last_dim(x, block).astype(jnp.float32)
+        *lead, kp = xp.shape
+        xb = xp.reshape(*lead, kb, block)
+        if m.rotate:
+            dsign = qt.data.get("dsign")
+            if dsign is not None:
+                xb = xb * dsign.astype(xb.dtype)  # w = D H v => w.x = v.(H D x)
+            xr = fwht(xb).astype(compute_dtype)  # (..., KB, block)
+            # zero-point correction factor: H 1 = sqrt(block) e_0 -> x_b[0]
+            x0 = (xb[..., 0] * jnp.sqrt(jnp.float32(block))).astype(compute_dtype)
+        else:
+            # iq3_s no-rotation baseline: contract codes against raw x; the
+            # zero-point couples to sum(x_b) instead.
+            xr = xb.astype(compute_dtype)
+            x0 = jnp.sum(xb, axis=-1).astype(compute_dtype)
+
+        if m.sub_blocks:
+            d = qt.data["scales"].astype(compute_dtype)  # (N, KB, sub)
+            d = jnp.repeat(d, block // m.sub_blocks, axis=-1)  # (N, KB, block)
+            wq = d * qv  # scale lives in rotated domain -> fold into codes
+            y = jnp.einsum("...kb,nkb->...n", xr, wq)
+            return y.astype(compute_dtype)
+
+        d = qt.data["scales"].astype(compute_dtype)  # (N, KB)
+        z = qt.data["zps"].astype(compute_dtype)  # (N, KB)
+        # Main term: sum_b d_b * (q_b . xr_b)
+        wq = d[..., None] * qv  # (N, KB, block)
+        y = jnp.einsum("...kb,nkb->...n", xr, wq)
+        # Zero-point correction: - sum_b d_b z_b * x0_b (see above for x0).
+        corr = jnp.einsum("...k,nk->...n", x0, d * z)
+        return (y - corr).astype(compute_dtype)
+
+
+register_format(FloatFormat("fp16", "float16"))
+register_format(FloatFormat("bf16", "bfloat16"))
+register_format(AbsmaxFormat("q8_0", qbits=8, bits_per_weight=8.5))
+register_format(AbsmaxFormat("q4_0", qbits=4, bits_per_weight=4.5))
+register_format(TernaryFormat("iq3_s", rotate=False))
+register_format(TernaryFormat("quip3", rotate=True, sign_diag=True))
+register_format(TernaryFormat("itq3_s", rotate=True))
+register_format(TernaryFormat("itq3_s_sub", rotate=True, sub_blocks=8))
+register_format(TernaryFormat("itq3_x", rotate=True, fivelevel=True))
+
+
+# ---------------------------------------------------------------------------
+# Module-level shims (the original string-keyed API; kept indefinitely)
+# ---------------------------------------------------------------------------
 
 def bits_per_weight(fmt: str) -> float:
-    return FORMATS[fmt].bits_per_weight
+    return get_format(fmt).bits_per_weight
 
 
-def _rademacher(seed: int, n: int) -> jax.Array:
-    key = jax.random.PRNGKey(seed)
-    return (jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.int8) * 2 - 1)
-
-
-def quantize(
-    w: jax.Array,
-    fmt: str = "itq3_s",
-    *,
-    rule: str = "paper",
-    seed: int = 0,
-) -> QTensor:
-    """Quantize ``w`` (..., K, N) into format ``fmt``."""
-    spec = FORMATS[fmt]
-    shape = tuple(w.shape)
-
-    if spec.is_float:
-        meta = QMeta(fmt, shape, block=1, rule=rule, rotate=False,
-                     bits_per_weight=spec.bits_per_weight)
-        return QTensor({"w": w.astype(spec.float_dtype)}, meta)
-
-    if fmt in _TERNARY_FAMILY:
-        wb = to_blocks(w, spec.block)  # (..., N, KB, block)
-        dsign = _rademacher(seed, spec.block) if spec.sign_diag else None
-        data = quantize_blocks_ternary(
-            wb,
-            rotate=spec.rotate,
-            rule=rule,
-            sub_blocks=spec.sub_blocks,
-            fivelevel=spec.fivelevel,
-            dsign=dsign,
-        )
-        meta = QMeta(fmt, shape, block=spec.block, rule=rule, rotate=spec.rotate,
-                     sub_blocks=spec.sub_blocks, fivelevel=spec.fivelevel,
-                     bits_per_weight=spec.bits_per_weight)
-        return QTensor(data, meta)
-
-    if fmt == "q8_0":
-        wb = to_blocks(w, 32).astype(jnp.float32)
-        amax = jnp.max(jnp.abs(wb), axis=-1)
-        scale = (amax / 127.0).astype(jnp.float16).astype(jnp.float32)
-        safe = jnp.where(scale > 0, scale, 1.0)
-        q = jnp.clip(jnp.round(wb / safe[..., None]), -127, 127).astype(jnp.int8)
-        meta = QMeta(fmt, shape, block=32, rotate=False, bits_per_weight=8.5)
-        return QTensor({"q": q, "scales": scale.astype(jnp.float16)}, meta)
-
-    if fmt == "q4_0":
-        wb = to_blocks(w, 32).astype(jnp.float32)
-        amax = jnp.max(jnp.abs(wb), axis=-1)
-        scale = (amax / 7.0).astype(jnp.float16).astype(jnp.float32)
-        safe = jnp.where(scale > 0, scale, 1.0)
-        q = jnp.clip(jnp.round(wb / safe[..., None]), -7, 7).astype(jnp.int8)
-        # offset-8 nibble packing, two values per byte
-        u = (q + 8).astype(jnp.uint8)
-        lo, hi = u[..., 0::2], u[..., 1::2]
-        packed = lo | (hi << 4)
-        meta = QMeta(fmt, shape, block=32, rotate=False, bits_per_weight=4.5)
-        return QTensor({"q": packed, "scales": scale.astype(jnp.float16)}, meta)
-
-    raise ValueError(f"unknown format {fmt!r}; options {sorted(FORMATS)}")
+def quantize(w: jax.Array, fmt: str = "itq3_s", *, rule: str = "paper",
+             seed: int = 0, **overrides) -> QTensor:
+    """Quantize ``w`` (..., K, N) into format ``fmt`` (registry lookup)."""
+    return get_format(fmt).quantize(w, rule=rule, seed=seed, **overrides)
 
 
 def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
-    """Reconstruct the (..., K, N) weight from any format."""
-    m = qt.meta
-    spec = FORMATS[m.fmt]
-
-    if spec.is_float:
-        return qt.data["w"].astype(dtype)
-
-    if m.fmt in _TERNARY_FAMILY:
-        wb = dequantize_blocks_ternary(
-            qt.data,
-            rotate=m.rotate,
-            sub_blocks=m.sub_blocks,
-            fivelevel=m.fivelevel,
-            dtype=jnp.float32,
-        )
-        return from_blocks(wb, m.k).astype(dtype)
-
-    if m.fmt == "q8_0":
-        vals = qt.data["q"].astype(jnp.float32) * qt.data["scales"].astype(jnp.float32)[..., None]
-        return from_blocks(vals, m.k).astype(dtype)
-
-    if m.fmt == "q4_0":
-        p = qt.data["q"]
-        lo = (p & 0xF).astype(jnp.int8) - 8
-        hi = ((p >> 4) & 0xF).astype(jnp.int8) - 8
-        q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
-        vals = q.astype(jnp.float32) * qt.data["scales"].astype(jnp.float32)[..., None]
-        return from_blocks(vals, m.k).astype(dtype)
-
-    raise ValueError(f"unknown format {m.fmt!r}")
+    """Reconstruct the (..., K, N) weight from any registered format."""
+    return get_format(qt.meta.fmt).dequantize(qt, dtype=dtype)

@@ -1,31 +1,32 @@
 """Quantized linear forward — the online half of ITQ3_S.
 
-Three execution paths, all computing ``y = x @ W_hat`` for a QTensor W_hat:
+:func:`qmatmul` is the ONE entrypoint for ``y = x @ W_hat`` on a QTensor.
+It owns two orthogonal dispatch decisions:
 
-  * ``mode="dequant"``    — materialize W_hat then matmul. The reference
-    path (what a naive integration would do); used as the oracle in tests
-    and as the non-fused baseline in the perf log.
+**mode** — where the rotation FLOPs land (see
+:meth:`repro.core.formats.TernaryFormat.contract` for the math):
 
-  * ``mode="weights"``    — paper-faithful fused path: per weight tile,
-    unpack -> dequantize -> inverse-FWHT the *weights*, then matmul. On TPU
-    this runs inside the Pallas kernel (kernels/itq3_matmul); the pure-JAX
-    expression here is its oracle and the CPU/dry-run lowering.
+  * ``"dequant"``      — materialize W_hat then matmul (oracle / baseline).
+  * ``"weights"``      — paper-faithful fused path: unpack -> dequantize ->
+    inverse-FWHT the *weight* tiles, then matmul.
+  * ``"activations"``  — dual-domain path: rotate each activation block once
+    and contract against the raw ternary codes.
+  * ``"auto"``         — side-adaptive: H is involutory, so the transform can
+    land on either operand — put it on the SMALLER side. Decode (few rows)
+    rotates activations; prefill/training-width batches rotate weight tiles.
 
-  * ``mode="activations"`` — beyond-paper dual-domain path (DESIGN.md §2):
-    since H is symmetric/involutory and blocks tile the reduction dim,
+**backend** — which implementation runs the chosen contraction:
 
-        y_n = sum_b  (H (d_b (q_b - z_b 1))) . x_b
-            = sum_b  d_b q_b . (H x_b)  -  d_b z_b sqrt(block) * x_b[0]
+  * ``"ref"``     — the pure-JAX expression (``Format.contract``); CPU/GPU
+    portable, and the oracle the kernels are tested against.
+  * ``"pallas"``  — the fused Pallas TPU kernel (kernels/ops.py); formats
+    without a fused kernel (fp16/bf16/q8_0/q4_0) and ``mode="dequant"`` fall
+    back to ``"ref"`` so mixed-precision trees serve through one code path.
+  * ``"auto"``    — ``"pallas"`` on real TPU hardware for fused-capable
+    formats, ``"ref"`` everywhere else.
 
-    (using H 1 = sqrt(block) e_0), so we rotate each *activation* block once
-    (O(K) transforms per row of x, independent of N) and contract against
-    the raw ternary codes; the zero-point correction costs one multiply per
-    block. For the sub-block-scale variant the elementwise scale lives in
-    the rotated domain so it folds into the same contraction with no
-    correction (z=0 there).
-
-All paths are bit-identical in exact arithmetic (tested); they differ only
-in where the rotation FLOPs land — the core of EXPERIMENTS.md §Perf.
+All modes are bit-identical in exact arithmetic (tested); ref and pallas
+agree within kernel tolerance for every registered ternary format.
 """
 from __future__ import annotations
 
@@ -33,21 +34,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import formats as fmt_mod
-from repro.core.fwht import fwht
-from repro.core.quantize import QTensor, decode_values
+from repro.core.quantize import QTensor
 
-__all__ = ["qmatmul", "QLINEAR_MODES"]
+__all__ = ["qmatmul", "resolve_mode", "QLINEAR_MODES", "QMATMUL_BACKENDS"]
 
 QLINEAR_MODES = ("dequant", "weights", "activations", "auto")
+QMATMUL_BACKENDS = ("auto", "ref", "pallas")
 
 
-def _pad_last(x: jax.Array, to: int) -> jax.Array:
-    pad = (-x.shape[-1]) % to
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[-1] = (0, pad)
-    return jnp.pad(x, widths)
+def resolve_mode(x: jax.Array, m, mode: str) -> str:
+    """Resolve mode="auto" side-adaptively: rotate the smaller operand."""
+    if mode != "auto":
+        return mode
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    return "activations" if rows <= m.n else "weights"
 
 
 def qmatmul(
@@ -55,85 +57,37 @@ def qmatmul(
     qt: QTensor,
     *,
     mode: str = "activations",
+    backend: str = "auto",
     compute_dtype=jnp.bfloat16,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """``x (..., K) @ W_hat (K, N) -> (..., N)`` for a quantized weight.
 
-    Non-ternary formats (fp16/bf16/q8_0/q4_0) always take the dequant path.
+    ``tm``/``tn``/``interpret`` only affect the Pallas backend (tile sizes
+    and interpret-mode override for CPU testing).
     """
     m = qt.meta
     if len(m.shape) != 2:
         raise ValueError(f"qmatmul expects 2-D weights, got shape {m.shape}")
     if mode not in QLINEAR_MODES:
         raise ValueError(f"mode {mode!r} not in {QLINEAR_MODES}")
-    if mode == "auto":
-        # side-adaptive rotation (EXPERIMENTS §Perf): H is involutory, so the
-        # transform can land on either operand — put it on the SMALLER side.
-        # Decode (few rows) rotates activations; prefill/training-width
-        # batches rotate the weight tiles.
-        rows = 1
-        for d in x.shape[:-1]:
-            rows *= d
-        mode = "activations" if rows <= m.n else "weights"
-    ternary = m.fmt in ("iq3_s", "quip3", "itq3_s", "itq3_s_sub", "itq3_x")
+    if backend not in QMATMUL_BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {QMATMUL_BACKENDS}")
 
-    if mode == "dequant" or not ternary:
-        w = fmt_mod.dequantize(qt, dtype=compute_dtype)
-        return jnp.matmul(x.astype(compute_dtype), w)
+    spec = fmt_mod.get_format(m.fmt)
+    mode = resolve_mode(x, m, mode)
+    if not spec.supports_fused or mode == "dequant":
+        backend = "ref"
+        if not spec.supports_fused:
+            mode = "dequant"  # non-ternary formats only store dense values
+    elif backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
 
-    block, kb, n = m.block, m.kb, m.n
-    qv = decode_values(qt.data["plane2"], qt.data["plane1"], fivelevel=m.fivelevel)
-    qv = qv.astype(compute_dtype)  # (N, KB, block)
+    if backend == "pallas":
+        from repro.kernels.ops import qmatmul_kernel  # lazy: core<->kernels
 
-    if mode == "weights":
-        # Paper path: reconstruct rotated-domain values per tile, inverse-FWHT
-        # the weights, contract. (The Pallas kernel fuses exactly this.)
-        if m.sub_blocks:
-            d = qt.data["scales"].astype(jnp.float32)  # (N, KB, sub)
-            d = jnp.repeat(d, block // m.sub_blocks, axis=-1)
-            vals = d * qv.astype(jnp.float32)
-        else:
-            d = qt.data["scales"].astype(jnp.float32)[..., None]
-            z = qt.data["zps"].astype(jnp.float32)[..., None]
-            vals = d * (qv.astype(jnp.float32) - z)
-        if m.rotate:
-            vals = fwht(vals)
-            dsign = qt.data.get("dsign")
-            if dsign is not None:
-                vals = vals * dsign.astype(vals.dtype)
-        w = vals.reshape(n, kb * block).T.astype(compute_dtype)  # (K_pad, N)
-        xp = _pad_last(x, block).astype(compute_dtype)
-        return jnp.matmul(xp, w)
-
-    # mode == "activations": rotate x blockwise once, contract vs codes.
-    xp = _pad_last(x, block).astype(jnp.float32)
-    *lead, kp = xp.shape
-    xb = xp.reshape(*lead, kb, block)
-    if m.rotate:
-        dsign = qt.data.get("dsign")
-        if dsign is not None:
-            xb = xb * dsign.astype(xb.dtype)  # w = D H v => w.x = v.(H D x)
-        xr = fwht(xb).astype(compute_dtype)  # (..., KB, block)
-        # zero-point correction factor: H 1 = sqrt(block) e_0  ->  x_b[0]
-        x0 = (xb[..., 0] * jnp.sqrt(jnp.float32(block))).astype(compute_dtype)
-    else:
-        # iq3_s no-rotation baseline: contract codes against raw x; the
-        # zero-point couples to sum(x_b) instead.
-        xr = xb.astype(compute_dtype)
-        x0 = jnp.sum(xb, axis=-1).astype(compute_dtype)
-
-    if m.sub_blocks:
-        d = qt.data["scales"].astype(compute_dtype)  # (N, KB, sub)
-        d = jnp.repeat(d, block // m.sub_blocks, axis=-1)  # (N, KB, block)
-        wq = d * qv  # scale lives in rotated domain -> fold into codes
-        y = jnp.einsum("...kb,nkb->...n", xr, wq)
-        return y.astype(compute_dtype)
-
-    d = qt.data["scales"].astype(compute_dtype)  # (N, KB)
-    z = qt.data["zps"].astype(compute_dtype)  # (N, KB)
-    # Main term: sum_b d_b * (q_b . xr_b)
-    wq = d[..., None] * qv  # (N, KB, block)
-    y = jnp.einsum("...kb,nkb->...n", xr, wq)
-    # Zero-point correction: - sum_b d_b z_b * x0_b (see above for x0).
-    corr = jnp.einsum("...k,nk->...n", x0, d * z)
-    return (y - corr).astype(compute_dtype)
+        return qmatmul_kernel(x, qt, mode=mode, tm=tm, tn=tn,
+                              interpret=interpret, out_dtype=compute_dtype)
+    return spec.contract(x, qt, mode=mode, compute_dtype=compute_dtype)

@@ -37,8 +37,10 @@ __all__ = [
     "quantize_blocks_ternary",
     "dequantize_blocks_ternary",
     "pad_reduction_dim",
+    "pad_last_dim",
     "to_blocks",
     "from_blocks",
+    "decode_values",
 ]
 
 DEFAULT_BLOCK = 256
@@ -72,6 +74,18 @@ class QMeta:
     @property
     def kb(self) -> int:
         return self.k_padded // self.block
+
+    def to_dict(self) -> dict[str, Any]:
+        """JSON-safe representation (checkpoint meta.json)."""
+        d = dataclasses.asdict(self)
+        d["shape"] = list(d["shape"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "QMeta":
+        d = dict(d)
+        d["shape"] = tuple(d["shape"])
+        return cls(**d)
 
 
 @functools.partial(
@@ -120,6 +134,18 @@ def pad_reduction_dim(w: jax.Array, block: int) -> jax.Array:
     widths = [(0, 0)] * w.ndim
     widths[-2] = (0, pad)
     return jnp.pad(w, widths)
+
+
+def pad_last_dim(x: jax.Array, to: int) -> jax.Array:
+    """Zero-pad the last axis up to a multiple of ``to`` (activation-side
+    counterpart of :func:`pad_reduction_dim`; shared by the ref and kernel
+    matmul wrappers)."""
+    pad = (-x.shape[-1]) % to
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[-1] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 def to_blocks(w: jax.Array, block: int) -> jax.Array:

@@ -18,7 +18,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QTensor
+from repro.core import formats as fmt_mod
+from repro.core.qlinear import resolve_mode
+from repro.core.quantize import QTensor, pad_last_dim
 from repro.kernels.fwht_kernel import fwht_pallas
 from repro.kernels.itq3_matmul import BLOCK, itq3_matmul_pallas
 
@@ -40,15 +42,6 @@ def blocked_fwht_op(x: jax.Array, block: int = 256, *, interpret: bool | None = 
     return out.reshape(*lead, k)
 
 
-def _pad_last(x: jax.Array, to: int) -> jax.Array:
-    pad = (-x.shape[-1]) % to
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[-1] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 def qmatmul_kernel(
     x: jax.Array,
     qt: QTensor,
@@ -64,19 +57,12 @@ def qmatmul_kernel(
     if interpret is None:
         interpret = auto_interpret()
     m = qt.meta
-    if m.fmt not in ("iq3_s", "itq3_s", "itq3_s_sub", "itq3_x", "quip3"):
+    if not fmt_mod.get_format(m.fmt).supports_fused:
         raise ValueError(f"kernel path supports the ternary family, got {m.fmt}")
-    if m.fmt == "quip3" and mode == "weights":
-        # sign diagonal lives outside the kernel: fold into x (exact dual).
-        pass
 
-    if mode == "auto":
-        rows = 1
-        for d in x.shape[:-1]:
-            rows *= d
-        mode = "activations" if rows <= m.n else "weights"
+    mode = resolve_mode(x, m, mode)
     lead = x.shape[:-1]
-    xp = _pad_last(x.reshape(-1, x.shape[-1]), m.block)
+    xp = pad_last_dim(x.reshape(-1, x.shape[-1]), m.block)
 
     dsign = qt.data.get("dsign")
     rotate = m.rotate

@@ -1,8 +1,20 @@
-"""Serving launcher: quantize a model into an ITQ3_S-family format and run
+"""Serving launcher: quantize a model with a format or QuantPolicy and run
 batched inference through the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
         --fmt itq3_s --requests 8
+
+Mixed-precision serving via a policy (the arch's default recipe, or any
+JSON file with {"rules": [{"pattern": ..., "fmt": ...}, ...]}):
+
+    ... --policy mixed                 # configs.base.mixed_precision_recipe
+    ... --policy recipes/my_policy.json
+
+The quantized tree can be checkpointed and served straight from disk
+(packed planes + QMeta; Algorithm 1 runs once, offline):
+
+    ... --policy mixed --save-quantized /tmp/qckpt     # quantize + save
+    ... --load-quantized /tmp/qckpt                    # boot from planes
 
 Optionally restores trained weights from a checkpoint directory (as written
 by launch/train.py) before quantizing — the full offline pipeline of the
@@ -11,6 +23,7 @@ paper: train/load fp weights -> Algorithm 1 -> deploy packed planes.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -18,12 +31,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_mod
-from repro.configs.base import get_config, reduced as reduced_cfg
+from repro.configs.base import get_config, mixed_precision_recipe, reduced as reduced_cfg
 from repro.models import lm
 from repro.models.layers import Runtime
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.quantized import quantize_params, quantized_bytes
+from repro.serve.quantized import (
+    QuantPolicy, describe_quantized, quantize_params, quantized_bytes,
+)
 from repro.train import loop as train_loop
+
+
+def _load_policy(spec: str, cfg) -> QuantPolicy:
+    if spec == "mixed":
+        return QuantPolicy.from_dict(mixed_precision_recipe(cfg))
+    with open(spec) as f:
+        return QuantPolicy.from_dict(json.load(f))
 
 
 def main() -> None:
@@ -32,9 +54,18 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--fmt", default="itq3_s")
     ap.add_argument("--rule", default="paper")
+    ap.add_argument("--policy", default=None,
+                    help="'mixed' or path to a QuantPolicy JSON; overrides --fmt")
     ap.add_argument("--quant-mode", default="activations",
-                    choices=["activations", "weights", "dequant"])
-    ap.add_argument("--ckpt-dir", default=None)
+                    choices=["activations", "weights", "dequant", "auto"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas"])
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore fp train-state weights before quantizing")
+    ap.add_argument("--save-quantized", default=None,
+                    help="write the quantized param tree as a checkpoint")
+    ap.add_argument("--load-quantized", default=None,
+                    help="serve a previously saved quantized checkpoint")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
@@ -44,24 +75,40 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_cfg(cfg)
-    key = jax.random.PRNGKey(0)
-    params = lm.init_params(key, cfg)
-    if args.ckpt_dir:
-        state = train_loop.init_train_state(key, cfg)
-        state, step = ckpt_mod.restore(args.ckpt_dir, state)
-        params = state.params
-        print(f"restored step-{step} weights from {args.ckpt_dir}")
+    rt = Runtime(compute_dtype=jnp.float32, quant_mode=args.quant_mode,
+                 backend=args.backend)
 
-    fp_bytes = sum(np.prod(x.shape) * 2 for x in jax.tree.leaves(params))
-    t0 = time.time()
-    if args.fmt not in ("fp16", "bf16"):
-        params = quantize_params(params, args.fmt, rule=args.rule)
-    qb = quantized_bytes(params)
-    print(f"quantized to {args.fmt} in {time.time()-t0:.1f}s: "
-          f"{qb/1e6:.1f}MB vs bf16 {fp_bytes/1e6:.1f}MB "
-          f"({fp_bytes/max(qb,1):.2f}x smaller)")
+    if args.load_quantized:
+        t0 = time.time()
+        params, step = ckpt_mod.restore_params(args.load_quantized)
+        print(f"loaded quantized step-{step} tree from {args.load_quantized} "
+              f"in {time.time()-t0:.1f}s ({quantized_bytes(params)/1e6:.1f}MB)")
+    else:
+        key = jax.random.PRNGKey(0)
+        params = lm.init_params(key, cfg)
+        if args.ckpt_dir:
+            state = train_loop.init_train_state(key, cfg)
+            state, step = ckpt_mod.restore(args.ckpt_dir, state)
+            params = state.params
+            print(f"restored step-{step} weights from {args.ckpt_dir}")
 
-    rt = Runtime(compute_dtype=jnp.float32, quant_mode=args.quant_mode)
+        fp_bytes = sum(np.prod(x.shape) * 2 for x in jax.tree.leaves(params))
+        t0 = time.time()
+        if args.policy:
+            policy = _load_policy(args.policy, cfg)
+            params = quantize_params(params, policy)
+            fmts = sorted(set(describe_quantized(params).values()))
+            print(f"policy quantized ({len(policy.rules)} rules -> {fmts})")
+        elif args.fmt not in ("fp16", "bf16"):
+            params = quantize_params(params, args.fmt, rule=args.rule)
+        qb = quantized_bytes(params)
+        print(f"quantized in {time.time()-t0:.1f}s: "
+              f"{qb/1e6:.1f}MB vs bf16 {fp_bytes/1e6:.1f}MB "
+              f"({fp_bytes/max(qb,1):.2f}x smaller)")
+        if args.save_quantized:
+            path = ckpt_mod.save(args.save_quantized, 0, params)
+            print(f"saved quantized tree to {path}")
+
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len, rt=rt)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,

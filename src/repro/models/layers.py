@@ -40,7 +40,8 @@ class Runtime:
 
     compute_dtype: Any = jnp.bfloat16
     quant_mode: str = "activations"  # qmatmul mode for QTensor weights
-    use_kernel: bool = False  # route QTensor matmuls through Pallas kernels
+    backend: str = "auto"  # qmatmul backend: auto | ref | pallas
+    use_kernel: bool = False  # deprecated: force backend="pallas"
     attn_chunk: int = 512  # query-chunk size for softmax attention
     capacity_factor: float = 1.25  # MoE expert capacity factor
     remat: bool = False  # rematerialize each layer (training)
@@ -59,14 +60,15 @@ def shard_hint(x: jax.Array, rt: Runtime, *names: Optional[str]) -> jax.Array:
 
 
 def dense(x: jax.Array, w, rt: Runtime, bias=None) -> jax.Array:
-    """``x @ w (+ bias)`` with QTensor dispatch (the quantization seam)."""
-    if isinstance(w, QTensor):
-        if rt.use_kernel and w.meta.fmt in ("iq3_s", "itq3_s", "itq3_s_sub", "itq3_x", "quip3"):
-            from repro.kernels.ops import qmatmul_kernel  # lazy: avoid cycle
+    """``x @ w (+ bias)`` with QTensor dispatch (the quantization seam).
 
-            y = qmatmul_kernel(x, w, mode=rt.quant_mode, out_dtype=rt.compute_dtype)
-        else:
-            y = qmatmul(x, w, mode=rt.quant_mode, compute_dtype=rt.compute_dtype)
+    The ref-vs-Pallas choice lives inside :func:`qmatmul` — this seam only
+    forwards the Runtime knobs, so every registered format (and every
+    future one) serves through the same line of code."""
+    if isinstance(w, QTensor):
+        backend = "pallas" if rt.use_kernel else rt.backend
+        y = qmatmul(x, w, mode=rt.quant_mode, backend=backend,
+                    compute_dtype=rt.compute_dtype)
     else:
         y = jnp.matmul(x.astype(rt.compute_dtype), w.astype(rt.compute_dtype))
     if bias is not None:

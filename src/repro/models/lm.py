@@ -25,6 +25,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import formats as fmt_mod
+from repro.core.quantize import QTensor
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
@@ -388,7 +390,19 @@ def _run_hybrid(params, x, rt, cfg, *, cache, pos):
 # ===========================================================================
 
 def _embed(params, tokens, rt, cfg):
-    emb = params["embed"].astype(rt.compute_dtype)
+    table = params["embed"]
+    if isinstance(table, QTensor):
+        # a policy quantized the tied table: stored transposed (D, V),
+        # blocked along D, so the tied head can matmul it directly; the
+        # gather path reconstructs the table on the fly — O(D*V) dequant
+        # work per call, comparable to the head matmul it ties to, and the
+        # price of keeping only packed planes resident. The head path
+        # dequantizes the same QTensor; XLA CSE merges the two identical
+        # subexpressions inside one jitted step. Policies that can't pay
+        # the cost should pin embed fp (fmt=None) and quantize lm_head only.
+        emb = fmt_mod.dequantize(table, rt.compute_dtype).T
+    else:
+        emb = table.astype(rt.compute_dtype)
     # table gathers are row-local when D is model-sharded: shard D only
     emb = shard_hint(emb, rt, None, "embed")
     x = jnp.take(emb, tokens, axis=0)
@@ -402,7 +416,10 @@ def _head_weight(params, rt):
     logits every chunk if the contraction dim stayed sharded."""
     w = params.get("lm_head")
     if w is None:
-        w = shard_hint(params["embed"].T, rt, None, "vocab")
+        w = params["embed"]
+        if isinstance(w, QTensor):  # already stored as (D, V): matmul-ready
+            return w
+        w = shard_hint(w.T, rt, None, "vocab")
     return w
 
 

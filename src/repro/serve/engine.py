@@ -54,6 +54,18 @@ class ServeEngine:
         self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("plen",))
         self._jit_decode = jax.jit(self._decode_impl)
 
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, cfg, *, step: Optional[int] = None,
+                        **kw) -> "ServeEngine":
+        """Boot an engine from a bare checkpoint directory — including
+        policy-quantized checkpoints, whose QTensor leaves are rebuilt from
+        their packed planes without re-running Algorithm 1 (the
+        serve-from-disk path of the deployment story)."""
+        from repro.checkpoint import ckpt as ckpt_mod  # lazy: optional dep
+
+        params, _ = ckpt_mod.restore_params(ckpt_dir, step=step)
+        return cls(params, cfg, **kw)
+
     # --- compiled kernels -------------------------------------------------
     def _prefill_impl(self, params, cache, tokens, slot, *, plen):
         """tokens (1, plen) for one slot; returns (cache, last_logits)."""

@@ -2,54 +2,182 @@
 matmul leaves (the offline half of ITQ3_S deployment, paper Algorithm 1
 applied model-wide).
 
-Which leaves quantize: 2-D+ matmul weights (attention/MLP/MoE projections,
-LM head, frontend proj). Which stay fp: norms, biases, decay vectors, conv
-kernels, router (quality-critical, ~0.01% of params), and by default the
-embedding table (gather, not matmul; knob to include it for tied-embedding
-models). Stacked leaves (layers, experts) are quantized with nested vmap so
-block statistics are computed per-matrix exactly as the paper specifies.
+Which leaves quantize — and into which format — is decided by a
+:class:`QuantPolicy`: an ordered list of :class:`QuantRule` entries matched
+against the **full dotted path** of each leaf (``"layers.attn.wq"``,
+``"lm_head"``, ...), first match wins. Each rule carries the target format
+(``fmt=None`` pins the leaf at full precision) plus optional per-rule
+``rule``/``seed``/``sub_blocks`` overrides, so mixed-precision recipes —
+TernaryLLM/Tequila-style "quality-critical projections at higher precision,
+ternarize the rest" — are one declarative, JSON-round-trippable object:
+
+    policy = QuantPolicy.from_dict({"rules": [
+        {"pattern": r"(^|\\.)lm_head$", "fmt": "q8_0"},
+        {"pattern": r"(^|\\.)(gate|up|down)$", "fmt": "itq3_s_sub"},
+        {"pattern": MATMUL_LEAVES, "fmt": "itq3_s"},
+    ]})
+    qparams = quantize_params(params, policy)
+
+Safety rails apply regardless of policy: leaves without ``ndim >= 2`` or
+with a degenerate reduction dim stay fp (norms, biases, decay vectors,
+router — quality-critical, ~0.01% of params). Stacked leaves (layers,
+experts) are quantized with nested vmap so block statistics are computed
+per-matrix exactly as the paper specifies. The embedding table (gathered,
+not matmul'd) is only touched by an explicit ``embed`` rule and is
+quantized transposed, as (V, D) blocks.
+
+``quantize_params(params, "itq3_s")`` — the original uniform-format call —
+keeps working and is expressed as ``QuantPolicy.uniform``.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
-from functools import partial
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import formats
 from repro.core.quantize import QTensor
 
-__all__ = ["quantize_params", "quantized_bytes", "QUANTIZABLE"]
+__all__ = [
+    "QuantRule", "QuantPolicy", "quantize_params", "quantized_bytes",
+    "describe_quantized", "QUANTIZABLE", "MATMUL_LEAVES", "MIN_REDUCTION",
+]
 
-QUANTIZABLE = re.compile(
-    r"(wq|wk|wv|wo|wg|wr|wz|wx|gate|up|down|lm_head|out_proj|cm_k|cm_v|frontend_proj)$")
+# Leaf names of every matmul projection across the model zoo
+# (attention/MLP/MoE projections, LM head, frontend proj), anchored so it
+# can be used inside full-path rules.
+MATMUL_LEAVES = (r"(^|\.)(wq|wk|wv|wo|wg|wr|wz|wx|gate|up|down|lm_head|"
+                 r"out_proj|cm_k|cm_v|frontend_proj)$")
+# Back-compat alias: pre-policy code matched this against bare leaf names.
+QUANTIZABLE = re.compile(MATMUL_LEAVES)
 MIN_REDUCTION = 64  # don't quantize degenerate tiny projections
 
 
-def _leaf_name(path) -> str:
-    return str(getattr(path[-1], "key", getattr(path[-1], "name", path[-1])))
+@dataclasses.dataclass(frozen=True)
+class QuantRule:
+    """One policy entry: regex over the full dotted leaf path -> format.
+
+    ``fmt=None`` pins matching leaves at full precision (an explicit "keep
+    the router fp" is an early ``fmt=None`` rule). ``rule``/``seed``/
+    ``sub_blocks`` override the policy-wide defaults for matching leaves;
+    ``sub_blocks`` is honoured by the ternary family (finer scale
+    granularity on selected layers)."""
+
+    pattern: str
+    fmt: Optional[str]
+    rule: Optional[str] = None  # scale rule: "paper" | "lloyd"
+    seed: Optional[int] = None
+    sub_blocks: Optional[int] = None
+
+    def __post_init__(self):
+        re.compile(self.pattern)  # fail fast on bad patterns
+        if self.fmt is not None:
+            spec = formats.get_format(self.fmt)  # fail fast on unknown formats
+            if self.sub_blocks is not None and not isinstance(
+                    spec, formats.TernaryFormat):
+                raise ValueError(
+                    f"rule {self.pattern!r}: sub_blocks override requires a "
+                    f"ternary format, got {self.fmt!r}")
+
+    def matches(self, path: str) -> bool:
+        return re.search(self.pattern, path) is not None
+
+    def to_dict(self) -> dict[str, Any]:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None or k in ("pattern", "fmt")}
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "QuantRule":
+        return cls(**d)
 
 
-def quantize_params(params, fmt: str = "itq3_s", *, rule: str = "paper",
-                    include_embed: bool = False, seed: int = 0):
-    """Map over the param tree quantizing matmul leaves into ``fmt``."""
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Ordered quantization rules; first matching rule decides each leaf.
 
-    def q2d(w):
-        return formats.quantize(w, fmt, rule=rule, seed=seed)
+    Leaves matched by no rule stay full precision. ``rule``/``seed`` are the
+    defaults a :class:`QuantRule` can override per-entry."""
+
+    rules: tuple[QuantRule, ...] = ()
+    rule: str = "paper"
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(
+            r if isinstance(r, QuantRule)
+            else QuantRule(**r) if isinstance(r, dict)
+            else QuantRule(*r)
+            for r in self.rules))
+
+    # --- construction ---------------------------------------------------
+    @classmethod
+    def uniform(cls, fmt: str, *, rule: str = "paper", seed: int = 0,
+                include_embed: bool = False) -> "QuantPolicy":
+        """The pre-policy behavior: every matmul projection -> ``fmt``."""
+        rules = [QuantRule(MATMUL_LEAVES, fmt)]
+        if include_embed:
+            rules.append(QuantRule(r"(^|\.)embed$", fmt))
+        return cls(tuple(rules), rule=rule, seed=seed)
+
+    # --- lookup ---------------------------------------------------------
+    def match(self, path: str) -> Optional[QuantRule]:
+        for r in self.rules:
+            if r.matches(path):
+                return r
+        return None
+
+    # --- serialization --------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return {"rules": [r.to_dict() for r in self.rules],
+                "rule": self.rule, "seed": self.seed}
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "QuantPolicy":
+        return cls(tuple(QuantRule.from_dict(r) for r in d.get("rules", ())),
+                   rule=d.get("rule", "paper"), seed=d.get("seed", 0))
+
+
+def _dotted(path) -> str:
+    return ".".join(
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+        for p in path)
+
+
+def quantize_params(params, fmt: "str | QuantPolicy" = "itq3_s", *,
+                    rule: str = "paper", include_embed: bool = False,
+                    seed: int = 0):
+    """Map over the param tree quantizing leaves per policy.
+
+    ``fmt`` is either a format name (uniform policy over all matmul
+    projections — the original API) or a :class:`QuantPolicy`."""
+    policy = fmt if isinstance(fmt, QuantPolicy) else QuantPolicy.uniform(
+        fmt, rule=rule, seed=seed, include_embed=include_embed)
 
     def visit(path, leaf):
-        name = _leaf_name(path)
         if not hasattr(leaf, "ndim"):
             return leaf
-        if name == "embed" and include_embed:
-            # table is gathered, not matmul'd: quantize as (V, D) blocks
-            return formats.quantize(leaf.T, fmt, rule=rule, seed=seed)
-        if not QUANTIZABLE.search(name):
+        dotted = _dotted(path)
+        r = policy.match(dotted)
+        if r is None or r.fmt is None:
             return leaf
+        spec = formats.get_format(r.fmt)
+        kwargs: dict[str, Any] = dict(rule=r.rule or policy.rule,
+                                      seed=policy.seed if r.seed is None else r.seed)
+        if r.sub_blocks is not None:
+            kwargs["sub_blocks"] = r.sub_blocks
+
+        is_embed = dotted.split(".")[-1] == "embed"
+        if is_embed:
+            # table is gathered, not matmul'd: quantize as (V, D) blocks
+            if leaf.ndim != 2:
+                return leaf
+            return spec.quantize(leaf.T, **kwargs)
         if leaf.ndim < 2 or leaf.shape[-2] < MIN_REDUCTION:
             return leaf
-        fn = q2d
+
+        fn = lambda w: spec.quantize(w, **kwargs)
         for _ in range(leaf.ndim - 2):
             fn = jax.vmap(fn)
         return fn(leaf)
@@ -66,3 +194,18 @@ def quantized_bytes(params) -> int:
         elif hasattr(leaf, "nbytes"):
             total += leaf.nbytes
     return total
+
+
+def describe_quantized(params) -> dict[str, str]:
+    """{dotted path: format name} for every quantized leaf — the audit view
+    of what a policy actually did (examples/benchmarks print this)."""
+    out: dict[str, str] = {}
+
+    def visit(path, leaf):
+        if isinstance(leaf, QTensor):
+            out[_dotted(path)] = leaf.meta.fmt
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, QTensor))
+    return out

@@ -1,0 +1,75 @@
+"""Use hypothesis when installed; otherwise a tiny deterministic fallback.
+
+``hypothesis`` is a declared dev dependency (pyproject.toml), but the
+property tests should still *run* — not error at collection — on minimal
+environments (e.g. the CPU container that only has jax + numpy). The
+fallback drives each ``@given`` test with ``max_examples`` seeded draws, so
+the same invariants are exercised, just without shrinking or example
+databases.
+
+Only the strategy surface this suite uses is implemented:
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw  # draw(rng) -> value
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value, max_value,
+                                                      endpoint=True)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[int(r.integers(len(elements)))])
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # strategies fill the TRAILING parameters (by name, so fixtures
+            # pytest passes as keywords can't collide with the draws);
+            # expose only the leading params so pytest doesn't look for
+            # fixtures named like the drawn ones.
+            params = list(inspect.signature(fn).parameters.values())
+            drawn = [p.name for p in params[len(params) - len(strategies):]]
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", 20)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    draws = {nm: s.draw(rng)
+                             for nm, s in zip(drawn, strategies)}
+                    fn(*args, **kwargs, **draws)
+
+            runner.__signature__ = inspect.Signature(
+                params[:len(params) - len(strategies)])
+            del runner.__wrapped__  # don't let pytest unwrap to fn
+            return runner
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -3,7 +3,7 @@ matmul forms (Theorem 2's epsilon_FWHT is what bounds the tolerances)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import fwht as F
 

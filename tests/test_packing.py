@@ -1,7 +1,7 @@
 """Planar 3-bit packing (96 B / 256 weights, the paper's storage budget)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import packing
 

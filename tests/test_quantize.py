@@ -3,7 +3,7 @@ benefit on heavy-tailed weights, bpw accounting, qlinear mode agreement."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import formats, grids, qlinear
 from repro.core.quantize import QTensor, to_blocks, from_blocks

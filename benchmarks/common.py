@@ -8,8 +8,10 @@ between formats (Table 1) and block sizes (Table 3), not absolute PPL.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +28,81 @@ CACHE_DIR = os.environ.get("BENCH_CACHE", "/tmp/repro_bench_cache")
 RT = Runtime(compute_dtype=jnp.float32)
 TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "300"))
 
+BENCH_SCHEMA = "repro.bench.v1"
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parents[1]
+
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+class BenchSuite:
+    """Machine-readable bench emission: collects records and writes the
+    repo-root ``BENCH_<suite>.json`` that tracks the perf trajectory across
+    PRs (see ROADMAP.md). Also mirrors each record to the legacy CSV."""
+
+    def __init__(self, suite: str, *, smoke: bool = False):
+        self.suite = suite
+        self.smoke = smoke
+        self.records: list[dict] = []
+
+    def add(self, name: str, us_per_call: float | None = None, **metrics):
+        rec: dict = {"name": name, "metrics": metrics}
+        if us_per_call is not None:
+            rec["us_per_call"] = round(float(us_per_call), 2)
+        self.records.append(rec)
+        derived = " ".join(f"{k}={v}" for k, v in metrics.items())
+        emit(name, us_per_call if us_per_call is not None else float("nan"),
+             derived)
+        return rec
+
+    def write(self, path: str | Path | None = None) -> Path:
+        path = Path(path) if path else repo_root() / f"BENCH_{self.suite}.json"
+        doc = {
+            "schema": BENCH_SCHEMA,
+            "suite": self.suite,
+            "smoke": self.smoke,
+            "device": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "jax_version": jax.__version__,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "records": self.records,
+        }
+        validate_bench_doc(doc)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        return path
+
+
+def validate_bench_doc(doc: dict) -> None:
+    """Schema check for BENCH_*.json (raises ValueError). Used by the CI
+    bench-smoke job so a malformed trajectory file fails the build."""
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"bad schema tag: {doc.get('schema')!r}")
+    for field in ("suite", "device", "records"):
+        if field not in doc:
+            raise ValueError(f"missing field {field!r}")
+    if not isinstance(doc["records"], list) or not doc["records"]:
+        raise ValueError("records must be a non-empty list")
+    for rec in doc["records"]:
+        if not isinstance(rec.get("name"), str):
+            raise ValueError(f"record without name: {rec!r}")
+        if "us_per_call" in rec and not isinstance(
+                rec["us_per_call"], (int, float)):
+            raise ValueError(f"non-numeric us_per_call in {rec['name']}")
+        if not isinstance(rec.get("metrics", {}), dict):
+            raise ValueError(f"metrics must be a dict in {rec['name']}")
+
+
+def load_and_validate(path: str | Path) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_bench_doc(doc)
+    return doc
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -1,12 +1,14 @@
 """Kernel microbenchmarks: Pallas (interpret) vs reference paths, plus the
 analytic VMEM/roofline accounting for the fused kernel on TPU v5e.
 
-Interpret-mode wall times are NOT TPU times — the derived column carries
+Interpret-mode wall times are NOT TPU times — the derived metrics carry
 the structural numbers that transfer: bytes streamed per output tile,
 VMEM working set, and arithmetic intensity of the fused kernel vs the
 dequant-then-matmul baseline.
 
-CSV: name,us_per_call,derived
+Emits ``BENCH_kernels.json`` at the repo root (schema: benchmarks/common.py)
+so every perf PR is measured against its predecessors, and mirrors the
+legacy ``name,us_per_call,derived`` CSV to stdout.
 """
 from __future__ import annotations
 
@@ -16,8 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import BenchSuite, timeit
 from repro.core import formats, qlinear
+from repro.kernels import autotune
+from repro.kernels.itq3_matvec import MATVEC_MAX_M
 
 BLOCK = 256
 
@@ -31,34 +35,62 @@ def kernel_accounting(m, n, k, tm, tn, bpw=3.125):
     flops = 2 * m * n * k + 2 * n * k * BLOCK  # matmul + in-kernel rotation
     vmem = (tm * BLOCK * 4 + tn * (64 + 32 + 8) + BLOCK * BLOCK * 4
             + tm * tn * 4 + tn * BLOCK * 4)
-    ai = flops / (wbytes * (m // tm) + xbytes * (n // tn) + obytes)
+    # ceil-div: ragged shapes still stream a full tile per partial tile
+    # (floor-div undercounted, or zeroed the traffic outright for m < tm)
+    m_tiles = -(-m // tm)
+    n_tiles = -(-n // tn)
+    ai = flops / (wbytes * m_tiles + xbytes * n_tiles + obytes)
     return wbytes, vmem, ai
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    suite = BenchSuite("kernels", smoke=smoke)
     rng = np.random.default_rng(0)
-    for (m, n, k) in [(8, 2048, 2048), (256, 2048, 2048)]:
+    shapes = [(8, 512, 512)] if smoke else [(8, 2048, 2048), (256, 2048, 2048)]
+    iters = 1 if smoke else 2
+    for (m, n, k) in shapes:
         w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
         x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         qt = formats.quantize(w, "itq3_s")
+        tm, tn = autotune.get_tiles(m, n, k, "itq3_s", interpret=True)
+        tm = min(tm, m)
+        kernel_name = "matvec" if m <= MATVEC_MAX_M else "tiled"
 
         ref = jax.jit(functools.partial(qlinear.qmatmul, mode="dequant",
                                         compute_dtype=jnp.float32))
-        us_ref = timeit(ref, x, qt, iters=2)
-        wb, vmem, ai = kernel_accounting(m, n, k, min(m, 256), 256)
-        emit(f"kernel/ref_dequant_m{m}", us_ref,
-             f"streams_full_bf16_weights={2*k*n/1e6:.1f}MB")
+        us_ref = timeit(ref, x, qt, iters=iters)
+        wb, vmem, ai = kernel_accounting(m, n, k, tm, tn)
+        suite.add(f"kernel/ref_dequant_m{m}", us_ref,
+                  streams_full_bf16_weights_mb=round(2 * k * n / 1e6, 1))
         us_k = timeit(functools.partial(qlinear.qmatmul, mode="weights",
-                                        backend="pallas", interpret=True,
-                                        tm=min(m, 256), tn=256), x, qt, iters=1)
-        emit(f"kernel/fused_weights_m{m}", us_k,
-             f"streams_packed={k*n*3.125/8/1e6:.1f}MB vmem_tile={vmem/1024:.0f}KB "
-             f"arith_intensity={ai:.1f}flops/B (interpret-mode walltime)")
+                                        backend="pallas", interpret=True),
+                      x, qt, iters=1)
+        suite.add(f"kernel/fused_weights_m{m}", us_k,
+                  kernel=kernel_name, tm=tm, tn=tn,
+                  bytes_streamed_packed_mb=round(k * n * 3.125 / 8 / 1e6, 2),
+                  vmem_tile_kb=round(vmem / 1024),
+                  arith_intensity_flops_per_byte=round(ai, 1),
+                  note="interpret-mode walltime")
         us_a = timeit(functools.partial(qlinear.qmatmul, mode="activations",
-                                        backend="pallas", interpret=True,
-                                        tm=min(m, 256), tn=256), x, qt, iters=1)
-        emit(f"kernel/fused_activations_m{m}", us_a,
-             f"rotations_per_matmul={k//BLOCK} (vs {n*k//BLOCK//BLOCK} weight-side)")
+                                        backend="pallas", interpret=True),
+                      x, qt, iters=1)
+        suite.add(f"kernel/fused_activations_m{m}", us_a,
+                  kernel=kernel_name,
+                  rotations_per_matmul=k // BLOCK,
+                  weight_side_rotations=n * k // BLOCK // BLOCK)
+        if m > MATVEC_MAX_M:
+            # hoisted-vs-flat: the weight-tile reuse win at prefill widths
+            from repro.kernels.itq3_matmul import itq3_matmul_pallas
+            args = (x, qt.data["plane2"], qt.data["plane1"],
+                    qt.data["scales"], qt.data["zps"])
+            for hoist in (True, False):
+                fn = functools.partial(itq3_matmul_pallas, tm=128, tn=tn,
+                                       interpret=True, hoist=hoist)
+                us_h = timeit(fn, *args, iters=1)
+                suite.add(f"kernel/tiled_m{m}_hoist_{hoist}", us_h,
+                          tile_expansions=(n // tn) * (k // BLOCK)
+                          * (1 if hoist else -(-m // 128)))
+    suite.write()
 
 
 if __name__ == "__main__":

@@ -1,13 +1,20 @@
-"""Benchmark harness entry point: one module per paper table/figure.
+"""Benchmark harness entry point: one module per paper table/figure, plus
+the perf-trajectory suites.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+    PYTHONPATH=src python -m benchmarks.run [--only table1,...] [--smoke]
 
-Emits ``name,us_per_call,derived`` CSV rows (stdout). The quality tables
-train/cache a small model on first run (see benchmarks/common.py).
+Emits ``name,us_per_call,derived`` CSV rows (stdout); the ``kernel`` and
+``serve`` suites additionally write machine-readable ``BENCH_kernels.json``
+and ``BENCH_serve.json`` at the repo root — the perf record every future
+PR is measured against (ROADMAP.md bench-trajectory convention).
+
+``--smoke`` runs only the JSON-emitting suites at reduced sizes — the CI
+bench job (fast, validates schema, uploads artifacts).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -18,7 +25,9 @@ MODULES = [
     ("table3", "benchmarks.table3_blocksize"),
     ("theory", "benchmarks.theory_smoothing"),
     ("kernel", "benchmarks.kernel_bench"),
+    ("serve", "benchmarks.serve_bench"),
 ]
+SMOKE_MODULES = ("kernel", "serve")
 
 
 def main() -> None:
@@ -26,8 +35,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                          + ",".join(name for name, _ in MODULES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-size run of the BENCH_*.json suites only")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke and only is None:
+        only = set(SMOKE_MODULES)
 
     print("name,us_per_call,derived")
     failed = []
@@ -37,7 +50,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["main"])
-            mod.main()
+            if "smoke" in inspect.signature(mod.main).parameters:
+                mod.main(smoke=args.smoke)
+            else:
+                mod.main()
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failed.append(name)

@@ -1,0 +1,113 @@
+"""Serve-path benchmark: the decode hot loop, measured end to end.
+
+Runs the continuous-batching engine on a reduced model (random init — this
+measures plumbing, not quality) in both sampling modes:
+
+  * ``host``   — the pre-overhaul decode discipline: logits shipped out of
+    the jitted step, one host argmax (= one device->host sync) per active
+    slot per step.
+  * ``device`` — the overhauled path: sampling inside the jitted decode,
+    one (slots,) token-vector transfer per step.
+
+and records tok/s, wall seconds, host syncs per decoded token, and the
+derived speedup. Greedy decoding makes the two modes token-identical, which
+is asserted — a perf number for a wrong answer is worthless.
+
+Each engine is run once untimed (jit warmup) and then timed on a fresh
+request batch; engines are reused across batches so compile time never
+lands in the measurement.
+
+Emits ``BENCH_serve.json`` at the repo root (schema: benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchSuite
+from repro.configs.base import get_config, reduced
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.quantized import quantize_params
+
+RT = Runtime(compute_dtype=jnp.float32)
+
+
+def _requests(n: int, vocab: int, max_new: int, seed: int) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, vocab, size=6 + i % 5),
+                    max_new=max_new) for i in range(n)]
+
+
+def _run_mode(params, cfg, *, sample_on_host: bool, slots: int,
+              n_requests: int, max_new: int, max_len: int, repeats: int = 3):
+    eng = ServeEngine(params, cfg, slots=slots, max_len=max_len, rt=RT,
+                      sample_on_host=sample_on_host)
+    eng.run(_requests(n_requests, cfg.vocab_size, max_new, seed=1))  # warmup
+    walls, out, tokens = [], None, 0
+    syncs0, toks0 = eng.host_syncs, eng.tokens_decoded
+    for _ in range(repeats):  # median over repeats: CPU walltime is noisy
+        reqs = _requests(n_requests, cfg.vocab_size, max_new, seed=2)
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        walls.append(time.perf_counter() - t0)
+        tokens = sum(len(r.out) for r in done)
+        cur = [r.out for r in done]
+        assert out is None or out == cur, "engine run is not deterministic"
+        out = cur
+    wall = float(np.median(walls))
+    return {
+        "wall_s": wall,
+        "tokens": tokens,
+        "tok_s": tokens / wall,
+        "host_syncs": (eng.host_syncs - syncs0) // repeats,
+        "syncs_per_token": (eng.host_syncs - syncs0) / max(
+            eng.tokens_decoded - toks0, 1),
+        "out": out,
+    }
+
+
+def main(smoke: bool = False) -> None:
+    suite = BenchSuite("serve", smoke=smoke)
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params(params, "itq3_s")
+
+    slots = 4
+    n_requests = 4 if smoke else 8
+    max_new = 8 if smoke else 24
+    max_len = 64
+
+    results = {}
+    for mode in ("host", "device"):
+        r = _run_mode(qparams, cfg, sample_on_host=(mode == "host"),
+                      slots=slots, n_requests=n_requests, max_new=max_new,
+                      max_len=max_len, repeats=1 if smoke else 3)
+        results[mode] = r
+        suite.add(f"serve/decode_{mode}_sampling",
+                  us_per_call=1e6 * r["wall_s"] / max(r["tokens"], 1),
+                  tok_s=round(r["tok_s"], 2),
+                  wall_s=round(r["wall_s"], 3),
+                  tokens=r["tokens"],
+                  host_syncs=r["host_syncs"],
+                  syncs_per_token=round(r["syncs_per_token"], 3),
+                  slots=slots)
+
+    if results["host"]["out"] != results["device"]["out"]:
+        raise AssertionError("greedy decode diverged between sampling modes")
+    host, dev = results["host"], results["device"]
+    suite.add("serve/device_vs_host",
+              speedup_wall=round(host["wall_s"] / dev["wall_s"], 3),
+              syncs_reduction=round(
+                  host["syncs_per_token"] / max(dev["syncs_per_token"], 1e-9),
+                  2),
+              tokens_match=True)
+    suite.write()
+
+
+if __name__ == "__main__":
+    main()

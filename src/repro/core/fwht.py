@@ -48,15 +48,27 @@ def _hadamard_np(n: int) -> np.ndarray:
     return h
 
 
+@functools.lru_cache(maxsize=32)
+def _hadamard_jnp(n: int, dtype_name: str, normalized: bool) -> jax.Array:
+    h = _hadamard_np(n)
+    if normalized:
+        h = h / np.sqrt(n)
+    # first call may happen inside a jit trace: materialize eagerly so the
+    # cache holds a committed device constant, never a tracer
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(h, dtype=dtype_name)
+
+
 def hadamard_matrix(n: int, dtype=jnp.float32, normalized: bool = True) -> jax.Array:
     """Normalized (or raw +-1) Walsh-Hadamard matrix H_n.
 
     ``H_n @ H_n = I`` when normalized. Symmetric: ``H_n.T == H_n``.
+
+    The device constant is cached per (n, dtype, normalized): every kernel
+    trace closes over the same committed array instead of rebuilding and
+    re-staging the 256x256 constant per trace.
     """
-    h = _hadamard_np(n)
-    if normalized:
-        h = h / np.sqrt(n)
-    return jnp.asarray(h, dtype=dtype)
+    return _hadamard_jnp(n, np.dtype(dtype).name, normalized)
 
 
 def fwht(x: jax.Array, *, normalized: bool = True) -> jax.Array:

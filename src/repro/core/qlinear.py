@@ -59,14 +59,18 @@ def qmatmul(
     mode: str = "activations",
     backend: str = "auto",
     compute_dtype=jnp.bfloat16,
-    tm: int = 256,
-    tn: int = 256,
+    tm: int | None = None,
+    tn: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``x (..., K) @ W_hat (K, N) -> (..., N)`` for a quantized weight.
 
     ``tm``/``tn``/``interpret`` only affect the Pallas backend (tile sizes
-    and interpret-mode override for CPU testing).
+    and interpret-mode override for CPU testing). ``tm=None``/``tn=None``
+    resolve through :mod:`repro.kernels.autotune`: the cached per-device
+    winner for this shape if one exists, deterministic defaults otherwise
+    (always, in interpret mode). The kernel wrapper additionally dispatches
+    small-M calls to the decode-shaped matvec kernel by shape.
     """
     m = qt.meta
     if len(m.shape) != 2:

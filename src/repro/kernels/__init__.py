@@ -5,8 +5,14 @@
                    shared-memory butterfly, DESIGN.md §2)
   itq3_matmul.py   fused unpack -> dequant -> rotate -> matmul for the
                    ITQ3_S format family (the paper's load_tiles_itq3_s +
-                   MMQ pipeline as one pallas_call)
-  ops.py           jitted public wrappers (auto interpret on CPU)
+                   MMQ pipeline as one pallas_call); flat + weight-hoisted
+                   grid schedules
+  itq3_matvec.py   decode-shaped small-M specialization (N-major plane
+                   streaming, no M tiling); bit-identical to itq3_matmul
+  autotune.py      benchmark-driven (tm, tn) tile selection with an
+                   on-disk per-device JSON cache
+  ops.py           jitted public wrappers (auto interpret on CPU; shape
+                   dispatch between matvec and tiled kernels)
   ref.py           pure-jnp oracles; every kernel is allclose-swept
                    against these in tests/test_kernels.py
 """

@@ -1,0 +1,214 @@
+"""Benchmark-driven (tm, tn) tile selection with an on-disk JSON cache.
+
+The fused kernels take tile sizes as static arguments; the best choice
+depends on the matmul shape, format, and the device generation — exactly
+the knobs a human would sweep by hand. This module owns that sweep:
+
+  * :func:`get_tiles` — the *lookup* used by ``qmatmul(..., tm=None)``:
+    returns the cached winner for (device_kind, backend, fmt, M, N, K), or
+    the deterministic defaults (DEFAULT_TM, DEFAULT_TN) on a miss. Pure
+    lookup — never benchmarks — so it is safe to call at trace time, and in
+    interpret mode (no real accelerator; timings would be meaningless) it
+    is the *only* path: interpret keys never get benchmarked entries unless
+    a caller explicitly forces tuning (tests do, on tiny shapes).
+  * :func:`autotune` — the *sweep*: times the real kernel over the
+    candidate lattice and records the winner in the cache file.
+  * :func:`tune_params_shapes` — eager whole-model warmup: collect every
+    QTensor matmul shape in a param tree and tune each at batch M. Wired to
+    ``ServeEngine`` via ``Runtime(autotune=True)`` and to
+    ``launch/serve.py --autotune``.
+
+Cache file: ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``,
+keyed per device kind so one home directory can serve CPU + several TPU
+generations. M is bucketed (matvec regime below MATVEC_MAX_M, else next
+power of two) so a decode shape tuned at 4 slots also serves 3.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+__all__ = [
+    "DEFAULT_TM", "DEFAULT_TN", "get_tiles", "record", "autotune",
+    "tune_params_shapes", "cache_path", "clear_memory_cache", "candidates",
+]
+
+DEFAULT_TM = 256
+DEFAULT_TN = 256
+_TM_LADDER = (8, 16, 32, 64, 128, 256)
+_TN_LADDER = (64, 128, 256, 512)
+
+_mem_cache: Optional[dict] = None
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process cache so the next lookup re-reads the file."""
+    global _mem_cache
+    _mem_cache = None
+
+
+def _load() -> dict:
+    global _mem_cache
+    if _mem_cache is None:
+        p = cache_path()
+        try:
+            with open(p) as f:
+                _mem_cache = json.load(f)
+        except (OSError, ValueError):
+            _mem_cache = {}
+    return _mem_cache
+
+
+def _save(cache: dict) -> None:
+    p = cache_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+
+
+def device_kind(interpret: bool = False) -> str:
+    if interpret:
+        return "interpret"
+    return jax.devices()[0].device_kind.replace(" ", "_")
+
+
+def _bucket_m(m: int) -> int:
+    """Round M up so nearby batch sizes share one tuned entry."""
+    from repro.kernels.itq3_matvec import MATVEC_MAX_M
+
+    if m <= MATVEC_MAX_M:
+        return MATVEC_MAX_M  # matvec regime: tm is M itself, only tn matters
+    b = MATVEC_MAX_M
+    while b < m:
+        b *= 2
+    return b
+
+
+def _key(m: int, n: int, k: int, fmt: str, *, backend: str,
+         interpret: bool) -> str:
+    return f"{device_kind(interpret)}|{backend}|{fmt}|m{_bucket_m(m)}|n{n}|k{k}"
+
+
+def candidates(m: int, n: int, k: int) -> list[tuple[int, int]]:
+    """The (tm, tn) lattice worth sweeping for this shape."""
+    from repro.kernels.itq3_matvec import MATVEC_MAX_M
+
+    tms = [t for t in _TM_LADDER if t <= max(m, 8)] or [max(m, 1)]
+    if m <= MATVEC_MAX_M:
+        tms = [m]  # matvec kernel: no M tiling
+    tns = [t for t in _TN_LADDER if t <= n] or [n]
+    return [(tm, tn) for tm in tms for tn in tns]
+
+
+def get_tiles(m: int, n: int, k: int, fmt: str, *, backend: str = "pallas",
+              interpret: bool = False) -> tuple[int, int]:
+    """Cached winner for this shape, or the deterministic defaults.
+
+    Never benchmarks — interpret mode (and any untuned shape) always
+    resolves to (DEFAULT_TM, DEFAULT_TN); the kernels clamp to the actual
+    M/N, so the defaults are shape-safe everywhere.
+    """
+    ent = _load().get(_key(m, n, k, fmt, backend=backend, interpret=interpret))
+    if ent:
+        return int(ent["tm"]), int(ent["tn"])
+    return DEFAULT_TM, DEFAULT_TN
+
+
+def record(m: int, n: int, k: int, fmt: str, tm: int, tn: int, *,
+           backend: str = "pallas", interpret: bool = False,
+           us: Optional[float] = None, save: bool = True) -> str:
+    """Store a winner (used by :func:`autotune` and by tests)."""
+    cache = _load()
+    key = _key(m, n, k, fmt, backend=backend, interpret=interpret)
+    cache[key] = {"tm": int(tm), "tn": int(tn)}
+    if us is not None:
+        cache[key]["us"] = round(float(us), 2)
+    if save:
+        _save(cache)
+    return key
+
+
+def _time_call(fn, iters: int = 3) -> float:
+    for _ in range(1):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def autotune(m: int, n: int, k: int, fmt: str = "itq3_s", *,
+             mode: str = "weights", interpret: Optional[bool] = None,
+             iters: int = 3, save: bool = True,
+             force_interpret_bench: bool = False) -> tuple[int, int]:
+    """Benchmark the candidate lattice for one shape and cache the winner.
+
+    In interpret mode the sweep is skipped (timings there measure the
+    Pallas interpreter, not hardware) and the defaults are returned —
+    unless ``force_interpret_bench`` (tests, tiny shapes only).
+    """
+    from repro.core import formats
+    from repro.kernels.ops import auto_interpret, qmatmul_kernel
+
+    if interpret is None:
+        interpret = auto_interpret()
+    if interpret and not force_interpret_bench:
+        return DEFAULT_TM, DEFAULT_TN
+
+    rng = np.random.default_rng(0)
+    w = np.asarray(rng.normal(size=(k, n)) * 0.02, np.float32)
+    x = np.asarray(rng.normal(size=(m, k)), np.float32)
+    qt = formats.quantize(w, fmt)
+
+    best, best_us = (DEFAULT_TM, DEFAULT_TN), float("inf")
+    for tm, tn in candidates(m, n, k):
+        us = _time_call(
+            lambda: qmatmul_kernel(x, qt, mode=mode, tm=tm, tn=tn,
+                                   interpret=interpret), iters=iters)
+        if us < best_us:
+            best, best_us = (tm, tn), us
+    record(m, n, k, fmt, *best, interpret=interpret, us=best_us, save=save)
+    return best
+
+
+def tune_params_shapes(params, m: int, *, interpret: Optional[bool] = None,
+                       **kw) -> list[tuple[int, int, int, str]]:
+    """Tune every distinct QTensor matmul shape in ``params`` at batch M.
+
+    Returns the list of (m, n, k, fmt) shapes tuned; empty in interpret
+    mode (CPU serving keeps the deterministic defaults).
+    """
+    from repro.core.quantize import QTensor
+    from repro.kernels.ops import auto_interpret
+
+    if interpret is None:
+        interpret = auto_interpret()
+    if interpret:
+        return []
+    shapes = set()
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor) and len(leaf.meta.shape) == 2:
+            shapes.add((leaf.meta.shape[0], leaf.meta.n, leaf.meta.fmt))
+    tuned = []
+    for k, n, fmt in sorted(shapes):
+        autotune(m, n, k, fmt, interpret=interpret, **kw)
+        tuned.append((m, n, k, fmt))
+    return tuned

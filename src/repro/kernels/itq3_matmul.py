@@ -4,7 +4,7 @@ The TPU analogue of the paper's ``load_tiles_itq3_s`` + MMQ pipeline (§5.2):
 packed 3-bit weights stream from HBM at 3.125 bits/weight and are expanded
 to a full-precision weight tile *inside VMEM*, never materialized in HBM.
 
-Per grid cell (i, j, k) — output tile (i, j), reduction block k:
+Per weight tile (output strip j, reduction block k) the expansion is:
 
   1. **Load** the packed planes for TN output features of block k:
      ``plane2`` (TN, 64) uint8 and ``plane1`` (TN, 32) uint8 — 96 bytes per
@@ -19,18 +19,37 @@ Per grid cell (i, j, k) — output tile (i, j), reduction block k:
      of H_256 — replacing the CUDA 8-stage shared-memory butterfly with
      systolic-array passes (DESIGN.md §2), and avoiding any in-kernel
      reshape of the unpacked chunks.
-  5. **Accumulate** ``acc += x_tile @ w_tile^T`` in f32 scratch; the output
-     tile is written once at k == KB-1.
 
-With ``rotate_weights=False`` the same kernel contracts the dequantized
-codes directly — used both for the IQ3_S no-rotation baseline and for the
-beyond-paper *activation-domain* path (ops.py rotates x blockwise first;
-the zero-point then couples in the rotated domain with no extra term since
-z is folded into the dequantized tile).
+That expansion is the expensive part of the kernel, and it depends only on
+(j, k) — never on the M tile. Two grid schedules share it:
+
+* **flat** (grid ``(MB, NB, KB)``, K innermost): the tile is expanded per
+  (i, j, k) cell — no extra scratch, but the same weight tile is re-decoded
+  and re-rotated for every M tile. Used when M fits one tile (decode) or
+  when the hoist scratch would not fit VMEM.
+* **hoisted** (grid ``(NB, MB, KB)``, K innermost, M middle): a
+  (KB, TN, 256) VMEM scratch caches the expanded strip for the current j;
+  it is filled once at i == 0 and *reused* by every subsequent M tile —
+  prefill-width batches stop paying MB redundant unpack+dequant+IFWHT
+  passes per weight strip. Requires the grid to execute sequentially
+  (TPU grids and interpret mode both do).
+
+Both schedules accumulate ``acc += x_tile @ w_tile^T`` in (TM, TN) f32
+scratch with K innermost and flush the output tile once at k == KB-1, and
+both consume the expanded tile through one dot per k-block — so they are
+bit-identical to each other (and to kernels/itq3_matvec.py, which uses the
+same ``dequant_rotate_tile`` helper in the same order).
+
+With ``rotate_weights=False`` the same pipeline skips step 4 — used both
+for the IQ3_S no-rotation baseline and for the beyond-paper
+*activation-domain* path (ops.py rotates x blockwise first; the zero-point
+then couples in the rotated domain with no extra term since z is folded
+into the dequantized tile).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +58,16 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fwht import hadamard_matrix
 
-__all__ = ["itq3_matmul_pallas"]
+__all__ = ["itq3_matmul_pallas", "dequant_rotate_tile", "pad_packed_n",
+           "BLOCK"]
 
 BLOCK = 256
 NCHUNK = 4  # 256 = 4 chunks of 64 (one per 2-bit position in a plane2 byte)
 CHUNK = BLOCK // NCHUNK  # 64
+
+# Hoisting caches the expanded (KB, TN, 256) f32 weight strip in VMEM;
+# don't hoist past this budget (leaves room for x/acc/H tiles in ~16MB VMEM).
+HOIST_VMEM_BUDGET = int(os.environ.get("REPRO_HOIST_VMEM_BUDGET", 8 * 2**20))
 
 
 def _decode_chunk(p2, p1, c: int, *, fivelevel: bool):
@@ -62,6 +86,62 @@ def _decode_chunk(p2, p1, c: int, *, fivelevel: bool):
     return (payload * (1 + sel)).astype(jnp.float32)
 
 
+def dequant_rotate_tile(h_ref, p2, p1, sc_ref, zp_ref, *, rotate_weights: bool,
+                        fivelevel: bool, sub_blocks: int) -> jax.Array:
+    """Expand one packed weight tile to its (TN, 256) f32 dequantized (and
+    optionally IFWHT-rotated) form — steps 2-4 of the pipeline above.
+
+    Shared by every kernel variant (flat/hoisted/matvec) so they stay
+    bit-identical: same chunk order, same per-chunk ops, same MXU slices.
+    """
+    if sub_blocks:
+        d_sub = sc_ref[:, 0, :].astype(jnp.float32)  # (TN, SUB)
+    else:
+        d = sc_ref[...].astype(jnp.float32)  # (TN, 1)
+        z = zp_ref[...].astype(jnp.float32)  # (TN, 1)
+
+    chunks = []
+    for c in range(NCHUNK):
+        q = _decode_chunk(p2, p1, c, fivelevel=fivelevel)  # (TN, 64)
+        if sub_blocks:
+            # element e = c*64 + i lives in sub-block e // (256//SUB).
+            per = BLOCK // sub_blocks  # elements per sub-block
+            lo = (c * CHUNK) // per
+            # chunk spans CHUNK//per sub-blocks, each of `per` elements
+            reps = [d_sub[:, lo + s : lo + s + 1] for s in range(CHUNK // per)]
+            d_c = jnp.concatenate(
+                [jnp.broadcast_to(r, (r.shape[0], per)) for r in reps], axis=-1
+            )
+            chunks.append(d_c * q)
+        else:
+            chunks.append(d * (q - z))
+
+    if not rotate_weights:
+        return jnp.concatenate(chunks, axis=-1)  # (TN, 256)
+    w_rot = jnp.zeros((p2.shape[0], BLOCK), dtype=jnp.float32)
+    for c in range(NCHUNK):
+        # IFWHT via MXU: accumulate w_c @ H[c*64:(c+1)*64, :]
+        h_slice = h_ref[c * CHUNK : (c + 1) * CHUNK, :]
+        w_rot = w_rot + jnp.dot(chunks[c], h_slice,
+                                preferred_element_type=jnp.float32)
+    return w_rot
+
+
+def pad_packed_n(pad_n: int, *operands):
+    """Pad the packed-operand N (leading) dim of planes/scales/zps; shared
+    by the tiled and matvec wrappers."""
+    if not pad_n:
+        return operands
+    return tuple(
+        jnp.pad(a, [(0, pad_n)] + [(0, 0)] * (a.ndim - 1)) for a in operands)
+
+
+def _accumulate(acc_ref, x_ref, w):
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
 def _itq3_matmul_kernel(
     h_ref,    # (256, 256) f32 — Hadamard (only read when rotate_weights)
     x_ref,    # (TM, 256)
@@ -77,58 +157,51 @@ def _itq3_matmul_kernel(
     sub_blocks: int,
     kb: int,
 ):
+    """Flat schedule: grid (MB, NB, KB), expand the weight tile per cell."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    p2 = p2_ref[:, 0, :]
-    p1 = p1_ref[:, 0, :]
-    x = x_ref[...].astype(jnp.float32)
+    w = dequant_rotate_tile(h_ref, p2_ref[:, 0, :], p1_ref[:, 0, :],
+                            sc_ref, zp_ref, rotate_weights=rotate_weights,
+                            fivelevel=fivelevel, sub_blocks=sub_blocks)
+    _accumulate(acc_ref, x_ref, w)
 
-    if sub_blocks:
-        d_sub = sc_ref[:, 0, :].astype(jnp.float32)  # (TN, SUB)
-    else:
-        d = sc_ref[...].astype(jnp.float32)  # (TN, 1)
-        z = zp_ref[...].astype(jnp.float32)  # (TN, 1)
+    @pl.when(k == kb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
-    if rotate_weights:
-        w_rot = jnp.zeros((p2.shape[0], BLOCK), dtype=jnp.float32)
 
-    acc = jnp.zeros_like(acc_ref)
-    for c in range(NCHUNK):
-        q = _decode_chunk(p2, p1, c, fivelevel=fivelevel)  # (TN, 64)
-        if sub_blocks:
-            # element e = c*64 + i lives in sub-block e // (256//SUB).
-            per = BLOCK // sub_blocks  # elements per sub-block
-            lo = (c * CHUNK) // per
-            # chunk spans CHUNK//per sub-blocks, each of `per` elements
-            reps = [d_sub[:, lo + s : lo + s + 1] for s in range(CHUNK // per)]
-            d_c = jnp.concatenate(
-                [jnp.broadcast_to(r, (r.shape[0], per)) for r in reps], axis=-1
-            )
-            w_c = d_c * q
-        else:
-            w_c = d * (q - z)
+def _itq3_matmul_hoisted_kernel(
+    h_ref, x_ref, p2_ref, p1_ref, sc_ref, zp_ref, o_ref,
+    acc_ref,  # scratch (TM, TN) f32
+    w_ref,    # scratch (KB, TN, 256) f32 — expanded strip for current j
+    *,
+    rotate_weights: bool,
+    fivelevel: bool,
+    sub_blocks: int,
+    kb: int,
+):
+    """Hoisted schedule: grid (NB, MB, KB). The expanded weight strip for
+    output tile j is computed once (first M tile) and served from VMEM
+    scratch for every later M tile."""
+    i = pl.program_id(1)
+    k = pl.program_id(2)
 
-        if rotate_weights:
-            # IFWHT via MXU: accumulate w_c @ H[c*64:(c+1)*64, :]
-            h_slice = h_ref[c * CHUNK : (c + 1) * CHUNK, :]
-            w_rot = w_rot + jnp.dot(w_c, h_slice, preferred_element_type=jnp.float32)
-        else:
-            x_c = x[:, c * CHUNK : (c + 1) * CHUNK]
-            acc = acc + jax.lax.dot_general(
-                x_c, w_c, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    if rotate_weights:
-        acc = jax.lax.dot_general(
-            x, w_rot, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
+    @pl.when(i == 0)
+    def _expand():
+        w_ref[pl.ds(k, 1)] = dequant_rotate_tile(
+            h_ref, p2_ref[:, 0, :], p1_ref[:, 0, :], sc_ref, zp_ref,
+            rotate_weights=rotate_weights, fivelevel=fivelevel,
+            sub_blocks=sub_blocks)[None]
 
-    acc_ref[...] += acc
+    _accumulate(acc_ref, x_ref, w_ref[pl.ds(k, 1)][0])
 
     @pl.when(k == kb - 1)
     def _flush():
@@ -138,7 +211,8 @@ def _itq3_matmul_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "rotate_weights", "fivelevel", "sub_blocks", "tm", "tn", "interpret", "out_dtype",
+        "rotate_weights", "fivelevel", "sub_blocks", "tm", "tn", "interpret",
+        "out_dtype", "hoist",
     ),
 )
 def itq3_matmul_pallas(
@@ -155,8 +229,13 @@ def itq3_matmul_pallas(
     tn: int = 256,
     interpret: bool = True,
     out_dtype=jnp.float32,
+    hoist: bool | None = None,
 ) -> jax.Array:
-    """Fused ITQ3_S matmul: returns ``x @ W_hat`` of shape (M, N)."""
+    """Fused ITQ3_S matmul: returns ``x @ W_hat`` of shape (M, N).
+
+    ``hoist=None`` auto-selects the hoisted schedule when there is more than
+    one M tile and the expanded weight strip fits the VMEM budget.
+    """
     m, kpad = x.shape
     n, kb = plane2.shape[0], plane2.shape[1]
     if kpad != kb * BLOCK:
@@ -167,44 +246,60 @@ def itq3_matmul_pallas(
     pad_m, pad_n = (-m) % tm, (-n) % tn
     if pad_m:
         x = jnp.pad(x, ((0, pad_m), (0, 0)))
-    if pad_n:
-        pad = [(0, pad_n)] + [(0, 0)] * (plane2.ndim - 1)
-        plane2 = jnp.pad(plane2, pad)
-        plane1 = jnp.pad(plane1, [(0, pad_n)] + [(0, 0)] * (plane1.ndim - 1))
-        scales = jnp.pad(scales, [(0, pad_n)] + [(0, 0)] * (scales.ndim - 1))
-        zps = jnp.pad(zps, [(0, pad_n)] + [(0, 0)] * (zps.ndim - 1))
+    plane2, plane1, scales, zps = pad_packed_n(
+        pad_n, plane2, plane1, scales, zps)
     mp, np_ = x.shape[0], plane2.shape[0]
+    mb = mp // tm
 
     scales = scales.astype(jnp.float32)
     zps = zps.astype(jnp.float32)
     h = hadamard_matrix(BLOCK, dtype=jnp.float32)
 
-    if sub_blocks:
-        sc_spec = pl.BlockSpec((tn, 1, sub_blocks), lambda i, j, k: (j, k, 0))
-    else:
-        sc_spec = pl.BlockSpec((tn, 1), lambda i, j, k: (j, k))
+    if hoist is None:
+        hoist = mb > 1 and kb * tn * BLOCK * 4 <= HOIST_VMEM_BUDGET
 
-    kernel = functools.partial(
-        _itq3_matmul_kernel,
-        rotate_weights=rotate_weights,
-        fivelevel=fivelevel,
-        sub_blocks=sub_blocks,
-        kb=kb,
-    )
+    kernel_kw = dict(rotate_weights=rotate_weights, fivelevel=fivelevel,
+                     sub_blocks=sub_blocks, kb=kb)
+    scratch = [pltpu.VMEM((tm, tn), jnp.float32)]
+    if hoist:
+        # grid (j, i, k): i (M tiles) revisits j's weight strip; the strip
+        # is expanded once at i == 0 into scratch and reused after.
+        grid = (np_ // tn, mb, kb)
+        x_idx = lambda j, i, k: (i, k)
+        w_idx = lambda j, i, k: (j, k, 0)
+        s_idx2 = lambda j, i, k: (j, k)
+        o_idx = lambda j, i, k: (i, j)
+        sc_idx3 = lambda j, i, k: (j, k, 0)
+        kernel = functools.partial(_itq3_matmul_hoisted_kernel, **kernel_kw)
+        scratch.append(pltpu.VMEM((kb, tn, BLOCK), jnp.float32))
+    else:
+        grid = (mb, np_ // tn, kb)
+        x_idx = lambda i, j, k: (i, k)
+        w_idx = lambda i, j, k: (j, k, 0)
+        s_idx2 = lambda i, j, k: (j, k)
+        o_idx = lambda i, j, k: (i, j)
+        sc_idx3 = lambda i, j, k: (j, k, 0)
+        kernel = functools.partial(_itq3_matmul_kernel, **kernel_kw)
+
+    if sub_blocks:
+        sc_spec = pl.BlockSpec((tn, 1, sub_blocks), sc_idx3)
+    else:
+        sc_spec = pl.BlockSpec((tn, 1), s_idx2)
+
     out = pl.pallas_call(
         kernel,
-        grid=(mp // tm, np_ // tn, kb),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((BLOCK, BLOCK), lambda i, j, k: (0, 0)),  # H resident
-            pl.BlockSpec((tm, BLOCK), lambda i, j, k: (i, k)),
-            pl.BlockSpec((tn, 1, CHUNK), lambda i, j, k: (j, k, 0)),
-            pl.BlockSpec((tn, 1, BLOCK // 8), lambda i, j, k: (j, k, 0)),
+            pl.BlockSpec((BLOCK, BLOCK), lambda *_: (0, 0)),  # H resident
+            pl.BlockSpec((tm, BLOCK), x_idx),
+            pl.BlockSpec((tn, 1, CHUNK), w_idx),
+            pl.BlockSpec((tn, 1, BLOCK // 8), w_idx),
             sc_spec,
-            pl.BlockSpec((tn, 1), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tn, 1), s_idx2),
         ],
-        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((tm, tn), o_idx),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(h, x, plane2, plane1, scales, zps)
     return out[:m, :n]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: decode-shaped (small-M) fused ITQ3_S matvec.
+
+Low-bit decode is weight-streaming-bound (TWLA, TernaryLLM): at M = a few
+slots the matmul grid machinery of ``itq3_matmul_pallas`` — M tiling, M
+padding, an (TM, 256) x-tile stream per grid cell — is pure overhead, and
+what matters is draining the packed planes from HBM at full bandwidth.
+
+This kernel is the memory-side specialization for M <= ``MATVEC_MAX_M``:
+
+* **No M grid.** The grid is (NB, KB) — output strips N-major, reduction
+  innermost — so the packed planes of each strip stream contiguously and
+  exactly once; there is no M loop to re-stream them for.
+* **No x-tile machinery.** x rides along as one thin (M, 256) block per
+  reduction step; the whole activation row set stays VREG-resident.
+* **(M, TN) register-tile accumulator.** One f32 scratch tile accumulates
+  across KB and flushes once per strip.
+
+The weight-tile expansion is byte-for-byte the tiled kernel's
+``dequant_rotate_tile`` (same chunk order, same MXU slices, K ascending),
+so results are **bit-identical** to ``itq3_matmul_pallas`` for every format
+in the ternary family — ``qmatmul`` dispatches between them purely by shape
+(see kernels/ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fwht import hadamard_matrix
+from repro.kernels.itq3_matmul import BLOCK, dequant_rotate_tile, pad_packed_n
+
+__all__ = ["itq3_matvec_pallas", "MATVEC_MAX_M"]
+
+MATVEC_MAX_M = 16  # decode / small-batch regime; above this, tile the M dim
+
+
+def _itq3_matvec_kernel(
+    h_ref,    # (256, 256) f32 — Hadamard (only read when rotate_weights)
+    x_ref,    # (M, 256) — reduction block k of the activations
+    p2_ref,   # (TN, 1, 64) uint8
+    p1_ref,   # (TN, 1, 32) uint8
+    sc_ref,   # (TN, 1) f32  |  (TN, 1, SUB) f32
+    zp_ref,   # (TN, 1) f32
+    o_ref,    # (M, TN)
+    acc_ref,  # scratch (M, TN) f32
+    *,
+    rotate_weights: bool,
+    fivelevel: bool,
+    sub_blocks: int,
+    kb: int,
+):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = dequant_rotate_tile(h_ref, p2_ref[:, 0, :], p1_ref[:, 0, :],
+                            sc_ref, zp_ref, rotate_weights=rotate_weights,
+                            fivelevel=fivelevel, sub_blocks=sub_blocks)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == kb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rotate_weights", "fivelevel", "sub_blocks", "tn",
+                     "interpret", "out_dtype"),
+)
+def itq3_matvec_pallas(
+    x: jax.Array,        # (M, K_pad), M <= MATVEC_MAX_M
+    plane2: jax.Array,   # (N, KB, 64) uint8
+    plane1: jax.Array,   # (N, KB, 32) uint8
+    scales: jax.Array,   # (N, KB) f16/f32  |  (N, KB, SUB)
+    zps: jax.Array,      # (N, KB) f16/f32
+    *,
+    rotate_weights: bool = True,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+    tn: int = 256,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Decode-shaped fused matvec: returns ``x @ W_hat`` of shape (M, N)."""
+    m, kpad = x.shape
+    n, kb = plane2.shape[0], plane2.shape[1]
+    if m > MATVEC_MAX_M:
+        raise ValueError(f"matvec kernel is for M <= {MATVEC_MAX_M}, got {m}")
+    if kpad != kb * BLOCK:
+        raise ValueError(f"x K dim {kpad} != KB*256 = {kb * BLOCK}")
+
+    tn = max(1, min(tn, n))
+    plane2, plane1, scales, zps = pad_packed_n(
+        (-n) % tn, plane2, plane1, scales, zps)
+    np_ = plane2.shape[0]
+
+    scales = scales.astype(jnp.float32)
+    zps = zps.astype(jnp.float32)
+    h = hadamard_matrix(BLOCK, dtype=jnp.float32)
+
+    if sub_blocks:
+        sc_spec = pl.BlockSpec((tn, 1, sub_blocks), lambda j, k: (j, k, 0))
+    else:
+        sc_spec = pl.BlockSpec((tn, 1), lambda j, k: (j, k))
+
+    kernel = functools.partial(
+        _itq3_matvec_kernel,
+        rotate_weights=rotate_weights,
+        fivelevel=fivelevel,
+        sub_blocks=sub_blocks,
+        kb=kb,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // tn, kb),
+        in_specs=[
+            pl.BlockSpec((BLOCK, BLOCK), lambda j, k: (0, 0)),  # H resident
+            pl.BlockSpec((m, BLOCK), lambda j, k: (0, k)),
+            pl.BlockSpec((tn, 1, BLOCK // 4), lambda j, k: (j, k, 0)),
+            pl.BlockSpec((tn, 1, BLOCK // 8), lambda j, k: (j, k, 0)),
+            sc_spec,
+            pl.BlockSpec((tn, 1), lambda j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((m, tn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, tn), jnp.float32)],
+        interpret=interpret,
+    )(h, x, plane2, plane1, scales, zps)
+    return out[:, :n]

@@ -2,13 +2,30 @@
 
 ``qmatmul_kernel`` is the kernel-backed counterpart of
 :func:`repro.core.qlinear.qmatmul`: it accepts the same QTensor and mode
-vocabulary and dispatches:
+vocabulary and dispatches twice:
+
+**mode** (where the rotation lands):
 
   mode="weights"      -> fused kernel with in-kernel IFWHT (paper §5.2)
   mode="activations"  -> blocked-FWHT kernel on x, then the same fused
                          kernel with rotation disabled (DESIGN.md §2
                          dual-domain optimization)
 
+**shape** (which kernel runs the contraction):
+
+  M <= MATVEC_MAX_M   -> kernels/itq3_matvec.py — the decode-shaped
+                         N-major streaming kernel (no M tiling); ``tm``
+                         is ignored there.
+  M >  MATVEC_MAX_M   -> kernels/itq3_matmul.py — the tiled kernel, with
+                         the weight-tile expansion hoisted across M tiles
+                         when it fits VMEM.
+
+The two kernels share the weight-tile expansion helper and accumulate in
+the same order, so the dispatch is bit-exact: callers never observe which
+kernel ran.
+
+``tm``/``tn`` default to None = resolve via :mod:`repro.kernels.autotune`
+(cached per-device winners, deterministic defaults in interpret mode).
 ``interpret`` defaults to "auto": interpret=True unless running on real TPU
 hardware. All wrappers handle reduction-dim padding and arbitrary leading
 batch dims.
@@ -21,8 +38,10 @@ import jax.numpy as jnp
 from repro.core import formats as fmt_mod
 from repro.core.qlinear import resolve_mode
 from repro.core.quantize import QTensor, pad_last_dim
+from repro.kernels import autotune as autotune_mod
 from repro.kernels.fwht_kernel import fwht_pallas
 from repro.kernels.itq3_matmul import BLOCK, itq3_matmul_pallas
+from repro.kernels.itq3_matvec import MATVEC_MAX_M, itq3_matvec_pallas
 
 __all__ = ["auto_interpret", "blocked_fwht_op", "qmatmul_kernel"]
 
@@ -47,8 +66,8 @@ def qmatmul_kernel(
     qt: QTensor,
     *,
     mode: str = "weights",
-    tm: int = 256,
-    tn: int = 256,
+    tm: int | None = None,
+    tn: int | None = None,
     interpret: bool | None = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
@@ -85,18 +104,25 @@ def qmatmul_kernel(
     else:
         rotate_weights = False  # iq3_s baseline: contract codes directly
 
-    out = itq3_matmul_pallas(
-        xp,
-        qt.data["plane2"],
-        qt.data["plane1"],
-        qt.data["scales"],
-        qt.data["zps"],
-        rotate_weights=rotate_weights,
-        fivelevel=m.fivelevel,
-        sub_blocks=m.sub_blocks,
-        tm=tm,
-        tn=tn,
-        interpret=interpret,
-        out_dtype=out_dtype,
-    )
+    rows = xp.shape[0]
+    if tm is None or tn is None:
+        # key on the LOGICAL K (m.shape[0]) — the same K the tuner records
+        # under — not xp's block-padded width, which diverges whenever the
+        # model dim isn't a multiple of 256 (e.g. smollm's d_model=576)
+        a_tm, a_tn = autotune_mod.get_tiles(rows, m.n, m.shape[0], m.fmt,
+                                            interpret=interpret)
+        tm = a_tm if tm is None else tm
+        tn = a_tn if tn is None else tn
+
+    common = dict(rotate_weights=rotate_weights, fivelevel=m.fivelevel,
+                  sub_blocks=m.sub_blocks, tn=tn, interpret=interpret,
+                  out_dtype=out_dtype)
+    if rows <= MATVEC_MAX_M:
+        out = itq3_matvec_pallas(
+            xp, qt.data["plane2"], qt.data["plane1"], qt.data["scales"],
+            qt.data["zps"], **common)
+    else:
+        out = itq3_matmul_pallas(
+            xp, qt.data["plane2"], qt.data["plane1"], qt.data["scales"],
+            qt.data["zps"], tm=tm, **common)
     return out.reshape(*lead, m.n)

@@ -70,13 +70,24 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default); >0 samples on device")
+    ap.add_argument("--autotune", action="store_true",
+                    help="benchmark kernel tile sizes for this model's "
+                         "shapes on boot (TPU only; no-op in interpret mode)")
+    ap.add_argument("--tile-m", type=int, default=None,
+                    help="explicit Pallas tile override (else autotune cache)")
+    ap.add_argument("--tile-n", type=int, default=None)
+    ap.add_argument("--sample-on-host", action="store_true",
+                    help="pre-overhaul per-slot host argmax (baseline mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_cfg(cfg)
     rt = Runtime(compute_dtype=jnp.float32, quant_mode=args.quant_mode,
-                 backend=args.backend)
+                 backend=args.backend, autotune=args.autotune,
+                 tile_m=args.tile_m, tile_n=args.tile_n)
 
     if args.load_quantized:
         t0 = time.time()
@@ -109,7 +120,9 @@ def main() -> None:
             path = ckpt_mod.save(args.save_quantized, 0, params)
             print(f"saved quantized tree to {path}")
 
-    eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len, rt=rt)
+    eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
+                      rt=rt, temperature=args.temperature,
+                      sample_on_host=args.sample_on_host)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=8 + i % 5),
@@ -119,8 +132,10 @@ def main() -> None:
     done = eng.run(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(r.out) for r in done)
+    st = eng.stats()
     print(f"served {len(done)} requests / {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on {jax.default_backend()})")
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on {jax.default_backend()}, "
+          f"{st['syncs_per_token']:.2f} host syncs/token)")
     for r in done[:3]:
         print(f"  rid={r.rid} -> {r.out[:10]}")
 

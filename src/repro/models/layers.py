@@ -42,6 +42,9 @@ class Runtime:
     quant_mode: str = "activations"  # qmatmul mode for QTensor weights
     backend: str = "auto"  # qmatmul backend: auto | ref | pallas
     use_kernel: bool = False  # deprecated: force backend="pallas"
+    tile_m: Any = None  # Pallas tile override; None = autotune cache/defaults
+    tile_n: Any = None
+    autotune: bool = False  # eagerly tune kernel tiles on engine boot (TPU)
     attn_chunk: int = 512  # query-chunk size for softmax attention
     capacity_factor: float = 1.25  # MoE expert capacity factor
     remat: bool = False  # rematerialize each layer (training)
@@ -68,7 +71,8 @@ def dense(x: jax.Array, w, rt: Runtime, bias=None) -> jax.Array:
     if isinstance(w, QTensor):
         backend = "pallas" if rt.use_kernel else rt.backend
         y = qmatmul(x, w, mode=rt.quant_mode, backend=backend,
-                    compute_dtype=rt.compute_dtype)
+                    compute_dtype=rt.compute_dtype,
+                    tm=rt.tile_m, tn=rt.tile_n)
     else:
         y = jnp.matmul(x.astype(rt.compute_dtype), w.astype(rt.compute_dtype))
     if bias is not None:

@@ -38,6 +38,7 @@ Params = dict[str, Any]
 
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "model_flops",
+    "sample_tokens",
 ]
 
 
@@ -452,12 +453,16 @@ def forward(
     cache: Optional[Params] = None,
     pos: int | jax.Array = 0,
     last_only: bool = False,
+    last_idx: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Optional[Params], jax.Array]:
     """Full-sequence forward (train / prefill).
 
-    Returns (logits (B, T, V) — or (B, 1, V) when ``last_only``, the serving
-    prefill mode: the LM head over 32k x 152k logits would dwarf everything
-    else — new_cache | None, moe_aux)."""
+    Returns (logits (B, T, V) — or (B, 1, V) when ``last_only`` or
+    ``last_idx``, the serving prefill modes: the LM head over 32k x 152k
+    logits would dwarf everything else — new_cache | None, moe_aux).
+    ``last_idx`` (B,) gathers a per-row position BEFORE the head, so a
+    padded-bucket prefill pays one head row per slot, at its true last
+    prompt token, instead of V logits for every pad position."""
     x = _embed(params, tokens, rt, cfg)
     memory = None
     if cfg.family == "audio":
@@ -474,6 +479,8 @@ def forward(
         x = x[:, frontend_feats.shape[1]:]
     if last_only:
         x = x[:, -1:]
+    elif last_idx is not None:
+        x = x[jnp.arange(x.shape[0]), last_idx][:, None]
     return _head(params, x, rt, cfg), new_cache, aux
 
 
@@ -548,6 +555,32 @@ def decode_step(
     x = _embed(params, tokens, rt, cfg)
     x, new_cache, _ = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos)
     return _head(params, x, rt, cfg), new_cache
+
+
+def sample_tokens(
+    logits: jax.Array,  # (..., V)
+    key: Optional[jax.Array] = None,
+    temperature: jax.Array | float = 0.0,
+) -> jax.Array:
+    """Greedy argmax (``key=None``) or temperature sampling, on device.
+
+    Designed to live INSIDE the jitted decode step: the engine then moves
+    one (slots,) int32 vector per step across the device->host boundary
+    instead of one logits row per slot. Greedy decoding passes ``key=None``
+    so the hot loop traces to a bare argmax — no PRNG work (threefry over
+    (B, V) is real cost on CPU). With a key, ``temperature`` is a traced
+    scalar (flipping it never recompiles); both the categorical and the
+    argmax are computed and selected with where, since temp <= 0 must still
+    mean greedy.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        return greedy
+    temp = jnp.asarray(temperature, jnp.float32)
+    sampled = jax.random.categorical(
+        key, logits / jnp.maximum(temp, 1e-6), axis=-1).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy)
 
 
 # ===========================================================================

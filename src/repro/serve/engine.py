@@ -1,19 +1,35 @@
 """Serving engine: batched prefill/decode with continuous batching.
 
 ``ServeEngine`` owns a fixed slot-batched KV cache (B slots x max_len) and
-admits requests continuously: a free slot is prefilled with the new prompt
-(left-aligned, its own position counter) while other slots keep decoding —
-the standard continuous-batching discipline (vLLM-style, static slots
+admits requests continuously: free slots are prefilled with new prompts
+(left-aligned, their own position counters) while other slots keep decoding
+— the standard continuous-batching discipline (vLLM-style, static slots
 instead of paged blocks; pages are unnecessary when max_len is fixed per
 deployment, and static layouts are what TPU SPMD wants).
 
 The engine is model-agnostic: any architecture in the zoo works, quantized
 (QTensor params) or not. Per-slot position counters mask attention so slots
-never see each other's garbage; SSM/hybrid states are reset per admission.
+never see each other's garbage.
 
-jit boundaries: one compiled ``prefill`` (padded prompt -> cache insert at
-slot) and one compiled ``decode`` (all slots, one token each). Sampling is
-greedy or temperature on the host for simplicity of the example drivers.
+Hot-path discipline (the decode loop is the product):
+
+* **One device->host transfer per step.** Sampling (greedy argmax or
+  temperature) runs inside the jitted ``decode``; ``step()`` fetches a
+  single (slots,) int32 vector. ``sample_on_host=True`` restores the
+  pre-overhaul per-slot host argmax — kept as the measured baseline for
+  benchmarks/serve_bench.py. ``host_syncs`` counts every transfer either
+  way.
+* **One compiled call per admission wave.** All free slots are admitted
+  together: prompts are padded to one shared ``prompt_pad`` bucket and
+  prefilled in a single jitted call that also ZEROES the admitted slots'
+  cache/state (no separate reset pass) and samples each prompt's first
+  token from its true last-real-token logits.
+* **Bounded compile shapes for recurrent archs.** SSM/hybrid states
+  integrate every fed token, so pad tokens would pollute them; instead of
+  compiling one prefill per exact prompt length, prompts are fed in a
+  power-of-two chunk ladder (``prompt_chunk``, then halves) with state
+  threaded between calls — at most log2(prompt_chunk)+1 compiled shapes
+  ever, regardless of traffic.
 """
 from __future__ import annotations
 
@@ -41,18 +57,36 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg, *, slots: int = 4, max_len: int = 256,
-                 rt: Optional[Runtime] = None, prompt_pad: int = 64):
+                 rt: Optional[Runtime] = None, prompt_pad: int = 64,
+                 prompt_chunk: int = 16, temperature: float = 0.0,
+                 seed: int = 0, sample_on_host: bool = False):
         self.params = params
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
         self.slots = slots
         self.max_len = max_len
         self.prompt_pad = prompt_pad
+        self.prompt_chunk = prompt_chunk
+        self.temperature = float(temperature)
+        self.sample_on_host = sample_on_host
         self.cache = lm.init_cache(cfg, slots, max_len, dtype=jnp.float32)
         self.pos = np.zeros(slots, dtype=np.int32)  # next write index per slot
         self.active: list[Optional[Request]] = [None] * slots
-        self._jit_prefill = jax.jit(self._prefill_impl, static_argnames=("plen",))
+        self._next_tok = np.zeros(slots, dtype=np.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self._step_idx = 0
+        # --- perf counters (read by benchmarks/serve_bench.py and tests) ---
+        self.host_syncs = 0       # device->host transfers
+        self.tokens_decoded = 0   # tokens emitted by step()
+        self._jit_prefill = jax.jit(self._prefill_impl,
+                                    static_argnames=("plen", "fresh"))
         self._jit_decode = jax.jit(self._decode_impl)
+        self._jit_decode_logits = jax.jit(self._decode_logits_impl)
+        if self.rt.autotune:
+            from repro.kernels import autotune as autotune_mod
+            # no-op on CPU/interpret; on TPU, pre-tunes every QTensor matmul
+            # shape at decode batch = slots so the hot loop runs tuned tiles
+            autotune_mod.tune_params_shapes(params, slots)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, cfg, *, step: Optional[int] = None,
@@ -67,75 +101,169 @@ class ServeEngine:
         return cls(params, cfg, **kw)
 
     # --- compiled kernels -------------------------------------------------
-    def _prefill_impl(self, params, cache, tokens, slot, *, plen):
-        """tokens (1, plen) for one slot; returns (cache, last_logits)."""
-        slot_cache = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
-            a, slot, 1, axis=_batch_axis(a)), cache)
-        logits, new_slot_cache, _ = lm.forward(
-            params, tokens, self.rt, self.cfg, cache=slot_cache, pos=0)
-        cache = jax.tree.map(
-            lambda full, s: jax.lax.dynamic_update_slice_in_dim(
-                full, s.astype(full.dtype), slot, axis=_batch_axis(full)),
-            cache, new_slot_cache)
-        return cache, logits[:, -1]
+    def _prefill_impl(self, params, cache, tokens, slots, last_idx, pos0,
+                      key, temperature, *, plen, fresh):
+        """One admission wave: tokens (G, plen) for slot ids ``slots`` (G,).
 
-    def _decode_impl(self, params, cache, tokens, positions):
-        """tokens (S, 1); per-slot positions (S,) — decode_step handles
-        ragged per-row positions natively."""
+        ``fresh=True`` starts each admitted slot from a ZEROED state (the
+        old per-slot reset pass folded into this same compiled call);
+        ``fresh=False`` continues from the slot's current state (the
+        SSM/hybrid chunk ladder). Returns (cache, sampled (G,) first tokens,
+        last-real-token logits (G, V))."""
+        g = tokens.shape[0]
+        if fresh:
+            slot_cache = _zero_slots_like(cache, g)
+        else:
+            slot_cache = _take_slots(cache, slots)
+        # pad tokens run through the model (masked later via pos), but the
+        # head + first sampled token come from the TRUE last prompt
+        # position only — one V-row per slot, not V logits per pad
+        logits, new_slot_cache, _ = lm.forward(
+            params, tokens, self.rt, self.cfg, cache=slot_cache, pos=pos0,
+            last_idx=last_idx)
+        cache = _put_slots(cache, new_slot_cache, slots)
+        last = logits[:, 0]
+        tok = lm.sample_tokens(last, key, temperature)
+        return cache, tok, last
+
+    def _decode_impl(self, params, cache, tokens, positions, key, temperature):
+        """tokens (S, 1); per-slot positions (S,). Sampling stays on device:
+        the step's only fetch is the (S,) token vector."""
+        logits, new_cache = lm.decode_step(
+            params, tokens, cache, positions, self.rt, self.cfg)
+        tok = lm.sample_tokens(logits[:, 0], key, temperature)
+        return tok, new_cache
+
+    def _decode_logits_impl(self, params, cache, tokens, positions):
+        """Pre-overhaul decode: ship logits out, sample on host."""
         logits, new_cache = lm.decode_step(
             params, tokens, cache, positions, self.rt, self.cfg)
         return logits[:, 0], new_cache
 
     # --- scheduler --------------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        for s in range(self.slots):
-            if self.active[s] is None:
-                plen = int(len(req.prompt))
-                # recurrent-state archs integrate every fed token, so pads
-                # would pollute the state: prefill exact-length there. Cap
-                # padding so the padded prompt always fits the cache.
-                pad = 0 if self.cfg.family in ("ssm", "hybrid") else (-plen % self.prompt_pad)
-                pad = min(pad, max(0, self.max_len - 1 - plen))
-                toks = np.pad(req.prompt, (0, pad)).astype(np.int32)
-                # reset slot state then prefill (padding tokens are masked
-                # out by the position counter: we only advance pos by plen)
-                self.cache = self._reset_slot(self.cache, s)
-                self.cache, last = self._jit_prefill(
-                    self.params, self.cache, jnp.asarray(toks[None]),
-                    jnp.int32(s), plen=toks.shape[0])
-                # padded prefill wrote pad junk past plen; pos tracks real len
-                self.pos[s] = plen
-                first = int(jnp.argmax(last[0]))
-                req.out.append(first)
-                self.active[s] = req
-                return True
-        return False
+    def _next_key(self):
+        """Per-call PRNG key — or None when greedy, so the compiled step
+        contains no PRNG work at all (sample_tokens traces to bare argmax)."""
+        if self.temperature <= 0:
+            return None
+        self._step_idx += 1
+        return jax.random.fold_in(self._key, self._step_idx)
 
-    def _reset_slot(self, cache, s: int):
-        def zap(a):
-            ax = _batch_axis(a)
-            zeros = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(a, s, 1, axis=ax))
-            return jax.lax.dynamic_update_slice_in_dim(a, zeros, s, axis=ax)
-        return jax.tree.map(zap, cache)
+    def submit(self, req: Request) -> bool:
+        return self.admit([req]) == 1
+
+    def admit(self, reqs: list[Request]) -> int:
+        """Admit as many of ``reqs`` (in order) as there are free slots.
+        Returns the number admitted."""
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        group = reqs[: len(free)]
+        if not group:
+            return 0
+        for r in group:
+            # loud here, not garbage later: an empty prompt would gather
+            # last_idx=-1 (a pad position) in the bucketed path
+            if len(r.prompt) == 0:
+                raise ValueError(f"request rid={r.rid} has an empty prompt")
+        free = free[: len(group)]
+        if self.cfg.family in ("ssm", "hybrid"):
+            # recurrent state integrates every fed token: no pad buckets;
+            # chunk ladder instead (bounded compiled shapes)
+            for req, s in zip(group, free):
+                self._admit_chunked(req, s)
+            return len(group)
+        self._admit_bucketed(group, free)
+        return len(group)
+
+    def _bucket(self, max_plen: int) -> int:
+        pad = (-max_plen) % self.prompt_pad
+        # cap padding so the padded prompt always fits the cache
+        return max_plen + min(pad, max(0, self.max_len - 1 - max_plen))
+
+    def _admit_bucketed(self, group: list[Request], free: list[int]) -> None:
+        """Attention-family admission: every free slot in ONE padded-bucket
+        compiled call (zero + prefill + first-token sample fused)."""
+        plens = [int(len(r.prompt)) for r in group]
+        bucket = self._bucket(max(plens))
+        toks = np.stack([np.pad(np.asarray(r.prompt, np.int32),
+                                (0, bucket - p))
+                         for r, p in zip(group, plens)])
+        self.cache, tok, last = self._jit_prefill(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(free, jnp.int32),
+            jnp.asarray([p - 1 for p in plens], jnp.int32),
+            jnp.zeros(len(group), jnp.int32),
+            self._next_key(), jnp.float32(self.temperature),
+            plen=bucket, fresh=True)
+        self._finish_admission(group, free, plens, tok, last)
+
+    def _admit_chunked(self, req: Request, s: int) -> None:
+        """SSM/hybrid admission: exact-length feeding via a power-of-two
+        chunk ladder with state threaded between compiled calls."""
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = int(len(prompt))
+        sizes, rem = [], plen
+        while rem:
+            c = self.prompt_chunk
+            while c > rem:
+                c //= 2
+            sizes.append(c)
+            rem -= c
+        off, fresh = 0, True
+        slot = jnp.asarray([s], jnp.int32)
+        for c in sizes:
+            self.cache, tok, last = self._jit_prefill(
+                self.params, self.cache, jnp.asarray(prompt[None, off:off + c]),
+                slot, jnp.asarray([c - 1], jnp.int32),
+                jnp.asarray([off], jnp.int32),
+                self._next_key(), jnp.float32(self.temperature),
+                plen=c, fresh=fresh)
+            fresh = False
+            off += c
+        self._finish_admission([req], [s], [plen], tok, last)
+
+    def _finish_admission(self, group, free, plens, tok, last) -> None:
+        if self.sample_on_host:
+            firsts = [int(jnp.argmax(last[g])) for g in range(len(group))]
+            self.host_syncs += len(group)
+        else:
+            firsts = np.asarray(tok)
+            self.host_syncs += 1
+        for g, (req, s) in enumerate(zip(group, free)):
+            self.pos[s] = plens[g]
+            first = int(firsts[g])
+            req.out.append(first)
+            self._next_tok[s] = first
+            self.active[s] = req
 
     def step(self) -> list[tuple[int, int]]:
         """One decode step for every active slot; returns [(rid, token)]."""
         if not any(self.active):
             return []
-        toks = np.zeros((self.slots, 1), dtype=np.int32)
-        for s, req in enumerate(self.active):
-            if req is not None:
-                toks[s, 0] = req.out[-1]
-        logits, self.cache = self._jit_decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.pos))
+        toks = jnp.asarray(self._next_tok[:, None])
+        positions = jnp.asarray(self.pos)
+        if self.sample_on_host:
+            logits, self.cache = self._jit_decode_logits(
+                self.params, self.cache, toks, positions)
+            tok_np = None
+        else:
+            tok_dev, self.cache = self._jit_decode(
+                self.params, self.cache, toks, positions,
+                self._next_key(), jnp.float32(self.temperature))
+            tok_np = np.asarray(tok_dev)  # THE step's one transfer
+            self.host_syncs += 1
         emitted = []
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            tok = int(jnp.argmax(logits[s]))
+            if tok_np is None:
+                tok = int(jnp.argmax(logits[s]))  # one transfer per slot
+                self.host_syncs += 1
+            else:
+                tok = int(tok_np[s])
             req.out.append(tok)
+            self._next_tok[s] = tok
             self.pos[s] += 1
+            self.tokens_decoded += 1
             emitted.append((req.rid, tok))
             if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
                 req.done = True
@@ -146,12 +274,48 @@ class ServeEngine:
         """Drive all requests to completion with continuous admission."""
         pending = list(requests)
         while pending or any(self.active):
-            while pending and self.submit(pending[0]):
-                pending.pop(0)
+            admitted = self.admit(pending)
+            del pending[:admitted]
             self.step()
         return requests
 
+    def stats(self) -> dict:
+        """Perf counters for the bench harness."""
+        return {
+            "host_syncs": self.host_syncs,
+            "tokens_decoded": self.tokens_decoded,
+            "syncs_per_token": (self.host_syncs / self.tokens_decoded
+                                if self.tokens_decoded else float("nan")),
+        }
+
+
+# --- slot gather/scatter over heterogeneous cache pytrees -------------------
 
 def _batch_axis(a) -> int:
     """Cache leaves are either (L, B, ...) stacked per layer or (B, ...)."""
     return 1 if a.ndim >= 3 else 0
+
+
+def _take_slots(cache, slots):
+    """Gather the (G,)-slot sub-cache along each leaf's batch axis."""
+    return jax.tree.map(
+        lambda a: jnp.take(a, slots, axis=_batch_axis(a)), cache)
+
+
+def _zero_slots_like(cache, g: int):
+    """A fresh zero state for G slots (shape of a gathered sub-cache)."""
+    def zero(a):
+        ax = _batch_axis(a)
+        shape = a.shape[:ax] + (g,) + a.shape[ax + 1:]
+        return jnp.zeros(shape, a.dtype)
+    return jax.tree.map(zero, cache)
+
+
+def _put_slots(cache, part, slots):
+    """Scatter a (G,)-slot sub-cache back into the full cache."""
+    def put(full, p):
+        ax = _batch_axis(full)
+        fm = jnp.moveaxis(full, ax, 0)
+        pm = jnp.moveaxis(p.astype(full.dtype), ax, 0)
+        return jnp.moveaxis(fm.at[slots].set(pm), 0, ax)
+    return jax.tree.map(put, cache, part)

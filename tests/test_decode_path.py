@@ -1,0 +1,246 @@
+"""Decode-path overhaul: matvec kernel parity, tile autotuner, and the
+single-transfer engine hot loop."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import formats
+from repro.kernels import autotune, ops
+from repro.kernels.itq3_matmul import itq3_matmul_pallas
+from repro.kernels.itq3_matvec import MATVEC_MAX_M, itq3_matvec_pallas
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.serve.engine import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+RT = Runtime(compute_dtype=jnp.float32, capacity_factor=8.0)
+
+
+# ---------------------------------------------------------------------------
+# Matvec kernel: bit-identical to the tiled kernel, every format, ragged dims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["itq3_s", "itq3_x", "itq3_s_sub", "iq3_s"])
+@pytest.mark.parametrize("m,n,k", [(1, 96, 512), (5, 160, 768), (16, 128, 256)])
+def test_matvec_bitwise_matches_tiled(rng, fmt, m, n, k):
+    w = jnp.asarray(rng.standard_t(df=4, size=(k, n)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    qt = formats.quantize(w, fmt)
+    meta = qt.meta
+    kw = dict(rotate_weights=meta.rotate, fivelevel=meta.fivelevel,
+              sub_blocks=meta.sub_blocks, interpret=True)
+    args = (x, qt.data["plane2"], qt.data["plane1"],
+            qt.data["scales"], qt.data["zps"])
+    y_mv = np.asarray(itq3_matvec_pallas(*args, tn=64, **kw))
+    y_mm = np.asarray(itq3_matmul_pallas(*args, tm=m, tn=64, **kw))
+    np.testing.assert_array_equal(y_mv, y_mm)
+    y0 = np.asarray(jnp.matmul(x, formats.dequantize(qt, jnp.float32)))
+    np.testing.assert_allclose(y_mv, y0, atol=3e-3)
+
+
+def test_qmatmul_auto_dispatches_matvec(rng, monkeypatch):
+    """qmatmul routes M <= MATVEC_MAX_M to the matvec kernel by shape."""
+    calls = []
+    real = ops.itq3_matvec_pallas
+
+    def spy(*a, **kw):
+        calls.append(a[0].shape)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "itq3_matvec_pallas", spy)
+    w = jnp.asarray(rng.normal(size=(512, 128)) * 0.05, jnp.float32)
+    qt = formats.quantize(w, "itq3_s")
+    x_small = jnp.asarray(rng.normal(size=(MATVEC_MAX_M, 512)), jnp.float32)
+    x_big = jnp.asarray(rng.normal(size=(MATVEC_MAX_M + 1, 512)), jnp.float32)
+    y = ops.qmatmul_kernel(x_small, qt, mode="weights", interpret=True)
+    assert calls == [(MATVEC_MAX_M, 512)]
+    ops.qmatmul_kernel(x_big, qt, mode="weights", interpret=True)
+    assert len(calls) == 1  # big M stays on the tiled kernel
+    y0 = np.asarray(jnp.matmul(x_small, formats.dequantize(qt, jnp.float32)))
+    np.testing.assert_allclose(np.asarray(y), y0, atol=3e-3)
+
+
+def test_hoisted_grid_bitwise_matches_flat(rng):
+    w = jnp.asarray(rng.normal(size=(768, 320)) * 0.05, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(130, 768)), jnp.float32)
+    qt = formats.quantize(w, "itq3_s")
+    args = (x, qt.data["plane2"], qt.data["plane1"],
+            qt.data["scales"], qt.data["zps"])
+    got = {h: np.asarray(itq3_matmul_pallas(
+        *args, rotate_weights=True, tm=64, tn=128, interpret=True, hoist=h))
+        for h in (True, False)}
+    np.testing.assert_array_equal(got[True], got[False])
+    y0 = np.asarray(jnp.matmul(x, formats.dequantize(qt, jnp.float32)))
+    np.testing.assert_allclose(got[True], y0, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: deterministic fallback + on-disk cache round trip
+# ---------------------------------------------------------------------------
+
+def test_autotune_deterministic_fallback(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear_memory_cache()
+    assert autotune.get_tiles(8, 2048, 2048, "itq3_s", interpret=True) == \
+        (autotune.DEFAULT_TM, autotune.DEFAULT_TN)
+    # interpret-mode autotune() refuses to benchmark: defaults, no cache file
+    assert autotune.autotune(8, 128, 256, interpret=True) == \
+        (autotune.DEFAULT_TM, autotune.DEFAULT_TN)
+    assert not (tmp_path / "at.json").exists()
+
+
+def test_autotune_cache_round_trip(tmp_path, monkeypatch):
+    path = tmp_path / "at.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    autotune.record(4, 1024, 512, "itq3_s", 8, 128, interpret=True, us=12.5)
+    # fresh process simulation: drop the in-memory cache, re-read from disk
+    autotune.clear_memory_cache()
+    assert autotune.get_tiles(4, 1024, 512, "itq3_s", interpret=True) == (8, 128)
+    # M bucketing: any M in the matvec regime shares the entry
+    assert autotune.get_tiles(1, 1024, 512, "itq3_s", interpret=True) == (8, 128)
+    # other shapes still fall back
+    assert autotune.get_tiles(4, 999, 512, "itq3_s", interpret=True) == \
+        (autotune.DEFAULT_TM, autotune.DEFAULT_TN)
+    doc = json.loads(path.read_text())
+    assert all("tm" in v and "tn" in v for v in doc.values())
+
+
+def test_autotune_benchmarked_entry_applies(tmp_path, monkeypatch, rng):
+    """Forced interpret-mode sweep on a tiny shape: winner lands in the
+    cache and qmatmul(tm=None) picks it up and still matches the oracle.
+
+    K=320 is deliberately NOT a multiple of the 256 block: the lookup must
+    key on the logical K the tuner recorded, not the block-padded width."""
+    path = tmp_path / "at.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    tm, tn = autotune.autotune(20, 64, 320, "itq3_s", interpret=True,
+                               iters=1, force_interpret_bench=True)
+    autotune.clear_memory_cache()
+    assert autotune.get_tiles(20, 64, 320, "itq3_s", interpret=True) == (tm, tn)
+    w = jnp.asarray(rng.normal(size=(320, 64)) * 0.05, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(20, 320)), jnp.float32)
+    qt = formats.quantize(w, "itq3_s")
+    calls = []
+    real_get = autotune.get_tiles
+    monkeypatch.setattr(
+        ops.autotune_mod, "get_tiles",
+        lambda *a, **kw: calls.append(a) or real_get(*a, **kw))
+    y = ops.qmatmul_kernel(x, qt, mode="weights", interpret=True)
+    assert calls and calls[0][2] == 320  # logical K, not padded 512
+    y0 = np.asarray(jnp.matmul(x, formats.dequantize(qt, jnp.float32)))
+    np.testing.assert_allclose(np.asarray(y), y0, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# Engine: one transfer per step, device sampling == host argmax, admission
+# ---------------------------------------------------------------------------
+
+def test_engine_one_transfer_per_step():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=3, max_len=48, rt=RT)
+    admitted = eng.admit([Request(rid=i, prompt=np.arange(4 + i), max_new=10)
+                          for i in range(3)])
+    assert admitted == 3
+    assert eng.host_syncs == 1  # batched admission: one fetch for the wave
+    for _ in range(4):
+        before = eng.host_syncs
+        eng.step()
+        assert eng.host_syncs - before == 1
+    assert eng.stats()["syncs_per_token"] < 0.5  # 3 tokens per sync + prefill
+
+
+def test_engine_device_sampling_matches_host_argmax():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    outs = {}
+    for host in (False, True):
+        eng = ServeEngine(params, cfg, slots=2, max_len=48, rt=RT,
+                          sample_on_host=host)
+        done = eng.run([Request(rid=i, prompt=np.arange(3 + 2 * i), max_new=6)
+                        for i in range(4)])
+        outs[host] = [r.out for r in done]
+    assert outs[False] == outs[True]
+    # host mode really is the multi-sync baseline
+    assert ServeEngine(params, cfg, slots=2, rt=RT).host_syncs == 0
+
+
+def test_engine_temperature_sampling_runs():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, rt=RT,
+                      temperature=1.0, seed=7)
+    done = eng.run([Request(rid=0, prompt=np.arange(5), max_new=6)])
+    assert len(done[0].out) >= 6
+    assert all(0 <= t < cfg.vocab_size for t in done[0].out)
+
+
+def test_engine_batched_admission_matches_sequential():
+    """One padded-bucket admission call == admitting slot by slot."""
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    make = lambda: [Request(rid=i, prompt=np.arange(3 + 3 * i), max_new=5)
+                    for i in range(3)]
+    reqs_b, reqs_s = make(), make()
+    eng_b = ServeEngine(params, cfg, slots=3, max_len=48, rt=RT)
+    assert eng_b.admit(reqs_b) == 3  # one wave
+    eng_s = ServeEngine(params, cfg, slots=3, max_len=48, rt=RT)
+    for r in reqs_s:
+        assert eng_s.submit(r)  # one call each
+    for eng in (eng_b, eng_s):
+        while any(eng.active):
+            eng.step()
+    assert [r.out for r in reqs_b] == [r.out for r in reqs_s]
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-7b"])
+def test_ssm_chunked_prefill_matches_exact(arch):
+    """Chunk-ladder SSM/hybrid prefill == one exact-length prefill + decode."""
+    cfg = reduced(get_config(arch))
+    params = lm.init_params(KEY, cfg)
+    prompt = np.arange(9).astype(np.int32)  # 9 = 8 + 1 exercises the ladder
+    eng = ServeEngine(params, cfg, slots=1, max_len=32, rt=RT, prompt_chunk=8)
+    [req] = eng.run([Request(rid=0, prompt=prompt, max_new=4)])
+
+    cache = lm.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    logits, cache, _ = lm.forward(params, jnp.asarray(prompt[None]), RT, cfg,
+                                  cache=cache, pos=0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(3):
+        l, cache = lm.decode_step(params, jnp.asarray([[out[-1]]], jnp.int32),
+                                  cache, jnp.int32(pos), RT, cfg)
+        out.append(int(jnp.argmax(l[0, 0])))
+        pos += 1
+    assert req.out[:4] == out[:4]
+
+
+def test_engine_rejects_empty_prompt():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, rt=RT)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.admit([Request(rid=0, prompt=np.arange(4), max_new=2),
+                   Request(rid=1, prompt=np.array([], np.int32), max_new=2)])
+
+
+def test_bench_doc_schema_validation():
+    from benchmarks.common import BENCH_SCHEMA, validate_bench_doc
+
+    good = {"schema": BENCH_SCHEMA, "suite": "kernels", "device": "cpu",
+            "records": [{"name": "a", "us_per_call": 1.0, "metrics": {}}]}
+    validate_bench_doc(good)
+    for bad in (
+        {**good, "schema": "nope"},
+        {**good, "records": []},
+        {**good, "records": [{"metrics": {}}]},
+        {**good, "records": [{"name": "a", "us_per_call": "fast"}]},
+    ):
+        with pytest.raises(ValueError):
+            validate_bench_doc(bad)

@@ -26,10 +26,19 @@ from repro.kernels.itq3_matvec import MATVEC_MAX_M
 BLOCK = 256
 
 
+# Per 256-weight block the kernel streams 96 bytes of packed planes PLUS
+# the dequant metadata: one f32 scale + one f32 zero-point (the wrappers
+# upcast the stored f16 before the pallas_call), 8 bytes. Counting codes
+# only overstated arithmetic intensity by ~8%.
+SCALE_ZP_BYTES = 8
+PACKED_BYTES = 96  # plane2 (64) + plane1 (32)
+
+
 def kernel_accounting(m, n, k, tm, tn, bpw=3.125):
     kb = k // BLOCK
-    # per output tile (tm x tn): packed weights stream once per k-block
-    wbytes = tn * kb * (96 + 4)  # planes + scales/zps
+    # per output tile (tm x tn): packed weights + scale planes stream once
+    # per k-block
+    wbytes = tn * kb * (PACKED_BYTES + SCALE_ZP_BYTES)
     xbytes = tm * k * 2  # bf16 activations
     obytes = tm * tn * 4
     flops = 2 * m * n * k + 2 * n * k * BLOCK  # matmul + in-kernel rotation
@@ -41,6 +50,13 @@ def kernel_accounting(m, n, k, tm, tn, bpw=3.125):
     n_tiles = -(-n // tn)
     ai = flops / (wbytes * m_tiles + xbytes * n_tiles + obytes)
     return wbytes, vmem, ai
+
+
+def streamed_mb(n, k) -> float:
+    """Total HBM bytes for one full pass over a quantized (K, N) operand:
+    packed codes at 3.125 bits/weight + the per-block scale/zp planes."""
+    blocks = n * (k // BLOCK)
+    return (blocks * (PACKED_BYTES + SCALE_ZP_BYTES)) / 1e6
 
 
 def main(smoke: bool = False) -> None:
@@ -68,6 +84,7 @@ def main(smoke: bool = False) -> None:
         suite.add(f"kernel/fused_weights_m{m}", us_k,
                   kernel=kernel_name, tm=tm, tn=tn,
                   bytes_streamed_packed_mb=round(k * n * 3.125 / 8 / 1e6, 2),
+                  bytes_streamed_total_mb=round(streamed_mb(n, k), 2),
                   vmem_tile_kb=round(vmem / 1024),
                   arith_intensity_flops_per_byte=round(ai, 1),
                   note="interpret-mode walltime")
@@ -90,6 +107,8 @@ def main(smoke: bool = False) -> None:
                 suite.add(f"kernel/tiled_m{m}_hoist_{hoist}", us_h,
                           tile_expansions=(n // tn) * (k // BLOCK)
                           * (1 if hoist else -(-m // 128)))
+    from benchmarks.attn_bench import add_kernel_records
+    add_kernel_records(suite, smoke=smoke)
     suite.write()
 
 

@@ -26,6 +26,10 @@ MODULES = [
     ("theory", "benchmarks.theory_smoothing"),
     ("kernel", "benchmarks.kernel_bench"),
     ("serve", "benchmarks.serve_bench"),
+    # decode-attention records are embedded in the kernel/serve suites
+    # above (benchmarks/attn_bench.py); running the module here too would
+    # measure everything twice. `python -m benchmarks.attn_bench` runs it
+    # standalone (CSV only, JSON trajectory untouched).
 ]
 SMOKE_MODULES = ("kernel", "serve")
 

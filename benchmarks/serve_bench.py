@@ -106,6 +106,8 @@ def main(smoke: bool = False) -> None:
                   host["syncs_per_token"] / max(dev["syncs_per_token"], 1e-9),
                   2),
               tokens_match=True)
+    from benchmarks.attn_bench import add_serve_records
+    add_serve_records(suite, smoke=smoke)
     suite.write()
 
 

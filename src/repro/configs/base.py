@@ -12,7 +12,8 @@ import importlib
 from typing import Optional
 
 __all__ = ["ModelConfig", "ShapeConfig", "get_config", "reduced", "ARCH_IDS",
-           "SHAPES", "runnable_cells", "mixed_precision_recipe"]
+           "SHAPES", "runnable_cells", "mixed_precision_recipe",
+           "kv_cache_bytes_per_token"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +167,28 @@ def mixed_precision_recipe(cfg: ModelConfig, *, head_fmt: str = "q8_0",
         {"pattern": r"(^|\.)(gate|up|down)$", "fmt": mlp_fmt},
         {"pattern": MATMUL_LEAVES, "fmt": rest_fmt},
     ]}
+
+
+def kv_cache_bytes_per_token(cfg: ModelConfig, *, kv_quant: bool = False,
+                             fp_bytes: int = 2) -> int:
+    """Attention KV-cache bytes per cached token position across all
+    attention layers (the long-context serving cost model, and the number
+    ``Runtime.kv_quant`` shrinks).
+
+    fp layout: 2 planes (K, V) x num_kv_heads x head_dim x fp_bytes.
+    Rotated-int8 layout (serve/kv_quant.py): head_dim int8 codes + one fp16
+    scale per vector = head_dim + 2 bytes — ~0.52x of bf16 for the zoo's
+    head dims. SSM families cache O(1) state, not per-token KV: 0."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.attn_every + (
+            1 if cfg.num_layers % cfg.attn_every else 0)
+    else:
+        n_attn = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    per_vector = (hd + 2) if kv_quant else hd * fp_bytes
+    return 2 * n_attn * cfg.num_kv_heads * per_vector
 
 
 def reduced(cfg: ModelConfig) -> ModelConfig:

@@ -9,6 +9,9 @@
                    grid schedules
   itq3_matvec.py   decode-shaped small-M specialization (N-major plane
                    streaming, no M tiling); bit-identical to itq3_matmul
+  attn_decode.py   fused online-softmax decode attention over the
+                   rotated-int8 KV cache (dequantize-free scores via the
+                   FWHT isometry; serve/kv_quant.py codec)
   autotune.py      benchmark-driven (tm, tn) tile selection with an
                    on-disk per-device JSON cache
   ops.py           jitted public wrappers (auto interpret on CPU; shape

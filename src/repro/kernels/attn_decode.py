@@ -1,0 +1,299 @@
+"""Pallas TPU kernel: fused decode attention over the rotated-int8 KV cache.
+
+The serving counterpart of ``serve/kv_quant.py`` (paper §7.2): the cache
+stores each K/V token vector FWHT-rotated and int8-quantized with a
+per-vector fp16 scale. Because H is an isometry,
+
+    q . k  =  (H q) . (H k)
+
+so the score pass needs NO K-side dequantization: the kernel streams int8
+K tiles straight from the cache, contracts them against the *rotated*
+query on the MXU, and multiplies the per-token scale into the score row.
+V dequantizes per tile, but only to its ROTATED values and only after the
+softmax weight is known: the kernel folds the per-token V scale into the
+weight row (``(p * v_scale) @ v_codes``), accumulates the weighted sum in
+the rotated domain, and leaves the single inverse FWHT for the caller —
+``sum_t w_t (H v_t) = H (sum_t w_t v_t)``, so one head_dim-point transform
+per step undoes the rotation for every cached token at once. A full
+dequantized V tile is never materialized anywhere.
+
+Grid ``(R, NT)`` — one row per (batch, kv_head) pair, key tiles innermost —
+with a running online-softmax state in VMEM scratch:
+
+    m   (G, 1)  running max over key tiles
+    l   (G, 1)  running denominator
+    acc (G, HD) running weighted V sum (unnormalized)
+
+Tiles are masked by ``kv_len[r]`` (per-row valid cache length: slot-batched
+serving is ragged), so pad tiles and unwritten cache slots contribute
+nothing. The kernel returns the UNNORMALIZED (acc, m, l) triple: decode
+attends against a cache that does not yet contain the current token, so the
+caller merges the self-token term (one more online-softmax step) and
+normalizes — see :func:`decode_attn_q8`.
+
+Dispatch mirrors qmatmul: ``backend="auto"`` runs the kernel on real TPU
+hardware for power-of-two head dims with HD a lane multiple, and falls back
+to :func:`decode_attn_q8_ref` — the same math as jnp einsums — in interpret
+mode or for odd shapes. The two paths share score/weight formulas exactly
+(scores from codes, V scale folded into the weight row), so greedy token
+streams are identical across backends.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fwht import fwht, is_pow2
+
+__all__ = [
+    "attn_decode_q8_pallas", "decode_attn_q8", "decode_attn_q8_ref",
+    "kernel_supported", "DEFAULT_TT",
+]
+
+DEFAULT_TT = 256  # key-tile width (tokens streamed per grid step)
+NEG_INF = -1e30
+
+
+def kernel_supported(head_dim: int, *, interpret: bool) -> bool:
+    """Shape gate for the fused kernel. Interpret mode takes any pow2
+    head_dim (tests sweep the zoo's 32..128); real TPU lowering additionally
+    wants HD to fill whole 128-wide lanes."""
+    if not is_pow2(head_dim):
+        return False
+    return interpret or head_dim % 128 == 0
+
+
+def _attn_decode_kernel(
+    len_ref,  # (1, 1) int32 SMEM — valid cache length for this row
+    q_ref,    # (1, G, HD) f32 — rotated query row
+    kc_ref,   # (1, TT, HD) int8 — K codes tile
+    ks_ref,   # (1, TT) f32 — K per-token scales
+    vc_ref,   # (1, TT, HD) int8 — V codes tile
+    vs_ref,   # (1, TT) f32 — V per-token scales
+    o_ref,    # (1, G, HD) f32 — unnormalized weighted V sum
+    m_ref,    # (1, G, 1) f32 — running max
+    l_ref,    # (1, G, 1) f32 — running denominator
+    acc_ref,  # scratch (G, HD) f32
+    mx_ref,   # scratch (G, 1) f32
+    dn_ref,   # scratch (G, 1) f32
+    *,
+    sm_scale: float,
+    tt: int,
+    nt: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mx_ref[...] = jnp.full_like(mx_ref, NEG_INF)
+        dn_ref[...] = jnp.zeros_like(dn_ref)
+
+    q = q_ref[0]  # (G, HD) f32, already rotated
+    kc = kc_ref[0].astype(jnp.float32)  # (TT, HD)
+    # dequantize-free scores: (Hq).(Hk) == q.k, per-token scale on the row
+    s = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (ks_ref[...] * sm_scale)  # (G, TT) * (1, TT)
+
+    kpos = t * tt + jax.lax.broadcasted_iota(jnp.int32, (1, tt), 1)
+    valid = kpos < len_ref[0, 0]  # (1, TT)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_old = mx_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)  # NEG_INF - NEG_INF == 0 would leak exp(0)
+    mx_ref[...] = m_new
+    dn_ref[...] = dn_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    # V dequant folded into the weight row: (p * v_scale) @ v_codes
+    pv = p * vs_ref[...]
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        pv, vc_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...][None]
+        m_ref[...] = mx_ref[...][None]
+        l_ref[...] = dn_ref[...][None]
+
+
+@functools.partial(jax.jit, static_argnames=("tt", "interpret", "sm_scale"))
+def attn_decode_q8_pallas(
+    q_rot: jax.Array,    # (R, G, HD) f32 — ROTATED queries, R = B*KV rows
+    k_codes: jax.Array,  # (R, T, HD) int8
+    k_scale: jax.Array,  # (R, T) f16/f32
+    v_codes: jax.Array,  # (R, T, HD) int8
+    v_scale: jax.Array,  # (R, T) f16/f32
+    kv_len: jax.Array,   # (R,) int32 — valid cache positions per row
+    *,
+    sm_scale: float,
+    tt: int = DEFAULT_TT,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Online-softmax decode attention over the quantized cache.
+
+    Returns the UNNORMALIZED triple ``(acc (R, G, HD), m (R, G, 1),
+    l (R, G, 1))`` so the caller can merge the current token's self term
+    before normalizing (the cache never holds the in-flight token)."""
+    r, g, hd = q_rot.shape
+    t = k_codes.shape[1]
+    tt = max(1, min(tt, t))
+    pad_t = (-t) % tt
+    if pad_t:
+        pad3 = ((0, 0), (0, pad_t), (0, 0))
+        k_codes = jnp.pad(k_codes, pad3)
+        v_codes = jnp.pad(v_codes, pad3)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_t)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_t)))
+    tp = k_codes.shape[1]
+    nt = tp // tt
+
+    kernel = functools.partial(_attn_decode_kernel, sm_scale=sm_scale,
+                               tt=tt, nt=nt)
+    grid = (r, nt)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, t_: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, hd), lambda i, t_: (i, 0, 0)),
+            pl.BlockSpec((1, tt, hd), lambda i, t_: (i, t_, 0)),
+            pl.BlockSpec((1, tt), lambda i, t_: (i, t_)),
+            pl.BlockSpec((1, tt, hd), lambda i, t_: (i, t_, 0)),
+            pl.BlockSpec((1, tt), lambda i, t_: (i, t_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, hd), lambda i, t_: (i, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda i, t_: (i, 0, 0)),
+            pl.BlockSpec((1, g, 1), lambda i, t_: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((r, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32).reshape(r, 1), q_rot.astype(jnp.float32),
+      k_codes, k_scale.astype(jnp.float32), v_codes,
+      v_scale.astype(jnp.float32))
+    return out, m, l
+
+
+def _merge_self_token(acc, m, l, s_self, v_self):
+    """One more online-softmax step for the current token, then normalize.
+
+    acc (..., G, HD), m/l (..., G, 1); s_self (..., G, 1) score of the new
+    token; v_self (..., 1, HD) its dequantized V row."""
+    m_tot = jnp.maximum(m, s_self)
+    alpha = jnp.exp(m - m_tot)
+    p_self = jnp.exp(s_self - m_tot)  # (..., G, 1)
+    l_tot = l * alpha + p_self
+    out = acc * alpha + p_self * v_self
+    return out / l_tot
+
+
+def decode_attn_q8_ref(
+    q_rot: jax.Array,       # (B, KV, G, HD) f32 rotated queries
+    k_codes: jax.Array,     # (B, KV, T, HD) int8
+    k_scale: jax.Array,     # (B, KV, T, 1)
+    v_codes: jax.Array,     # (B, KV, T, HD) int8
+    v_scale: jax.Array,     # (B, KV, T, 1)
+    kv_len: jax.Array,      # (B,) int32
+    *,
+    sm_scale: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """jnp reference for the kernel's cache pass: identical score and
+    V-scale-folding formulas, plain (non-online) max/sum over the full key
+    width. Returns the same unnormalized (acc, m, l) triple."""
+    s = jnp.einsum("bkgd,bktd->bkgt", q_rot.astype(jnp.float32),
+                   k_codes.astype(jnp.float32))
+    s = s * (jnp.swapaxes(k_scale.astype(jnp.float32), -1, -2) * sm_scale)
+    tk = k_codes.shape[2]
+    kpos = jnp.arange(tk)
+    valid = kpos[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)  # (B, KV, G, 1)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pv = p * jnp.swapaxes(v_scale.astype(jnp.float32), -1, -2)
+    acc = jnp.einsum("bkgt,bktd->bkgd", pv, v_codes.astype(jnp.float32))
+    return acc, m, l
+
+
+def decode_attn_q8(
+    q: jax.Array,            # (B, KV, G, 1, HD) UNROTATED queries
+    cache: dict,             # {"k","v": int8 (B,KV,T,HD); "k_scale","v_scale": (B,KV,T,1)}
+    k_tok: tuple[jax.Array, jax.Array],  # encoded current-token K: (codes (B,KV,1,HD), scale (B,KV,1,1))
+    v_tok: tuple[jax.Array, jax.Array],  # encoded current-token V
+    kv_len: jax.Array,       # (B,) int32 — valid cached positions (== pos)
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token decode attention against the rotated-int8 cache.
+
+    The current token rides OUTSIDE the cache (same discipline as the fp
+    ``_sdpa_decode_token``): its K/V arrive already encoded through the same
+    codec that will write them to the cache, so the self term sees exactly
+    the values every later step will read back — greedy streams match the
+    dequantize-then-attend reference bit-for-decision.
+
+    Returns (B, KV, G, 1, HD) f32."""
+    from repro.kernels.ops import auto_interpret  # local: avoid import cycle
+
+    if interpret is None:
+        interpret = auto_interpret()
+    b, kv, g, _, hd = q.shape
+    sm_scale = 1.0 / math.sqrt(hd)
+    q_rot = fwht(q[..., 0, :].astype(jnp.float32))  # (B, KV, G, HD)
+
+    use_kernel = backend == "pallas" or (
+        backend == "auto" and not interpret and kernel_supported(
+            hd, interpret=interpret))
+    if use_kernel:
+        r = b * kv
+        acc, m, l = attn_decode_q8_pallas(
+            q_rot.reshape(r, g, hd),
+            cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
+            cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
+            jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
+            sm_scale=sm_scale, interpret=interpret)
+        acc = acc.reshape(b, kv, g, hd)
+        m = m.reshape(b, kv, g, 1)
+        l = l.reshape(b, kv, g, 1)
+    else:
+        acc, m, l = decode_attn_q8_ref(
+            q_rot, cache["k"], cache["k_scale"], cache["v"],
+            cache["v_scale"], kv_len, sm_scale=sm_scale)
+
+    kc_tok, ks_tok = k_tok
+    vc_tok, vs_tok = v_tok
+    # self score through the SAME dequantize-free formula: (Hq).codes * scale
+    s_self = jnp.einsum("bkgd,bkd->bkg", q_rot,
+                        kc_tok[..., 0, :].astype(jnp.float32))[..., None]
+    s_self = s_self * (ks_tok[..., 0, :].astype(jnp.float32)[:, :, None]
+                       * sm_scale)
+    # codes * scale recovers the ROTATED V row (H v); it stays rotated here
+    v_self = (vc_tok.astype(jnp.float32)
+              * vs_tok.astype(jnp.float32))  # (B, KV, 1, HD)
+    out = _merge_self_token(acc, m, l, s_self, v_self)
+    # The cache holds H v, so the weighted sum is sum_t w_t (H v_t)
+    # = H (sum_t w_t v_t): the rotation commutes with the convex combination
+    # and ONE inverse FWHT per step — outside the key-tile loop, outside the
+    # kernel — undoes it for every cached token at once.
+    out = fwht(out)
+    return out[..., None, :]  # (B, KV, G, 1, HD)

@@ -80,6 +80,10 @@ def main() -> None:
     ap.add_argument("--tile-n", type=int, default=None)
     ap.add_argument("--sample-on-host", action="store_true",
                     help="pre-overhaul per-slot host argmax (baseline mode)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="rotated-int8 KV cache (8.25 bits/element; fused "
+                         "Pallas decode attention on TPU, einsum fallback "
+                         "elsewhere)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -87,7 +91,8 @@ def main() -> None:
         cfg = reduced_cfg(cfg)
     rt = Runtime(compute_dtype=jnp.float32, quant_mode=args.quant_mode,
                  backend=args.backend, autotune=args.autotune,
-                 tile_m=args.tile_m, tile_n=args.tile_n)
+                 tile_m=args.tile_m, tile_n=args.tile_n,
+                 kv_quant=args.kv_quant)
 
     if args.load_quantized:
         t0 = time.time()
@@ -123,6 +128,9 @@ def main() -> None:
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                       rt=rt, temperature=args.temperature,
                       sample_on_host=args.sample_on_host)
+    if args.kv_quant:
+        print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
+              f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, size=8 + i % 5),

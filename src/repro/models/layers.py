@@ -25,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.qlinear import qmatmul
 from repro.core.quantize import QTensor
+from repro.kernels.attn_decode import decode_attn_q8
+from repro.serve.kv_quant import kv_decode, kv_encode
 
 __all__ = [
     "Runtime", "dense", "norm_apply", "rope", "mlp_init", "mlp_apply",
@@ -50,6 +52,7 @@ class Runtime:
     remat: bool = False  # rematerialize each layer (training)
     remat_policy: str = "none"  # none | dots  (what each layer may save)
     decode_token_cache: bool = True  # O(1)-byte decode cache writes (perf log A2)
+    kv_quant: bool = False  # rotated-int8 KV cache (serve/kv_quant.py codec)
     rwkv_mode: str = "chunked"  # chunked (MXU) | scan (stepwise reference)
     rules: Any = None  # sharding.rules.Rules | None
     mesh: Any = None
@@ -308,6 +311,7 @@ def attention_apply(
     q = shard_hint(q, rt, "batch", "kv_heads", None, None, None)
     kv_len = None
     new_cache = None
+    quant_cache = cache is not None and "k_scale" in cache
     if cache is not None and t == 1 and token_cache:
         # vLLM-style decode: do NOT rewrite the cache functionally — attend
         # against the stale cache (kv_len masks slot >= pos) plus an
@@ -315,11 +319,58 @@ def attention_apply(
         # token K/V back to the caller, which writes just that slice into
         # the scan-carried cache buffer. Cuts the per-layer cache write
         # from O(T) to O(1) bytes (EXPERIMENTS.md §Perf, cell A).
-        out = _sdpa_decode_token(q, cache["k"], cache["v"], k, v, rt,
-                                 kv_len=pos_vec)
+        if quant_cache:
+            # rotated-int8 cache: the token's K/V go through the codec HERE
+            # so the self term attends against exactly the values every
+            # later step will read back from the cache.
+            kq, ks = kv_encode(k)
+            vq, vs = kv_encode(v)
+            out = decode_attn_q8(q, cache, (kq, ks), (vq, vs), pos_vec,
+                                 backend=rt.backend)
+            out = out.astype(rt.compute_dtype)
+            tok = {"k_tok": kq, "v_tok": vq,
+                   "k_scale_tok": ks, "v_scale_tok": vs}
+        else:
+            out = _sdpa_decode_token(q, cache["k"], cache["v"], k, v, rt,
+                                     kv_len=pos_vec)
+            tok = {"k_tok": k, "v_tok": v}
         out = out.reshape(b, h, 1, hd).swapaxes(1, 2).reshape(b, t, h * hd)
-        return dense(out, p["wo"], rt), {"k_tok": k, "v_tok": v}
-    if cache is not None:
+        return dense(out, p["wo"], rt), tok
+    if quant_cache:
+        # prefill (or functional-cache decode) over the quantized cache:
+        # encode the new K/V span and write codes+scales at pos.
+        kq, ks = kv_encode(k)
+        vq, vs = kv_encode(v)
+        upd = jax.vmap(partial(jax.lax.dynamic_update_slice_in_dim, axis=1))
+        ck = upd(cache["k"], kq, pos_vec)
+        cks = upd(cache["k_scale"], ks.astype(cache["k_scale"].dtype), pos_vec)
+        cv = upd(cache["v"], vq, pos_vec)
+        cvs = upd(cache["v_scale"], vs.astype(cache["v_scale"].dtype), pos_vec)
+        ck = shard_hint(ck, rt, "batch", "kv_heads", "kv_seq", None)
+        cv = shard_hint(cv, rt, "batch", "kv_heads", "kv_seq", None)
+        cks = shard_hint(cks, rt, "batch", "kv_heads", "kv_seq", None)
+        cvs = shard_hint(cvs, rt, "batch", "kv_heads", "kv_seq", None)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        if t == 1:
+            # single-token decode WITHOUT the scan-carry mechanism (hybrid's
+            # shared attention block, or decode_token_cache=False): same
+            # dequantize-free path as the token-cache branch — attend the
+            # PRE-write cache plus the encoded self term — instead of
+            # dequantizing the whole max_len cache every step. Only the
+            # functional write above touches the full buffers.
+            out = decode_attn_q8(q, cache, (kq, ks), (vq, vs), pos_vec,
+                                 backend=rt.backend)
+            out = out.astype(rt.compute_dtype)
+            out = out.reshape(b, h, 1, hd).swapaxes(1, 2).reshape(b, t, h * hd)
+            return dense(out, p["wo"], rt), new_cache
+        # prefill: attend against the dequantized cache — the decoded values
+        # are exactly what every later decode step reads back, so prefill
+        # and decode see one cache.
+        k = kv_decode(ck, cks)
+        v = kv_decode(cv, cvs)
+        kv_len = pos_vec + t
+        causal = t > 1
+    elif cache is not None:
         upd = jax.vmap(partial(jax.lax.dynamic_update_slice_in_dim, axis=1))
         ck = upd(cache["k"], k.astype(cache["k"].dtype), pos_vec)
         cv = upd(cache["v"], v.astype(cache["v"].dtype), pos_vec)

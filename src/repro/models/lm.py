@@ -119,11 +119,32 @@ def _mamba_layer_init(key, cfg) -> Params:
 # Caches / states
 # ===========================================================================
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               *, kv_quant: bool = False) -> Params:
+    """Serving cache pytree. ``kv_quant=True`` lays the self-attention KV
+    cache out as rotated-int8 codes plus per-token fp16 scales (the
+    serve/kv_quant.py codec): 8.25 bits/element instead of 16/32. The
+    cross-attention memory (audio) stays fp — it is written once at prefill
+    and re-read every step, so re-dequantizing it each step would trade its
+    one-time bytes for per-step compute. Requires a power-of-two head_dim
+    (every arch in the zoo qualifies)."""
+    from repro.core.fwht import is_pow2
+
     kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     fam = cfg.family
+    if kv_quant and not is_pow2(hd):
+        raise ValueError(f"kv_quant needs a power-of-two head_dim, got {hd}")
 
-    def kv(n_layers, length):
+    def kv(n_layers, length, quant=kv_quant):
+        if quant:
+            return {
+                "k": jnp.zeros((n_layers, batch, kvh, length, hd), jnp.int8),
+                "v": jnp.zeros((n_layers, batch, kvh, length, hd), jnp.int8),
+                "k_scale": jnp.zeros((n_layers, batch, kvh, length, 1),
+                                     jnp.float16),
+                "v_scale": jnp.zeros((n_layers, batch, kvh, length, 1),
+                                     jnp.float16),
+            }
         return {
             "k": jnp.zeros((n_layers, batch, kvh, length, hd), dtype),
             "v": jnp.zeros((n_layers, batch, kvh, length, hd), dtype),
@@ -145,7 +166,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
     if fam == "audio":
         # self-attn cache + cross-attn memory (filled by prefill)
         return {"attn": kv(cfg.num_layers, max_len),
-                "xattn": kv(cfg.num_layers, cfg.frontend_len)}
+                "xattn": kv(cfg.num_layers, cfg.frontend_len, quant=False)}
     raise ValueError(fam)
 
 
@@ -242,7 +263,9 @@ def _run_decoder(params, x, rt, cfg, *, cache, pos, memory=None, causal=True):
 
 
 def _kv_tree(kv):
-    return {"k": kv["k"], "v": kv["v"]}
+    # shallow copy of every cache leaf (k/v, plus scale planes when the
+    # cache is rotated-int8 quantized)
+    return dict(kv)
 
 
 def _write_token_kv(stacked, tok, layer_idx, pos_vec):
@@ -256,38 +279,49 @@ def _write_token_kv(stacked, tok, layer_idx, pos_vec):
     return jax.vmap(upd, in_axes=(1, 0, 0), out_axes=1)(stacked, tok, pos_vec)
 
 
+# attn-cache leaf -> the token-slice key attention_apply returns for it.
+# fp caches carry {k, v}; rotated-int8 caches also carry the scale planes.
+_TOK_KEYS = {"k": "k_tok", "v": "v_tok",
+             "k_scale": "k_scale_tok", "v_scale": "v_scale_tok"}
+
+
 def _run_decoder_token(params, x, rt, cfg, *, cache, pos):
     """Single-token decode for attention families: the KV cache rides the
     scan CARRY and each layer writes only its new token's K/V slice —
     instead of functionally rewriting the full (B, KV, T, HD) cache per
     layer through scan ys (which costs O(T) write bandwidth per layer per
-    token). See EXPERIMENTS.md §Perf cell A."""
+    token). See EXPERIMENTS.md §Perf cell A.
+
+    The carry is a dict over whatever leaves the attn cache has — (k, v)
+    for fp caches, (k, v, k_scale, v_scale) for the rotated-int8 layout —
+    so the O(1)-byte write discipline covers both."""
     b = x.shape[0]
     pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     has_x = "xattn" in cache
+    leaf_keys = sorted(cache["attn"].keys())
 
     def body(carry, inp):
-        xc, ck, cv, i = carry
+        xc, cdict, i = carry
+        layer_attn = {lk: jax.lax.dynamic_index_in_dim(cdict[lk], i, 0, False)
+                      for lk in leaf_keys}
         if has_x:
             lp, xk, xv = inp
-            layer_cache = {"attn": {"k": jax.lax.dynamic_index_in_dim(ck, i, 0, False),
-                                    "v": jax.lax.dynamic_index_in_dim(cv, i, 0, False)},
-                           "xattn": {"k": xk, "v": xv}}
+            layer_cache = {"attn": layer_attn, "xattn": {"k": xk, "v": xv}}
         else:
             lp = inp
-            layer_cache = {"attn": {"k": jax.lax.dynamic_index_in_dim(ck, i, 0, False),
-                                    "v": jax.lax.dynamic_index_in_dim(cv, i, 0, False)}}
+            layer_cache = {"attn": layer_attn}
         xnew, cnew, aux = _dense_layer_apply(
             lp, xc, rt, cfg, cache=layer_cache, pos=pos_vec, token_cache=True)
-        ck = _write_token_kv(ck, cnew["attn"]["k_tok"], i, pos_vec)
-        cv = _write_token_kv(cv, cnew["attn"]["v_tok"], i, pos_vec)
-        return (xnew, ck, cv, i + 1), aux
+        cdict = {lk: _write_token_kv(cdict[lk], cnew["attn"][_TOK_KEYS[lk]],
+                                     i, pos_vec)
+                 for lk in leaf_keys}
+        return (xnew, cdict, i + 1), aux
 
     xs = (params["layers"], cache["xattn"]["k"], cache["xattn"]["v"]) if has_x \
         else params["layers"]
-    (x, ck, cv, _), auxs = jax.lax.scan(
-        body, (x, cache["attn"]["k"], cache["attn"]["v"], jnp.int32(0)), xs)
-    new_cache = {"attn": {"k": ck, "v": cv}}
+    (x, cdict, _), auxs = jax.lax.scan(
+        body, (x, dict(cache["attn"]), jnp.int32(0)), xs)
+    new_cache = {"attn": cdict}
     if has_x:
         new_cache["xattn"] = _kv_tree(cache["xattn"])
     return x, new_cache, jnp.mean(auxs)

@@ -59,7 +59,8 @@ class ServeEngine:
     def __init__(self, params, cfg, *, slots: int = 4, max_len: int = 256,
                  rt: Optional[Runtime] = None, prompt_pad: int = 64,
                  prompt_chunk: int = 16, temperature: float = 0.0,
-                 seed: int = 0, sample_on_host: bool = False):
+                 seed: int = 0, sample_on_host: bool = False,
+                 cache_dtype=jnp.float32):
         self.params = params
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
@@ -69,7 +70,12 @@ class ServeEngine:
         self.prompt_chunk = prompt_chunk
         self.temperature = float(temperature)
         self.sample_on_host = sample_on_host
-        self.cache = lm.init_cache(cfg, slots, max_len, dtype=jnp.float32)
+        # Runtime.kv_quant lays the attention cache out as rotated-int8
+        # codes + fp16 scales (serve/kv_quant.py); cache_dtype is the fp
+        # cache element type otherwise (f32 default keeps CPU tests exact,
+        # bf16 is the deployment baseline the bytes ratio is quoted against)
+        self.cache = lm.init_cache(cfg, slots, max_len, dtype=cache_dtype,
+                                   kv_quant=self.rt.kv_quant)
         self.pos = np.zeros(slots, dtype=np.int32)  # next write index per slot
         self.active: list[Optional[Request]] = [None] * slots
         self._next_tok = np.zeros(slots, dtype=np.int32)
@@ -279,13 +285,32 @@ class ServeEngine:
             self.step()
         return requests
 
+    @property
+    def cache_bytes(self) -> int:
+        """Total bytes held by the slot cache (KV planes + scale planes +
+        recurrent state). Benchmarks and tests assert the rotated-int8
+        shrink against this instead of poking cache internals."""
+        return int(sum(a.nbytes for a in jax.tree.leaves(self.cache)))
+
     def stats(self) -> dict:
-        """Perf counters for the bench harness."""
+        """Perf counters for the bench harness. ``cache_bytes_per_token``
+        counts only the per-token self-attention KV planes — SSM/hybrid
+        recurrent state and the audio cross-attention memory are O(1) in
+        decoded tokens, so folding them in would misprice long contexts
+        (an attention-free arch reports 0)."""
+        attn = self.cache.get("attn", {})
+        attn_bytes = sum(a.nbytes for a in jax.tree.leaves(attn))
+        # divide by the buffer's REAL position count (frontend archs allocate
+        # max_len + frontend_len slots), not max_len, so the vision prefix
+        # isn't misbilled as per-decoded-token cost
+        n_pos = attn["k"].shape[3] if attn else 1
         return {
             "host_syncs": self.host_syncs,
             "tokens_decoded": self.tokens_decoded,
             "syncs_per_token": (self.host_syncs / self.tokens_decoded
                                 if self.tokens_decoded else float("nan")),
+            "cache_bytes": self.cache_bytes,
+            "cache_bytes_per_token": attn_bytes / (self.slots * n_pos),
         }
 
 

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.serve import kv_quant
 
@@ -47,3 +48,63 @@ def test_dequantize_free_scores():
 def test_bytes_ratio():
     assert abs(kv_quant.cache_bytes_ratio(128) - 0.508) < 0.01
     assert kv_quant.cache_bytes_ratio(64) < 0.6
+
+
+@pytest.mark.parametrize("hd", [32, 64, 128])
+def test_codec_roundtrip_config_zoo_head_dims(hd):
+    """Every head_dim in the zoo (32..128, all pow2) survives the codec."""
+    x = jax.random.normal(KEY, (2, 3, 17, hd)) * 3.0
+    q, s = kv_quant.kv_encode(x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert s.dtype == jnp.float16 and s.shape == (2, 3, 17, 1)
+    xh = kv_quant.kv_decode(q, s)
+    rel = float(jnp.linalg.norm(xh - x) / jnp.linalg.norm(x))
+    assert rel < 0.012, (hd, rel)
+
+
+def test_codec_rejects_non_pow2():
+    with pytest.raises(ValueError, match="power of two"):
+        kv_quant.kv_encode(jnp.ones((2, 48)))
+
+
+def test_gqa_head_sharing_scores():
+    """One encoded K per KV head serves every query head in its group:
+    per-group scores from the shared codes == per-group fp scores."""
+    b, kv, g, t, hd = 2, 2, 3, 12, 64
+    q = jax.random.normal(KEY, (b, kv, g, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, kv, t, hd))
+    from repro.core.fwht import fwht
+    codes, scale = kv_quant.kv_encode(k)  # encoded ONCE per KV head
+    got = kv_quant.kv_scores(fwht(q), codes, scale)
+    want = jnp.einsum("bkgqd,bktd->bkgqt", q, k)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 0.05 * float(jnp.max(jnp.abs(want)))
+    # every query head in the group read the SAME codes: encoding per query
+    # head would change nothing but the bytes
+    assert codes.shape == (b, kv, t, hd)
+
+
+def test_encode_append_decode_ragged_roundtrip():
+    """Cache discipline: bulk-encode a prefix, append one token at a ragged
+    position, decode the whole buffer — values match per-vector encoding."""
+    b, kv, t_max, hd = 2, 1, 19, 32
+    prefix_len = 13
+    k_prefix = jax.random.normal(KEY, (b, kv, prefix_len, hd))
+    k_tok = jax.random.normal(jax.random.PRNGKey(2), (b, kv, 1, hd))
+
+    codes = jnp.zeros((b, kv, t_max, hd), jnp.int8)
+    scales = jnp.zeros((b, kv, t_max, 1), jnp.float16)
+    cp, sp = kv_quant.kv_encode(k_prefix)
+    codes = jax.lax.dynamic_update_slice(codes, cp, (0, 0, 0, 0))
+    scales = jax.lax.dynamic_update_slice(scales, sp, (0, 0, 0, 0))
+    ct, st = kv_quant.kv_encode(k_tok)
+    codes = jax.lax.dynamic_update_slice(codes, ct, (0, 0, prefix_len, 0))
+    scales = jax.lax.dynamic_update_slice(scales, st, (0, 0, prefix_len, 0))
+
+    out = kv_quant.kv_decode(codes, scales)
+    want = kv_quant.kv_decode(*kv_quant.kv_encode(
+        jnp.concatenate([k_prefix, k_tok], axis=2)))
+    np.testing.assert_allclose(np.asarray(out[:, :, :prefix_len + 1]),
+                               np.asarray(want), atol=1e-6)
+    # unwritten tail decodes to exact zeros (zero scale), not garbage
+    assert float(jnp.max(jnp.abs(out[:, :, prefix_len + 1:]))) == 0.0

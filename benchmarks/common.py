@@ -30,6 +30,15 @@ TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "300"))
 
 BENCH_SCHEMA = "repro.bench.v1"
 
+# Records whose name starts with a prefix below must carry the listed
+# metric keys — the CI bench-smoke job validates the request-lifecycle
+# serving records (scheduler TTFT/queue-wait, cache-donation no-copy)
+# through the same schema gate as everything else.
+REQUIRED_METRICS_BY_PREFIX = {
+    "serve/sched_": ("policy", "ttft_ms", "queue_wait_ms", "tok_s", "tokens"),
+    "serve/cache_donation": ("donated", "bytes_moved", "decode_steps"),
+}
+
 
 def repo_root() -> Path:
     return Path(__file__).resolve().parents[1]
@@ -96,6 +105,12 @@ def validate_bench_doc(doc: dict) -> None:
             raise ValueError(f"non-numeric us_per_call in {rec['name']}")
         if not isinstance(rec.get("metrics", {}), dict):
             raise ValueError(f"metrics must be a dict in {rec['name']}")
+        for prefix, required in REQUIRED_METRICS_BY_PREFIX.items():
+            if rec["name"].startswith(prefix):
+                missing = [k for k in required if k not in rec["metrics"]]
+                if missing:
+                    raise ValueError(
+                        f"record {rec['name']} missing metrics {missing}")
 
 
 def load_and_validate(path: str | Path) -> dict:

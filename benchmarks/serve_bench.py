@@ -17,7 +17,18 @@ Each engine is run once untimed (jit warmup) and then timed on a fresh
 request batch; engines are reused across batches so compile time never
 lands in the measurement.
 
-Emits ``BENCH_serve.json`` at the repo root (schema: benchmarks/common.py).
+Request-lifecycle records (PR 4):
+
+  * ``serve/cache_donation`` — asserts the jitted decode's donated cache
+    buffers actually engaged (``cache_bytes_moved == 0``): a regression
+    back to per-step functional cache copies fails the bench.
+  * ``serve/sched_{fifo,priority,sjf}`` — streams a saturating queue
+    through ``ServeEngine.generate`` under each admission policy and
+    records mean queue wait, mean TTFT, and end-to-end tok/s.
+
+Emits ``BENCH_serve.json`` at the repo root (schema: benchmarks/common.py;
+the scheduler/donation records carry required metric keys the CI
+bench-smoke job validates).
 """
 from __future__ import annotations
 
@@ -68,6 +79,44 @@ def _run_mode(params, cfg, *, sample_on_host: bool, slots: int,
         "syncs_per_token": (eng.host_syncs - syncs0) / max(
             eng.tokens_decoded - toks0, 1),
         "out": out,
+        "engine_stats": eng.stats(),
+    }
+
+
+def _run_scheduler(params, cfg, *, policy: str, slots: int, n_requests: int,
+                   max_new: int, max_len: int):
+    """Submit a full queue up front and stream via ``generate()``: measures
+    the lifecycle numbers admission policy actually moves — queue wait and
+    TTFT — plus end-to-end tok/s. Prompt lengths and priorities are spread
+    so fifo/priority/sjf produce genuinely different admission orders."""
+    eng = ServeEngine(params, cfg, slots=slots, max_len=max_len, rt=RT,
+                      scheduler=policy)
+    rng = np.random.default_rng(5)
+
+    def make():
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=4 + (i * 7) % 13),
+                        max_new=max_new, priority=i % 3)
+                for i in range(n_requests)]
+
+    for _ in eng.generate(make()):  # warmup: compile every wave shape
+        pass
+    reqs = make()
+    t0 = time.perf_counter()
+    n_events = sum(1 for _ in eng.generate(reqs))
+    wall = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in reqs)
+    assert n_events == tokens, "one StreamEvent per emitted token"
+    ttft = float(np.mean([r.t_first - r.t_submit for r in reqs]))
+    queue_wait = float(np.mean([r.t_admit - r.t_submit for r in reqs]))
+    return {
+        "policy": policy,
+        "wall_s": wall,
+        "tokens": tokens,
+        "tok_s": tokens / wall,
+        "ttft_ms": 1e3 * ttft,
+        "queue_wait_ms": 1e3 * queue_wait,
     }
 
 
@@ -106,6 +155,34 @@ def main(smoke: bool = False) -> None:
                   host["syncs_per_token"] / max(dev["syncs_per_token"], 1e-9),
                   2),
               tokens_match=True)
+
+    # donated decode cache: the per-step functional copy must be GONE —
+    # a nonzero bytes-moved counter means jit stopped donating in place
+    est = dev["engine_stats"]
+    if est["cache_bytes_moved"] != 0:
+        raise AssertionError(
+            f"decode cache copied {est['cache_bytes_moved']} bytes over "
+            f"{est['decode_steps']} steps: donation did not engage")
+    suite.add("serve/cache_donation",
+              donated=bool(est["cache_donated"]),
+              bytes_moved=est["cache_bytes_moved"],
+              decode_steps=est["decode_steps"],
+              cache_bytes=est["cache_bytes"])
+
+    # request-lifecycle scheduling: queue wait / TTFT / tok/s per policy
+    for policy in ("fifo", "priority", "sjf"):
+        r = _run_scheduler(qparams, cfg, policy=policy, slots=slots,
+                           n_requests=2 * n_requests, max_new=max_new,
+                           max_len=max_len)
+        suite.add(f"serve/sched_{policy}",
+                  us_per_call=1e6 * r["wall_s"] / max(r["tokens"], 1),
+                  policy=policy,
+                  ttft_ms=round(r["ttft_ms"], 2),
+                  queue_wait_ms=round(r["queue_wait_ms"], 2),
+                  tok_s=round(r["tok_s"], 2),
+                  tokens=r["tokens"],
+                  slots=slots)
+
     from benchmarks.attn_bench import add_serve_records
     add_serve_records(suite, smoke=smoke)
     suite.write()

@@ -49,6 +49,9 @@ class ModelConfig:
     frontend_dim: int = 0  # provided patch/frame embedding width
     frontend_len: int = 0  # provided patch/frame count
     tie_embeddings: bool = True
+    # --- serving ---
+    eos_token_id: Optional[int] = None  # engine finishes a request on this
+    #   token unless its SamplingParams sets ignore_eos (None: no EOS)
 
     @property
     def resolved_head_dim(self) -> int:

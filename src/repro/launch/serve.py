@@ -19,6 +19,12 @@ The quantized tree can be checkpointed and served straight from disk
 Optionally restores trained weights from a checkpoint directory (as written
 by launch/train.py) before quantizing — the full offline pipeline of the
 paper: train/load fp weights -> Algorithm 1 -> deploy packed planes.
+
+Request-lifecycle serving (PR 4): per-request sampling knobs
+(``--temperature/--top-k/--top-p/--sampling-seed/--stop-token``), pluggable
+admission policy (``--scheduler fifo|priority|sjf``), and ``--stream`` to
+print StreamEvents (finish reason, TTFT, queue wait) as requests complete
+instead of waiting for the closed batch.
 """
 from __future__ import annotations
 
@@ -34,10 +40,11 @@ from repro.checkpoint import ckpt as ckpt_mod
 from repro.configs.base import get_config, mixed_precision_recipe, reduced as reduced_cfg
 from repro.models import lm
 from repro.models.layers import Runtime
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
 from repro.serve.quantized import (
     QuantPolicy, describe_quantized, quantize_params, quantized_bytes,
 )
+from repro.serve.scheduler import SCHEDULERS
 from repro.train import loop as train_loop
 
 
@@ -72,6 +79,23 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); >0 samples on device")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) filter (1.0 = disabled)")
+    ap.add_argument("--sampling-seed", type=int, default=None,
+                    help="per-request PRNG seed base (request i uses seed+i); "
+                         "default derives deterministic keys from rid")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="stop-token id finishing a request early "
+                         "(repeatable)")
+    ap.add_argument("--scheduler", default="fifo", choices=sorted(SCHEDULERS),
+                    help="admission policy: fifo | priority (Request."
+                         "priority, demoed with rid%%3) | sjf "
+                         "(shortest-prompt-first)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print StreamEvents as tokens arrive instead of "
+                         "waiting for the closed batch")
     ap.add_argument("--autotune", action="store_true",
                     help="benchmark kernel tile sizes for this model's "
                          "shapes on boot (TPU only; no-op in interpret mode)")
@@ -127,23 +151,42 @@ def main() -> None:
 
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                       rt=rt, temperature=args.temperature,
-                      sample_on_host=args.sample_on_host)
+                      sample_on_host=args.sample_on_host,
+                      scheduler=args.scheduler)
     if args.kv_quant:
         print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
               f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, size=8 + i % 5),
-                    max_new=args.max_new)
-            for i in range(args.requests)]
+    reqs = []
+    for i in range(args.requests):
+        sp = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=None if args.sampling_seed is None else args.sampling_seed + i,
+            stop=tuple(args.stop_token or ()))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=8 + i % 5),
+            max_new=args.max_new, sampling=sp,
+            priority=i % 3 if args.scheduler == "priority" else 0))
     t0 = time.time()
-    done = eng.run(reqs)
+    if args.stream:
+        for ev in eng.generate(reqs):
+            if ev.finished:
+                st = ev.stats or {}
+                print(f"  rid={ev.rid} finished [{ev.finish_reason}] "
+                      f"{st.get('tokens', 0)} tokens, "
+                      f"ttft {st.get('ttft_s', float('nan'))*1e3:.0f}ms, "
+                      f"queue {st.get('queue_wait_s', 0)*1e3:.0f}ms")
+        done = reqs
+    else:
+        done = eng.run(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(r.out) for r in done)
     st = eng.stats()
     print(f"served {len(done)} requests / {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on {jax.default_backend()}, "
-          f"{st['syncs_per_token']:.2f} host syncs/token)")
+          f"{st['syncs_per_token']:.2f} host syncs/token, "
+          f"scheduler={st['scheduler']}, "
+          f"cache bytes moved {st['cache_bytes_moved']})")
     for r in done[:3]:
         print(f"  rid={r.rid} -> {r.out[:10]}")
 

@@ -38,7 +38,7 @@ Params = dict[str, Any]
 
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "model_flops",
-    "sample_tokens",
+    "sample_tokens", "top_mask",
 ]
 
 
@@ -591,29 +591,86 @@ def decode_step(
     return _head(params, x, rt, cfg), new_cache
 
 
+def top_mask(
+    logits: jax.Array,  # (B, V) float32
+    top_k: Optional[jax.Array] = None,  # (B,) int32; 0 disables per row
+    top_p: Optional[jax.Array] = None,  # (B,) float32; 1.0 disables per row
+) -> jax.Array:
+    """Mask logits outside the per-row top-k / top-p (nucleus) sets to -inf.
+
+    Both filters reduce to a per-row VALUE threshold against the
+    descending-sorted logits, so the whole batch is masked with one sort +
+    one cumsum — no per-row loops, heterogeneous k/p in one trace. Every
+    row keeps at least its argmax (k is clipped to >= 1 when enabled; the
+    first nucleus token is always kept since its preceding mass is 0).
+    Row-independent by construction, which the engine's batched==sequential
+    bit-parity contract relies on."""
+    v = logits.shape[-1]
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    thresh = jnp.full(logits.shape[:-1], -jnp.inf, jnp.float32)
+    if top_k is not None:
+        k = jnp.asarray(top_k, jnp.int32)
+        kth = jnp.take_along_axis(
+            sorted_desc, jnp.clip(k - 1, 0, v - 1)[..., None], axis=-1)[..., 0]
+        thresh = jnp.maximum(thresh, jnp.where(k > 0, kth, -jnp.inf))
+    if top_p is not None:
+        p = jnp.asarray(top_p, jnp.float32)
+        probs = jax.nn.softmax(sorted_desc, axis=-1)
+        # keep a token iff the mass STRICTLY BEFORE it is < p: the token
+        # that crosses the p boundary is included (standard nucleus rule)
+        keep = (jnp.cumsum(probs, axis=-1) - probs) < p[..., None]
+        pth = jnp.min(jnp.where(keep, sorted_desc, jnp.inf), axis=-1)
+        thresh = jnp.maximum(thresh, jnp.where(p < 1.0, pth, -jnp.inf))
+    return jnp.where(logits >= thresh[..., None], logits, -jnp.inf)
+
+
 def sample_tokens(
     logits: jax.Array,  # (..., V)
     key: Optional[jax.Array] = None,
     temperature: jax.Array | float = 0.0,
+    *,
+    top_k: Optional[jax.Array] = None,  # (B,) per-row; None disables
+    top_p: Optional[jax.Array] = None,  # (B,) per-row; None disables
 ) -> jax.Array:
-    """Greedy argmax (``key=None``) or temperature sampling, on device.
+    """Greedy argmax (``key=None``) or temperature/top-k/top-p sampling,
+    on device.
 
     Designed to live INSIDE the jitted decode step: the engine then moves
     one (slots,) int32 vector per step across the device->host boundary
     instead of one logits row per slot. Greedy decoding passes ``key=None``
     so the hot loop traces to a bare argmax — no PRNG work (threefry over
-    (B, V) is real cost on CPU). With a key, ``temperature`` is a traced
-    scalar (flipping it never recompiles); both the categorical and the
-    argmax are computed and selected with where, since temp <= 0 must still
-    mean greedy.
-    """
+    (B, V) is real cost on CPU). With a key, ``temperature`` is traced
+    (flipping it never recompiles); both the categorical and the argmax are
+    computed and selected with where, since temp <= 0 must still mean
+    greedy.
+
+    The serving path passes PER-ROW vectors: ``temperature``/``top_k``/
+    ``top_p`` of shape (B,) and ``key`` as a (B, 2) batch of uint32 keys —
+    every row then samples under its own knobs and its own PRNG stream
+    (vmapped categorical), so heterogeneous requests batch in one jitted
+    decode and each row's draw is bit-identical to sampling that row alone
+    with its key. A single (2,) key with scalar temperature keeps the
+    legacy shared-stream behavior."""
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     if key is None:
         return greedy
     temp = jnp.asarray(temperature, jnp.float32)
-    sampled = jax.random.categorical(
-        key, logits / jnp.maximum(temp, 1e-6), axis=-1).astype(jnp.int32)
+    # temperature BEFORE the nucleus filter (the standard order): top-p's
+    # keep-set is computed on the distribution actually sampled from, so
+    # temp > 1 widens the nucleus and temp < 1 narrows it. top-k is
+    # scale-invariant either way. (Greedy rows scale by 1/1e-6; softmax's
+    # max-subtraction keeps that finite, and `where` discards the draw.)
+    scaled = logits / jnp.maximum(temp, 1e-6)[..., None] \
+        if temp.ndim else logits / jnp.maximum(temp, 1e-6)
+    if top_k is not None or top_p is not None:
+        scaled = top_mask(scaled, top_k, top_p)
+    if key.ndim == 2:  # (B, 2) raw key batch: one private stream per row
+        sampled = jax.vmap(
+            lambda k, row: jax.random.categorical(k, row, axis=-1)
+        )(key, scaled).astype(jnp.int32)
+    else:  # single key (typed, or raw (2,)): legacy shared stream
+        sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temp > 0, sampled, greedy)
 
 

@@ -1,4 +1,5 @@
-"""Serving engine: batched prefill/decode with continuous batching.
+"""Serving engine: a typed request lifecycle over batched prefill/decode
+with continuous batching.
 
 ``ServeEngine`` owns a fixed slot-batched KV cache (B slots x max_len) and
 admits requests continuously: free slots are prefilled with new prompts
@@ -7,18 +8,39 @@ admits requests continuously: free slots are prefilled with new prompts
 instead of paged blocks; pages are unnecessary when max_len is fixed per
 deployment, and static layouts are what TPU SPMD wants).
 
-The engine is model-agnostic: any architecture in the zoo works, quantized
-(QTensor params) or not. Per-slot position counters mask attention so slots
-never see each other's garbage.
+The request lifecycle (this module's public surface):
+
+* :class:`Request` carries a prompt plus :class:`SamplingParams`
+  (temperature/top-k/top-p, per-request PRNG seed, stop tokens, output
+  budget) and a ``priority`` for the scheduler.
+* A pluggable :class:`~repro.serve.scheduler.Scheduler` owns the waiting
+  queue; the engine asks it for admission waves whenever slots free up.
+* :meth:`ServeEngine.generate` streams :class:`StreamEvent`s — one per
+  emitted token, terminal events carrying the finish reason (``stop`` /
+  ``length`` / ``cancelled``) and lifecycle stats (queue wait, TTFT,
+  decode tok/s). :meth:`ServeEngine.cancel` evicts a live slot or a queued
+  request mid-stream.
+* :meth:`ServeEngine.run` remains as a thin closed-batch shim over
+  ``generate`` (the benchmarks' token-parity baseline).
 
 Hot-path discipline (the decode loop is the product):
 
-* **One device->host transfer per step.** Sampling (greedy argmax or
-  temperature) runs inside the jitted ``decode``; ``step()`` fetches a
-  single (slots,) int32 vector. ``sample_on_host=True`` restores the
-  pre-overhaul per-slot host argmax — kept as the measured baseline for
-  benchmarks/serve_bench.py. ``host_syncs`` counts every transfer either
-  way.
+* **One device->host transfer per step.** Sampling runs inside the jitted
+  ``decode`` under PER-SLOT device vectors (temperature/top-k/top-p and a
+  (slots, 2) batch of PRNG keys), so heterogeneous requests — greedy next
+  to nucleus-sampled — batch in one compiled step; ``step()`` fetches a
+  single (slots,) int32 vector. Each slot's key is its request's own
+  (derived from the request seed, folded with the request-local token
+  index), making batched streams bit-identical to running each request
+  alone. An all-greedy batch drops to a PRNG-free argmax trace.
+  ``sample_on_host=True`` restores the pre-overhaul per-slot host argmax —
+  kept as the measured baseline for benchmarks/serve_bench.py.
+  ``host_syncs`` counts every transfer either way.
+* **Donated cache buffers.** The jitted prefill/decode donate the cache
+  operand (``donate_argnums``), so XLA writes the new cache in place
+  instead of functionally copying ~cache_bytes every step;
+  ``cache_bytes_moved`` counts any step where donation did NOT engage
+  (asserted zero in benchmarks/serve_bench.py).
 * **One compiled call per admission wave.** All free slots are admitted
   together: prompts are padded to one shared ``prompt_pad`` bucket and
   prefilled in a single jitted call that also ZEROES the admitted slots'
@@ -34,7 +56,8 @@ Hot-path discipline (the decode loop is the product):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import time
+from typing import Any, Iterable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,17 +65,42 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.layers import Runtime
+from repro.serve.sampling import (
+    FINISH_CANCELLED, FINISH_LENGTH, FINISH_STOP, SamplingParams, StreamEvent,
+)
+from repro.serve.scheduler import Scheduler, get_scheduler
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "SamplingParams", "StreamEvent"]
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray  # (L,) int32
-    max_new: int = 32
+    max_new: int = 32  # output budget (SamplingParams.max_new overrides)
+    sampling: Optional[SamplingParams] = None  # None -> engine default
+    priority: int = 0  # PriorityScheduler: higher admits first
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None
+    # --- lifecycle stamps (perf_counter seconds, filled by the engine) ---
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    def stats(self) -> dict:
+        """Lifecycle stats (present on the terminal StreamEvent)."""
+        n = len(self.out)
+        out: dict = {"tokens": n, "finish_reason": self.finish_reason}
+        if self.t_submit is not None and self.t_admit is not None:
+            out["queue_wait_s"] = self.t_admit - self.t_submit
+        if self.t_submit is not None and self.t_first is not None:
+            out["ttft_s"] = self.t_first - self.t_submit
+        if self.t_first is not None and self.t_done is not None and n > 1:
+            dt = self.t_done - self.t_first
+            out["decode_tok_s"] = (n - 1) / dt if dt > 0 else float("inf")
+        return out
 
 
 class ServeEngine:
@@ -60,7 +108,10 @@ class ServeEngine:
                  rt: Optional[Runtime] = None, prompt_pad: int = 64,
                  prompt_chunk: int = 16, temperature: float = 0.0,
                  seed: int = 0, sample_on_host: bool = False,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32,
+                 sampling: Optional[SamplingParams] = None,
+                 scheduler: "str | Scheduler | None" = None,
+                 eos_id: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
@@ -68,31 +119,64 @@ class ServeEngine:
         self.max_len = max_len
         self.prompt_pad = prompt_pad
         self.prompt_chunk = prompt_chunk
-        self.temperature = float(temperature)
+        self.seed = int(seed)
         self.sample_on_host = sample_on_host
+        # engine-default sampling for requests that don't carry their own;
+        # the legacy ``temperature`` knob folds into it (and stays live via
+        # the ``temperature`` property below)
+        self.default_sampling = sampling or SamplingParams(
+            temperature=float(temperature))
+        self.scheduler: Scheduler = get_scheduler(scheduler)
+        self.eos_id = eos_id if eos_id is not None else getattr(
+            cfg, "eos_token_id", None)
         # Runtime.kv_quant lays the attention cache out as rotated-int8
         # codes + fp16 scales (serve/kv_quant.py); cache_dtype is the fp
         # cache element type otherwise (f32 default keeps CPU tests exact,
         # bf16 is the deployment baseline the bytes ratio is quoted against)
         self.cache = lm.init_cache(cfg, slots, max_len, dtype=cache_dtype,
                                    kv_quant=self.rt.kv_quant)
+        self._cache_nbytes = self.cache_bytes  # fixed for the engine's life
         self.pos = np.zeros(slots, dtype=np.int32)  # next write index per slot
         self.active: list[Optional[Request]] = [None] * slots
         self._next_tok = np.zeros(slots, dtype=np.int32)
-        self._key = jax.random.PRNGKey(seed)
-        self._step_idx = 0
+        # --- per-slot sampling state, packed to device vectors each step ---
+        self._temp = np.zeros(slots, np.float32)
+        self._top_k = np.zeros(slots, np.int32)
+        self._top_p = np.ones(slots, np.float32)
+        self._keys = np.zeros((slots, 2), np.uint32)
+        self._slot_stop: list[frozenset[int]] = [frozenset()] * slots
+        self._slot_max_new: list[int] = [0] * slots
+        self._pending_events: list[StreamEvent] = []
         # --- perf counters (read by benchmarks/serve_bench.py and tests) ---
         self.host_syncs = 0       # device->host transfers
         self.tokens_decoded = 0   # tokens emitted by step()
+        self.decode_steps = 0     # jitted decode calls
+        self.cache_bytes_moved = 0  # bytes functionally copied (donation off)
+        self.cache_donated = False  # did the last decode donate in place?
         self._jit_prefill = jax.jit(self._prefill_impl,
-                                    static_argnames=("plen", "fresh"))
-        self._jit_decode = jax.jit(self._decode_impl)
-        self._jit_decode_logits = jax.jit(self._decode_logits_impl)
+                                    static_argnames=("plen", "fresh"),
+                                    donate_argnums=(1,))
+        self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._jit_decode_logits = jax.jit(self._decode_logits_impl,
+                                          donate_argnums=(1,))
         if self.rt.autotune:
             from repro.kernels import autotune as autotune_mod
             # no-op on CPU/interpret; on TPU, pre-tunes every QTensor matmul
             # shape at decode batch = slots so the hot loop runs tuned tiles
             autotune_mod.tune_params_shapes(params, slots)
+
+    @property
+    def temperature(self) -> float:
+        """Legacy knob: the engine-default temperature. Reads/writes route
+        through ``default_sampling`` so mutating it between batches still
+        takes effect (already-admitted requests keep their resolved
+        params)."""
+        return self.default_sampling.temperature
+
+    @temperature.setter
+    def temperature(self, value: float) -> None:
+        self.default_sampling = dataclasses.replace(
+            self.default_sampling, temperature=float(value))
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, cfg, *, step: Optional[int] = None,
@@ -108,14 +192,16 @@ class ServeEngine:
 
     # --- compiled kernels -------------------------------------------------
     def _prefill_impl(self, params, cache, tokens, slots, last_idx, pos0,
-                      key, temperature, *, plen, fresh):
+                      keys, temp, top_k, top_p, *, plen, fresh):
         """One admission wave: tokens (G, plen) for slot ids ``slots`` (G,).
 
         ``fresh=True`` starts each admitted slot from a ZEROED state (the
         old per-slot reset pass folded into this same compiled call);
         ``fresh=False`` continues from the slot's current state (the
-        SSM/hybrid chunk ladder). Returns (cache, sampled (G,) first tokens,
-        last-real-token logits (G, V))."""
+        SSM/hybrid chunk ladder). ``keys`` is a (G, 2) batch of per-request
+        PRNG keys (None for an all-greedy wave: no PRNG in the trace).
+        Returns (cache, sampled (G,) first tokens, last-real-token logits
+        (G, V))."""
         g = tokens.shape[0]
         if fresh:
             slot_cache = _zero_slots_like(cache, g)
@@ -129,15 +215,19 @@ class ServeEngine:
             last_idx=last_idx)
         cache = _put_slots(cache, new_slot_cache, slots)
         last = logits[:, 0]
-        tok = lm.sample_tokens(last, key, temperature)
+        tok = _sample_slots(last, keys, jnp.zeros_like(slots), temp,
+                            top_k, top_p)
         return cache, tok, last
 
-    def _decode_impl(self, params, cache, tokens, positions, key, temperature):
-        """tokens (S, 1); per-slot positions (S,). Sampling stays on device:
-        the step's only fetch is the (S,) token vector."""
+    def _decode_impl(self, params, cache, tokens, positions, keys, gen,
+                     temp, top_k, top_p):
+        """tokens (S, 1); per-slot positions (S,). Sampling stays on device
+        under per-slot vectors: the step's only fetch is the (S,) token
+        vector. ``gen`` (S,) is each request's own token index — folded
+        into its key so row draws don't depend on slot or batchmates."""
         logits, new_cache = lm.decode_step(
             params, tokens, cache, positions, self.rt, self.cfg)
-        tok = lm.sample_tokens(logits[:, 0], key, temperature)
+        tok = _sample_slots(logits[:, 0], keys, gen, temp, top_k, top_p)
         return tok, new_cache
 
     def _decode_logits_impl(self, params, cache, tokens, positions):
@@ -146,46 +236,140 @@ class ServeEngine:
             params, tokens, cache, positions, self.rt, self.cfg)
         return logits[:, 0], new_cache
 
-    # --- scheduler --------------------------------------------------------
-    def _next_key(self):
-        """Per-call PRNG key — or None when greedy, so the compiled step
-        contains no PRNG work at all (sample_tokens traces to bare argmax)."""
-        if self.temperature <= 0:
-            return None
-        self._step_idx += 1
-        return jax.random.fold_in(self._key, self._step_idx)
+    # --- request lifecycle ------------------------------------------------
+    def _resolve(self, req: Request) -> SamplingParams:
+        sp = req.sampling or self.default_sampling
+        over: dict = {}
+        if sp.max_new is None:
+            over["max_new"] = req.max_new
+        if sp.greedy and (sp.top_k > 0 or sp.top_p < 1.0):
+            # argmax ignores the filters by spec — normalize them to the
+            # inert values so a greedy request never drags top_mask's
+            # full-vocab sort into a mixed batch's decode trace
+            over.update(top_k=0, top_p=1.0)
+        return dataclasses.replace(sp, **over) if over else sp
 
+    def submit_request(self, req: Request) -> None:
+        """Enqueue a request with the scheduler (stamped for queue-wait)."""
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        self.scheduler.add(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Evict a live slot or drop a queued request. The terminal
+        ``cancelled`` StreamEvent is delivered on the next ``generate``
+        tick. Returns False for unknown/finished rids."""
+        req = self.scheduler.cancel(rid)
+        if req is not None:
+            req.t_done = time.perf_counter()
+            self._pending_events.append(StreamEvent(
+                rid, None, len(req.out), finished=True,
+                finish_reason=FINISH_CANCELLED, stats=req.stats()))
+            return True
+        for s, r in enumerate(self.active):
+            if r is not None and r.rid == rid:
+                self._finish_slot(s, r, FINISH_CANCELLED, token=None)
+                return True
+        return False
+
+    def generate(self, requests: Iterable[Request] = (),
+                 ) -> Iterator[StreamEvent]:
+        """Stream tokens for ``requests`` (plus anything already queued or
+        live) until everything finishes. Yields one :class:`StreamEvent`
+        per emitted token; terminal events carry finish reason + stats.
+        Call :meth:`submit_request` (or pass more requests to a later
+        ``generate``) to keep feeding the engine; call :meth:`cancel`
+        between events to evict mid-stream."""
+        for r in requests:
+            self.submit_request(r)
+        while (self._pending_events or len(self.scheduler)
+               or any(r is not None for r in self.active)):
+            yield from self._tick()
+
+    def _tick(self) -> list[StreamEvent]:
+        events = self._pending_events
+        self._pending_events = []
+        free = sum(r is None for r in self.active)
+        if free and len(self.scheduler):
+            wave = self.scheduler.pop(free)
+            if wave:
+                events += self._admit_group(wave)
+        if any(r is not None for r in self.active):
+            events += self._step_events()
+        return events
+
+    # --- admission --------------------------------------------------------
     def submit(self, req: Request) -> bool:
         return self.admit([req]) == 1
 
     def admit(self, reqs: list[Request]) -> int:
-        """Admit as many of ``reqs`` (in order) as there are free slots.
+        """Admit as many of ``reqs`` (in order) as there are free slots,
+        bypassing the scheduler (the closed-batch / legacy path).
         Returns the number admitted."""
-        free = [s for s in range(self.slots) if self.active[s] is None]
-        group = reqs[: len(free)]
+        free = sum(r is None for r in self.active)
+        group = reqs[:free]
         if not group:
             return 0
+        self._admit_group(group)
+        return len(group)
+
+    def _admit_group(self, group: list[Request]) -> list[StreamEvent]:
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        assert len(group) <= len(free), "scheduler over-popped"
+        free = free[: len(group)]
+        now = time.perf_counter()
         for r in group:
             # loud here, not garbage later: an empty prompt would gather
             # last_idx=-1 (a pad position) in the bucketed path
             if len(r.prompt) == 0:
                 raise ValueError(f"request rid={r.rid} has an empty prompt")
-        free = free[: len(group)]
+            if r.t_submit is None:
+                r.t_submit = now  # direct admit(): no queue wait
+            r.t_admit = now
         if self.cfg.family in ("ssm", "hybrid"):
             # recurrent state integrates every fed token: no pad buckets;
             # chunk ladder instead (bounded compiled shapes)
+            events = []
             for req, s in zip(group, free):
-                self._admit_chunked(req, s)
-            return len(group)
-        self._admit_bucketed(group, free)
-        return len(group)
+                events += self._admit_chunked(req, s)
+            return events
+        return self._admit_bucketed(group, free)
+
+    def _group_sampling(self, group: list[Request]):
+        """Per-request device vectors for one admission wave. Returns
+        (resolved params, keys (G,2)|None, temp, top_k, top_p) — keys is
+        None when the whole wave is greedy (PRNG-free prefill trace), and
+        the filter vectors are None when unused (no top_mask in the
+        trace)."""
+        sps = [self._resolve(r) for r in group]
+        if all(sp.greedy for sp in sps):
+            return sps, None, None, None, None
+        keys = np.stack([sp.key_data(engine_seed=self.seed, rid=r.rid)
+                         for sp, r in zip(sps, group)])
+        temp = jnp.asarray([sp.temperature for sp in sps], jnp.float32)
+        top_k, top_p = self._filter_vectors(
+            (sp.top_k for sp in sps), (sp.top_p for sp in sps))
+        return sps, jnp.asarray(keys), temp, top_k, top_p
+
+    @staticmethod
+    def _filter_vectors(ks, ps):
+        """Per-row top-k/top-p device vectors — or None for a filter no
+        row is using, keeping it (and its full-vocab sort) out of the
+        jitted step. Freed slots are reset to the inert 0 / 1.0, so
+        passing every slot's value is safe on the decode path."""
+        ks, ps = list(ks), list(ps)
+        top_k = jnp.asarray(ks, jnp.int32) if any(k > 0 for k in ks) else None
+        top_p = jnp.asarray(ps, jnp.float32) if any(p < 1.0 for p in ps) \
+            else None
+        return top_k, top_p
 
     def _bucket(self, max_plen: int) -> int:
         pad = (-max_plen) % self.prompt_pad
         # cap padding so the padded prompt always fits the cache
         return max_plen + min(pad, max(0, self.max_len - 1 - max_plen))
 
-    def _admit_bucketed(self, group: list[Request], free: list[int]) -> None:
+    def _admit_bucketed(self, group: list[Request],
+                        free: list[int]) -> list[StreamEvent]:
         """Attention-family admission: every free slot in ONE padded-bucket
         compiled call (zero + prefill + first-token sample fused)."""
         plens = [int(len(r.prompt)) for r in group]
@@ -193,16 +377,16 @@ class ServeEngine:
         toks = np.stack([np.pad(np.asarray(r.prompt, np.int32),
                                 (0, bucket - p))
                          for r, p in zip(group, plens)])
+        sps, keys, temp, top_k, top_p = self._group_sampling(group)
         self.cache, tok, last = self._jit_prefill(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(free, jnp.int32),
             jnp.asarray([p - 1 for p in plens], jnp.int32),
             jnp.zeros(len(group), jnp.int32),
-            self._next_key(), jnp.float32(self.temperature),
-            plen=bucket, fresh=True)
-        self._finish_admission(group, free, plens, tok, last)
+            keys, temp, top_k, top_p, plen=bucket, fresh=True)
+        return self._finish_admission(group, free, plens, sps, tok, last)
 
-    def _admit_chunked(self, req: Request, s: int) -> None:
+    def _admit_chunked(self, req: Request, s: int) -> list[StreamEvent]:
         """SSM/hybrid admission: exact-length feeding via a power-of-two
         chunk ladder with state threaded between compiled calls."""
         prompt = np.asarray(req.prompt, np.int32)
@@ -216,48 +400,81 @@ class ServeEngine:
             rem -= c
         off, fresh = 0, True
         slot = jnp.asarray([s], jnp.int32)
+        sps, keys, temp, top_k, top_p = self._group_sampling([req])
         for c in sizes:
             self.cache, tok, last = self._jit_prefill(
                 self.params, self.cache, jnp.asarray(prompt[None, off:off + c]),
                 slot, jnp.asarray([c - 1], jnp.int32),
                 jnp.asarray([off], jnp.int32),
-                self._next_key(), jnp.float32(self.temperature),
-                plen=c, fresh=fresh)
+                keys, temp, top_k, top_p, plen=c, fresh=fresh)
             fresh = False
             off += c
-        self._finish_admission([req], [s], [plen], tok, last)
+        return self._finish_admission([req], [s], [plen], sps, tok, last)
 
-    def _finish_admission(self, group, free, plens, tok, last) -> None:
+    def _finish_admission(self, group, free, plens, sps, tok,
+                          last) -> list[StreamEvent]:
         if self.sample_on_host:
             firsts = [int(jnp.argmax(last[g])) for g in range(len(group))]
             self.host_syncs += len(group)
         else:
             firsts = np.asarray(tok)
             self.host_syncs += 1
+        now = time.perf_counter()
+        events = []
         for g, (req, s) in enumerate(zip(group, free)):
+            sp = sps[g]
             self.pos[s] = plens[g]
+            self.active[s] = req
+            self._slot_stop[s] = sp.stop_set(self.eos_id)
+            self._slot_max_new[s] = int(sp.max_new)
+            self._temp[s] = sp.temperature
+            self._top_k[s] = sp.top_k
+            self._top_p[s] = sp.top_p
+            self._keys[s] = sp.key_data(engine_seed=self.seed, rid=req.rid)
             first = int(firsts[g])
             req.out.append(first)
+            req.t_first = now
             self._next_tok[s] = first
-            self.active[s] = req
+            events.append(self._emit(s, req, first))
+        return events
 
-    def step(self) -> list[tuple[int, int]]:
-        """One decode step for every active slot; returns [(rid, token)]."""
-        if not any(self.active):
-            return []
+    # --- decode -----------------------------------------------------------
+    def _step_events(self) -> list[StreamEvent]:
+        """One decode step for every active slot -> one StreamEvent per
+        emitted token (terminal events carry finish reason + stats)."""
         toks = jnp.asarray(self._next_tok[:, None])
         positions = jnp.asarray(self.pos)
+        probe = jax.tree.leaves(self.cache)
         if self.sample_on_host:
             logits, self.cache = self._jit_decode_logits(
                 self.params, self.cache, toks, positions)
             tok_np = None
         else:
+            live = [s for s, r in enumerate(self.active) if r is not None]
+            if all(self._temp[s] <= 0 for s in live):
+                keys = gen = temp = top_k = top_p = None  # argmax-only trace
+            else:
+                gen = jnp.asarray([len(r.out) if r is not None else 0
+                                   for r in self.active], jnp.int32)
+                keys = jnp.asarray(self._keys)
+                temp = jnp.asarray(self._temp)
+                # filters stay OUT of the trace when no live slot uses
+                # them: a temperature-only batch shouldn't pay top_mask's
+                # full-vocab sort+cumsum every step
+                top_k, top_p = self._filter_vectors(self._top_k, self._top_p)
             tok_dev, self.cache = self._jit_decode(
                 self.params, self.cache, toks, positions,
-                self._next_key(), jnp.float32(self.temperature))
+                keys, gen, temp, top_k, top_p)
             tok_np = np.asarray(tok_dev)  # THE step's one transfer
             self.host_syncs += 1
-        emitted = []
+        self.decode_steps += 1
+        # EVERY leaf must donate — a partially-donated cache (some planes
+        # copied, e.g. mixed int8/fp16/fp32 leaves under kv_quant) still
+        # burns bandwidth and must show up in the counter
+        self.cache_donated = all(a.is_deleted() for a in probe)
+        if not self.cache_donated:  # functional copy happened: count it
+            self.cache_bytes_moved += self._cache_nbytes
+        events = []
         for s, req in enumerate(self.active):
             if req is None:
                 continue
@@ -270,19 +487,53 @@ class ServeEngine:
             self._next_tok[s] = tok
             self.pos[s] += 1
             self.tokens_decoded += 1
-            emitted.append((req.rid, tok))
-            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
-                req.done = True
-                self.active[s] = None
-        return emitted
+            events.append(self._emit(s, req, tok))
+        return events
+
+    def _emit(self, s: int, req: Request, tok: int) -> StreamEvent:
+        """Record one emitted token; finishes the slot on stop/length."""
+        idx = len(req.out) - 1
+        if tok in self._slot_stop[s]:
+            return self._finish_slot(s, req, FINISH_STOP, token=tok)
+        if (len(req.out) >= self._slot_max_new[s]
+                or self.pos[s] >= self.max_len - 1):
+            return self._finish_slot(s, req, FINISH_LENGTH, token=tok)
+        return StreamEvent(req.rid, tok, idx)
+
+    def _finish_slot(self, s: int, req: Request, reason: str,
+                     token: Optional[int]) -> StreamEvent:
+        req.done = True
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        self.active[s] = None
+        self._slot_stop[s] = frozenset()
+        self._temp[s] = 0.0
+        self._top_k[s] = 0
+        self._top_p[s] = 1.0
+        # tokenless terminal events (cancellation) index PAST the stream:
+        # len(out), the position no token will ever fill — so (rid, index)
+        # never collides with a real token's event
+        idx = len(req.out) - 1 if token is not None else len(req.out)
+        ev = StreamEvent(req.rid, token, idx, finished=True,
+                         finish_reason=reason, stats=req.stats())
+        if reason == FINISH_CANCELLED:
+            self._pending_events.append(ev)
+        return ev
+
+    def step(self) -> list[tuple[int, int]]:
+        """One decode step for every active slot; returns [(rid, token)]
+        (legacy view of :meth:`_step_events`)."""
+        if not any(r is not None for r in self.active):
+            return []
+        return [(e.rid, e.token) for e in self._step_events()
+                if e.token is not None]
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Drive all requests to completion with continuous admission."""
-        pending = list(requests)
-        while pending or any(self.active):
-            admitted = self.admit(pending)
-            del pending[:admitted]
-            self.step()
+        """Drive all requests to completion with continuous admission —
+        the closed-batch shim over :meth:`generate` (FIFO ordering via the
+        engine's scheduler; benchmarks use it for token-parity baselines)."""
+        for _ in self.generate(requests):
+            pass
         return requests
 
     @property
@@ -311,7 +562,26 @@ class ServeEngine:
                                 if self.tokens_decoded else float("nan")),
             "cache_bytes": self.cache_bytes,
             "cache_bytes_per_token": attn_bytes / (self.slots * n_pos),
+            "decode_steps": self.decode_steps,
+            "cache_donated": self.cache_donated,
+            "cache_bytes_moved": self.cache_bytes_moved,
+            "scheduler": getattr(self.scheduler, "name",
+                                 type(self.scheduler).__name__),
+            "waiting": len(self.scheduler),
         }
+
+
+def _sample_slots(last, keys, gen, temp, top_k, top_p):
+    """Per-slot sampling inside the jitted step. ``keys`` (G, 2) are the
+    requests' BASE keys; each row folds in its own request-local token
+    index ``gen`` so the draw depends only on (request seed, token index) —
+    never on the slot, the step, or the batchmates (the bit-parity
+    contract). ``keys=None`` is the all-greedy fast path: bare argmax, no
+    PRNG in the trace."""
+    if keys is None:
+        return lm.sample_tokens(last)
+    step_keys = jax.vmap(jax.random.fold_in)(keys, gen)
+    return lm.sample_tokens(last, step_keys, temp, top_k=top_k, top_p=top_p)
 
 
 # --- slot gather/scatter over heterogeneous cache pytrees -------------------

@@ -1,0 +1,183 @@
+"""Pluggable admission scheduling for the serving engine.
+
+A :class:`Scheduler` owns the waiting queue: the engine asks it for the
+next admission wave whenever slots free up, and never looks inside. That
+separation keeps policy (who goes next) out of the engine mechanics (how a
+wave is prefilled in one compiled call), so new policies are a class, not
+an engine fork.
+
+Built-ins:
+
+* ``fifo``     — strict arrival order (the pre-lifecycle behavior).
+* ``priority`` — highest ``Request.priority`` first, FIFO within a
+  priority level; an SLA tier knob.
+* ``sjf``      — shortest-prompt-first: minimizes mean queue wait when
+  prompt length predicts prefill cost (classic shortest-job-first), FIFO
+  among equal lengths.
+
+All built-ins break ties by arrival sequence, so scheduling is
+deterministic for a fixed submission order.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Iterable, Optional, Protocol, runtime_checkable
+
+from repro.serve.sampling import FINISH_CANCELLED
+
+__all__ = [
+    "Scheduler", "FIFOScheduler", "PriorityScheduler",
+    "ShortestPromptFirstScheduler", "SCHEDULERS", "get_scheduler",
+]
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """What the engine needs from an admission policy."""
+
+    def add(self, req) -> None:
+        """Enqueue a request (called at submission time)."""
+
+    def pop(self, n: int) -> list:
+        """Dequeue up to ``n`` requests for the next admission wave, in
+        admission order."""
+
+    def cancel(self, rid: int):
+        """Remove a waiting request by id; returns it (marked cancelled)
+        or None if unknown/already admitted."""
+
+    def __len__(self) -> int:
+        """Number of waiting requests."""
+
+
+class _QueueBase:
+    """Shared cancel/len bookkeeping over lazily-compacted queue entries.
+
+    Cancellation is keyed by the ENTRY's sequence number, not the rid: a
+    client may cancel a queued request and resubmit the same rid, and the
+    new entry must survive while only the stale one is dropped at pop
+    time (regression-tested in tests/test_serving_api.py)."""
+
+    def __init__(self):
+        self._seq = 0
+        self._cancelled: set[int] = set()  # cancelled entry seqs
+        self._live = 0
+
+    def __len__(self) -> int:
+        return self._live
+
+    def _on_add(self) -> int:
+        self._seq += 1
+        self._live += 1
+        return self._seq
+
+    def _claim(self, seq: int, req) -> Optional[object]:
+        """Filter popped entries against lazy cancellations."""
+        if seq in self._cancelled:
+            self._cancelled.discard(seq)
+            return None
+        self._live -= 1
+        return req
+
+    def _cancel_common(self, rid: int, waiting: Iterable):
+        """``waiting`` yields (seq, req) in arrival order; the OLDEST live
+        entry for ``rid`` is cancelled."""
+        for seq, req in waiting:
+            if req.rid == rid and seq not in self._cancelled:
+                self._cancelled.add(seq)
+                self._live -= 1
+                req.done = True
+                req.finish_reason = FINISH_CANCELLED
+                return req
+        return None
+
+
+class FIFOScheduler(_QueueBase):
+    name = "fifo"
+
+    def __init__(self):
+        super().__init__()
+        self._q: deque = deque()  # (seq, req)
+
+    def add(self, req) -> None:
+        self._q.append((self._on_add(), req))
+
+    def pop(self, n: int) -> list:
+        out = []
+        while self._q and len(out) < n:
+            req = self._claim(*self._q.popleft())
+            if req is not None:
+                out.append(req)
+        return out
+
+    def cancel(self, rid: int):
+        return self._cancel_common(rid, self._q)
+
+
+class _HeapScheduler(_QueueBase):
+    """Priority-queue scheduling over a per-request sort key."""
+
+    def __init__(self):
+        super().__init__()
+        self._heap: list = []  # (key, seq, req)
+
+    def _key(self, req):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def add(self, req) -> None:
+        seq = self._on_add()
+        heapq.heappush(self._heap, (self._key(req), seq, req))
+
+    def pop(self, n: int) -> list:
+        out = []
+        while self._heap and len(out) < n:
+            _, seq, req = heapq.heappop(self._heap)
+            req = self._claim(seq, req)
+            if req is not None:
+                out.append(req)
+        return out
+
+    def cancel(self, rid: int):
+        return self._cancel_common(
+            rid, sorted((e[1], e[2]) for e in self._heap))
+
+
+class PriorityScheduler(_HeapScheduler):
+    """Highest ``Request.priority`` admitted first; FIFO within a level."""
+
+    name = "priority"
+
+    def _key(self, req):
+        return -int(getattr(req, "priority", 0))
+
+
+class ShortestPromptFirstScheduler(_HeapScheduler):
+    """Shortest prompt admitted first (prefill-cost SJF); FIFO on ties."""
+
+    name = "sjf"
+
+    def _key(self, req):
+        return len(req.prompt)
+
+
+SCHEDULERS = {
+    "fifo": FIFOScheduler,
+    "priority": PriorityScheduler,
+    "sjf": ShortestPromptFirstScheduler,
+}
+
+
+def get_scheduler(spec: "str | Scheduler | None") -> Scheduler:
+    """Resolve a scheduler name or pass through an instance (None -> fifo)."""
+    if spec is None:
+        return FIFOScheduler()
+    if isinstance(spec, str):
+        try:
+            return SCHEDULERS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown scheduler {spec!r}; options {sorted(SCHEDULERS)}")
+    if not isinstance(spec, Scheduler):
+        raise TypeError(f"not a Scheduler: {spec!r}")
+    return spec

@@ -7,6 +7,12 @@ Two record families, following the repro.bench.v1 convention:
   bytes per token for both layouts. This is where the bandwidth crossover
   shows: the quantized path trades a ~2x byte stream for an int8->f32 cast,
   so it pulls ahead as max_len grows past cache-resident sizes.
+* ``attn/prefill_*`` (kernel suite) — a chunked-prefill span over the
+  quantized cache: the fused q-tile path (scores straight from int8 codes,
+  PR 5) vs the PR-4-era dequantize-the-whole-cache composition, with the
+  analytic bytes each one streams per call. The fused path reads the int8
+  planes once; the baseline additionally writes AND re-reads a full f32
+  K/V buffer — the domain-mismatch memory cost the paper argues against.
 * ``serve/kv_quant_*`` (serve suite) — the whole engine hot loop (jitted
   decode + sampling + scheduler) with ``Runtime.kv_quant`` on vs off, plus
   the ``cache_bytes`` counters and the ~0.52x ratio vs the bf16 layout.
@@ -28,7 +34,7 @@ from benchmarks.common import BenchSuite, timeit
 from repro.configs.base import get_config, kv_cache_bytes_per_token, reduced
 from repro.kernels import attn_decode as ad
 from repro.models import lm
-from repro.models.layers import Runtime, _sdpa_decode_token
+from repro.models.layers import Runtime, _sdpa_chunked, _sdpa_decode_token
 from repro.serve import kv_quant
 from repro.serve.engine import Request, ServeEngine
 
@@ -91,6 +97,61 @@ def add_kernel_records(suite: BenchSuite, smoke: bool = False) -> None:
                       kv_quant.cache_bytes_ratio(hd), 3))
 
 
+def _prefill_dequant_step(q, cache, kv_len, q_offset):
+    """PR-4-era prefill composition: decode the ENTIRE cache buffer, then
+    fp chunked attention — the baseline the fused q-tile path replaces."""
+    kf = kv_quant.kv_decode(cache["k"], cache["k_scale"])
+    vf = kv_quant.kv_decode(cache["v"], cache["v_scale"])
+    return _sdpa_chunked(q, kf, vf, RT, causal=True, q_offset=q_offset,
+                         kv_len=kv_len)
+
+
+def _prefill_fused_step(q, cache, kv_len, q_offset):
+    return ad.prefill_attn_q8(q, cache, kv_len, q_offset, backend="auto")
+
+
+def add_prefill_records(suite: BenchSuite, smoke: bool = False) -> None:
+    """attn/prefill_*: one chunked-prefill span (the last `span` positions
+    of a T-wide quantized cache) through both compositions, with the
+    analytic bytes each one streams from/to HBM per call."""
+    rng = np.random.default_rng(0)
+    b, kv, g, hd, span = 4, 2, 4, 64, 64
+    max_lens = [256] if smoke else [256, 1024, 4096]
+    iters = 2 if smoke else 5
+    deq_jit = jax.jit(_prefill_dequant_step)
+    fus_jit = jax.jit(_prefill_fused_step)
+    for t in max_lens:
+        k = jnp.asarray(rng.normal(size=(b, kv, t, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, kv, t, hd)), jnp.float32)
+        kc, ks = kv_quant.kv_encode(k)
+        vc, vs = kv_quant.kv_encode(v)
+        cache = {"k": kc, "k_scale": ks, "v": vc, "v_scale": vs}
+        q = jnp.asarray(rng.normal(size=(b, kv, g, span, hd)), jnp.float32)
+        q_offset = jnp.full((b,), t - span, jnp.int32)
+        kv_len = jnp.full((b,), t, jnp.int32)
+
+        us_deq = timeit(deq_jit, q, cache, kv_len, q_offset, iters=iters)
+        us_fus = timeit(fus_jit, q, cache, kv_len, q_offset, iters=iters)
+
+        # bytes streamed per call: both read the int8 codes + fp16 scales;
+        # the dequantize baseline additionally WRITES a full f32 K/V buffer
+        # and re-reads it in the attention einsum
+        q8_bytes = 2 * b * kv * t * (hd + 2)
+        fp_buf = 2 * b * kv * t * hd * 4
+        deq_bytes = q8_bytes + 2 * fp_buf
+        toks = b * span
+        suite.add(f"attn/prefill_dequant_T{t}", us_deq,
+                  tok_s=round(toks * 1e6 / us_deq, 1),
+                  bytes_streamed_mb=round(deq_bytes / 1e6, 3),
+                  span=span)
+        suite.add(f"attn/prefill_fused_T{t}", us_fus,
+                  tok_s=round(toks * 1e6 / us_fus, 1),
+                  bytes_streamed_mb=round(q8_bytes / 1e6, 3),
+                  speedup_vs_dequant=round(us_deq / us_fus, 3),
+                  bytes_ratio_vs_dequant=round(q8_bytes / deq_bytes, 3),
+                  span=span)
+
+
 # ---------------------------------------------------------------------------
 # Serve-suite records: the engine hot loop with kv_quant on vs off
 # ---------------------------------------------------------------------------
@@ -147,7 +208,9 @@ def add_serve_records(suite: BenchSuite, smoke: bool = False) -> None:
 def main(smoke: bool = False) -> None:
     # standalone: CSV to stdout only; the JSON suites are regenerated by
     # kernel_bench/serve_bench, which embed these records (see module doc)
-    add_kernel_records(BenchSuite("kernels", smoke=smoke), smoke=smoke)
+    kernels = BenchSuite("kernels", smoke=smoke)
+    add_kernel_records(kernels, smoke=smoke)
+    add_prefill_records(kernels, smoke=smoke)
     add_serve_records(BenchSuite("serve", smoke=smoke), smoke=smoke)
 
 

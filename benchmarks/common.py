@@ -51,7 +51,12 @@ def emit(name: str, us_per_call: float, derived: str):
 class BenchSuite:
     """Machine-readable bench emission: collects records and writes the
     repo-root ``BENCH_<suite>.json`` that tracks the perf trajectory across
-    PRs (see ROADMAP.md). Also mirrors each record to the legacy CSV."""
+    PRs (see ROADMAP.md). Also mirrors each record to the legacy CSV.
+
+    Smoke runs land in ``BENCH_<suite>.smoke.json`` instead: a quick
+    ``--smoke`` pass after the full regeneration must never overwrite the
+    committed full-size trajectory (a documented pitfall — smoke-sized
+    records silently destroyed the record set)."""
 
     def __init__(self, suite: str, *, smoke: bool = False):
         self.suite = suite
@@ -69,7 +74,11 @@ class BenchSuite:
         return rec
 
     def write(self, path: str | Path | None = None) -> Path:
-        path = Path(path) if path else repo_root() / f"BENCH_{self.suite}.json"
+        if path is None:
+            stem = (f"BENCH_{self.suite}.smoke.json" if self.smoke
+                    else f"BENCH_{self.suite}.json")
+            path = repo_root() / stem
+        path = Path(path)
         doc = {
             "schema": BENCH_SCHEMA,
             "suite": self.suite,
@@ -113,10 +122,18 @@ def validate_bench_doc(doc: dict) -> None:
                         f"record {rec['name']} missing metrics {missing}")
 
 
-def load_and_validate(path: str | Path) -> dict:
+def load_and_validate(path: str | Path, *, forbid_smoke: bool = False) -> dict:
+    """Load + schema-check a BENCH_*.json. ``forbid_smoke=True`` is the CI
+    gate for the COMMITTED trajectory files: a smoke-sized record set there
+    means a post-run smoke overwrote the full regeneration."""
     with open(path) as f:
         doc = json.load(f)
     validate_bench_doc(doc)
+    if forbid_smoke and doc.get("smoke"):
+        raise ValueError(
+            f"{path} contains smoke-sized records (smoke=true): the "
+            f"committed trajectory must come from a full run — regenerate "
+            f"with `python -m benchmarks.run --only kernel,serve`")
     return doc
 
 

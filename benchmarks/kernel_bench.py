@@ -107,8 +107,9 @@ def main(smoke: bool = False) -> None:
                 suite.add(f"kernel/tiled_m{m}_hoist_{hoist}", us_h,
                           tile_expansions=(n // tn) * (k // BLOCK)
                           * (1 if hoist else -(-m // 128)))
-    from benchmarks.attn_bench import add_kernel_records
+    from benchmarks.attn_bench import add_kernel_records, add_prefill_records
     add_kernel_records(suite, smoke=smoke)
+    add_prefill_records(suite, smoke=smoke)
     suite.write()
 
 

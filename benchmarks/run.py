@@ -9,7 +9,10 @@ and ``BENCH_serve.json`` at the repo root — the perf record every future
 PR is measured against (ROADMAP.md bench-trajectory convention).
 
 ``--smoke`` runs only the JSON-emitting suites at reduced sizes — the CI
-bench job (fast, validates schema, uploads artifacts).
+bench job (fast, validates schema, uploads artifacts). Smoke output lands
+in ``BENCH_*.smoke.json`` so a quick post-run smoke can never overwrite
+the committed full-size trajectory; CI fails if a committed BENCH_*.json
+ever carries ``smoke: true`` records.
 """
 from __future__ import annotations
 

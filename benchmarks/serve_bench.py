@@ -28,7 +28,9 @@ Request-lifecycle records (PR 4):
 
 Emits ``BENCH_serve.json`` at the repo root (schema: benchmarks/common.py;
 the scheduler/donation records carry required metric keys the CI
-bench-smoke job validates).
+bench-smoke job validates). Smoke mode writes ``BENCH_serve.smoke.json``
+instead — a post-run smoke must never clobber the committed full-size
+trajectory.
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused decode attention over the rotated-int8 KV cache.
+"""Pallas TPU kernel: fused attention over the rotated-int8 KV cache.
 
 The serving counterpart of ``serve/kv_quant.py`` (paper §7.2): the cache
 stores each K/V token vector FWHT-rotated and int8-quantized with a
@@ -14,29 +14,44 @@ softmax weight is known: the kernel folds the per-token V scale into the
 weight row (``(p * v_scale) @ v_codes``), accumulates the weighted sum in
 the rotated domain, and leaves the single inverse FWHT for the caller —
 ``sum_t w_t (H v_t) = H (sum_t w_t v_t)``, so one head_dim-point transform
-per step undoes the rotation for every cached token at once. A full
-dequantized V tile is never materialized anywhere.
+per query span undoes the rotation for every cached token at once. A full
+dequantized K/V buffer is never materialized anywhere.
 
-Grid ``(R, NT)`` — one row per (batch, kv_head) pair, key tiles innermost —
-with a running online-softmax state in VMEM scratch:
+One kernel serves both serving regimes, dispatched by query width:
 
-    m   (G, 1)  running max over key tiles
-    l   (G, 1)  running denominator
-    acc (G, HD) running weighted V sum (unnormalized)
+* **decode** (``q_len == 1``): grid ``(R, 1, NT)`` — the TQ=1
+  specialization. The current token rides OUTSIDE the cache, so the kernel
+  runs causal-free over ``kv_len`` cached positions and returns the
+  UNNORMALIZED ``(acc, m, l)`` triple; :func:`decode_attn_q8` merges the
+  encoded self-token term (one more online-softmax step) and normalizes.
+* **prefill** (``q_len > 1``): grid ``(R, NQ, NT)`` — a query-tile
+  dimension with key tiles innermost. The in-flight span's K/V codes are
+  already written into the cache at ``q_offset..q_offset+q_len-1``, so the
+  causal mask ``q_offset + qpos >= kpos`` inside the key-tile loop merges
+  the span's self-attention block into the same cache pass — the
+  width-``q_len`` generalization of the decode path's
+  :func:`_merge_self_token`. Chunked prefill therefore NEVER dequantizes
+  the cache buffer; :func:`prefill_attn_q8` normalizes and applies the one
+  inverse FWHT per query span.
+
+Each grid row is one (batch, kv_head) pair with a running online-softmax
+state in VMEM scratch:
+
+    m   (TQ*G, 1)   running max over key tiles
+    l   (TQ*G, 1)   running denominator
+    acc (TQ*G, HD)  running weighted V sum (unnormalized)
 
 Tiles are masked by ``kv_len[r]`` (per-row valid cache length: slot-batched
 serving is ragged), so pad tiles and unwritten cache slots contribute
-nothing. The kernel returns the UNNORMALIZED (acc, m, l) triple: decode
-attends against a cache that does not yet contain the current token, so the
-caller merges the self-token term (one more online-softmax step) and
-normalizes — see :func:`decode_attn_q8`.
+nothing.
 
 Dispatch mirrors qmatmul: ``backend="auto"`` runs the kernel on real TPU
 hardware for power-of-two head dims with HD a lane multiple, and falls back
-to :func:`decode_attn_q8_ref` — the same math as jnp einsums — in interpret
-mode or for odd shapes. The two paths share score/weight formulas exactly
-(scores from codes, V scale folded into the weight row), so greedy token
-streams are identical across backends.
+to the jnp reference — the same math as einsums — in interpret mode or for
+odd shapes; ``backend="pallas"`` on an unsupported shape fails fast with a
+ValueError naming the gate instead of dying in Pallas lowering. The
+backends share score/weight formulas exactly (scores from codes, V scale
+folded into the weight row), so greedy token streams are identical.
 """
 from __future__ import annotations
 
@@ -51,12 +66,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.fwht import fwht, is_pow2
 
 __all__ = [
-    "attn_decode_q8_pallas", "decode_attn_q8", "decode_attn_q8_ref",
-    "kernel_supported", "DEFAULT_TT",
+    "attn_q8_pallas", "attn_decode_q8_pallas", "decode_attn_q8",
+    "decode_attn_q8_ref", "prefill_attn_q8", "prefill_attn_q8_ref",
+    "kernel_supported", "DEFAULT_TT", "DEFAULT_TQ", "ATTN_BACKENDS",
 ]
 
 DEFAULT_TT = 256  # key-tile width (tokens streamed per grid step)
+DEFAULT_TQ = 128  # query-tile width (prefill rows per grid step)
 NEG_INF = -1e30
+ATTN_BACKENDS = ("auto", "ref", "pallas")
 
 
 def kernel_supported(head_dim: int, *, interpret: bool) -> bool:
@@ -68,25 +86,51 @@ def kernel_supported(head_dim: int, *, interpret: bool) -> bool:
     return interpret or head_dim % 128 == 0
 
 
-def _attn_decode_kernel(
+def _use_kernel(backend: str, head_dim: int, *, interpret: bool) -> bool:
+    """Resolve the backend knob to kernel-or-ref, failing FAST (mirroring
+    qmatmul's dispatch errors) when ``backend="pallas"`` is forced onto a
+    shape the kernel can't lower — a non-pow2 or, on real TPU, a
+    lane-partial head_dim would otherwise die deep inside Pallas."""
+    if backend not in ATTN_BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {ATTN_BACKENDS}")
+    if backend == "pallas":
+        if not kernel_supported(head_dim, interpret=interpret):
+            gate = ("must be a power of two" if not is_pow2(head_dim)
+                    else "must fill whole 128-wide lanes on real TPU "
+                         "(head_dim % 128 == 0)")
+            raise ValueError(
+                f"attention kernel shape gate: head_dim {head_dim} {gate}; "
+                f"use backend='ref' or 'auto' for this shape")
+        return True
+    if backend == "ref":
+        return False
+    return not interpret and kernel_supported(head_dim, interpret=interpret)
+
+
+def _attn_q8_kernel(
     len_ref,  # (1, 1) int32 SMEM — valid cache length for this row
-    q_ref,    # (1, G, HD) f32 — rotated query row
+    off_ref,  # (1, 1) int32 SMEM — absolute position of the span's query 0
+    q_ref,    # (1, TQ, G, HD) f32 — rotated query tile
     kc_ref,   # (1, TT, HD) int8 — K codes tile
     ks_ref,   # (1, TT) f32 — K per-token scales
     vc_ref,   # (1, TT, HD) int8 — V codes tile
     vs_ref,   # (1, TT) f32 — V per-token scales
-    o_ref,    # (1, G, HD) f32 — unnormalized weighted V sum
-    m_ref,    # (1, G, 1) f32 — running max
-    l_ref,    # (1, G, 1) f32 — running denominator
-    acc_ref,  # scratch (G, HD) f32
-    mx_ref,   # scratch (G, 1) f32
-    dn_ref,   # scratch (G, 1) f32
+    o_ref,    # (1, TQ, G, HD) f32 — unnormalized weighted V sum
+    m_ref,    # (1, TQ, G, 1) f32 — running max
+    l_ref,    # (1, TQ, G, 1) f32 — running denominator
+    acc_ref,  # scratch (TQ*G, HD) f32
+    mx_ref,   # scratch (TQ*G, 1) f32
+    dn_ref,   # scratch (TQ*G, 1) f32
     *,
     sm_scale: float,
+    tq: int,
+    g: int,
     tt: int,
     nt: int,
+    causal: bool,
 ):
-    t = pl.program_id(1)
+    qt = pl.program_id(1)
+    t = pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
@@ -94,18 +138,26 @@ def _attn_decode_kernel(
         mx_ref[...] = jnp.full_like(mx_ref, NEG_INF)
         dn_ref[...] = jnp.zeros_like(dn_ref)
 
-    q = q_ref[0]  # (G, HD) f32, already rotated
+    rows = tq * g
+    hd = q_ref.shape[-1]
+    q = q_ref[0].reshape(rows, hd)  # (TQ*G, HD) f32, already rotated
     kc = kc_ref[0].astype(jnp.float32)  # (TT, HD)
     # dequantize-free scores: (Hq).(Hk) == q.k, per-token scale on the row
     s = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    s = s * (ks_ref[...] * sm_scale)  # (G, TT) * (1, TT)
+    s = s * (ks_ref[...] * sm_scale)  # (rows, TT) * (1, TT)
 
     kpos = t * tt + jax.lax.broadcasted_iota(jnp.int32, (1, tt), 1)
     valid = kpos < len_ref[0, 0]  # (1, TT)
+    if causal:
+        # flattened row i is query (i // g): absolute position off + qt*TQ
+        # + i//g must not look past itself into the key tile
+        qpos = (off_ref[0, 0] + qt * tq
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // g)
+        valid = valid & (kpos <= qpos)  # (rows, TT)
     s = jnp.where(valid, s, NEG_INF)
 
-    m_old = mx_ref[...]  # (G, 1)
+    m_old = mx_ref[...]  # (rows, 1)
     m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
     alpha = jnp.exp(m_old - m_new)
     p = jnp.exp(s - m_new)
@@ -120,12 +172,97 @@ def _attn_decode_kernel(
 
     @pl.when(t == nt - 1)
     def _flush():
-        o_ref[...] = acc_ref[...][None]
-        m_ref[...] = mx_ref[...][None]
-        l_ref[...] = dn_ref[...][None]
+        o_ref[...] = acc_ref[...].reshape(1, tq, g, hd)
+        m_ref[...] = mx_ref[...].reshape(1, tq, g, 1)
+        l_ref[...] = dn_ref[...].reshape(1, tq, g, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("tt", "interpret", "sm_scale"))
+@functools.partial(jax.jit, static_argnames=("tq", "tt", "causal",
+                                             "interpret", "sm_scale"))
+def attn_q8_pallas(
+    q_rot: jax.Array,     # (R, TQ_total, G, HD) f32 — ROTATED queries
+    k_codes: jax.Array,   # (R, T, HD) int8
+    k_scale: jax.Array,   # (R, T) f16/f32
+    v_codes: jax.Array,   # (R, T, HD) int8
+    v_scale: jax.Array,   # (R, T) f16/f32
+    kv_len: jax.Array,    # (R,) int32 — valid cache positions per row
+    q_offset: jax.Array,  # (R,) int32 — absolute position of query 0
+    *,
+    sm_scale: float,
+    causal: bool = True,
+    tq: int = DEFAULT_TQ,
+    tt: int = DEFAULT_TT,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Online-softmax attention over the quantized cache, tiled over both
+    queries and keys (grid ``(R, NQ, NT)``, key tiles innermost).
+
+    Returns the UNNORMALIZED triple ``(acc (R, TQ, G, HD), m (R, TQ, G, 1),
+    l (R, TQ, G, 1))`` so the caller chooses what to merge before
+    normalizing (decode merges the in-flight token's self term; prefill,
+    whose span is already in the cache, just divides)."""
+    r, tq_total, g, hd = q_rot.shape
+    t = k_codes.shape[1]
+    tt = max(1, min(tt, t))
+    pad_t = (-t) % tt
+    if pad_t:
+        pad3 = ((0, 0), (0, pad_t), (0, 0))
+        k_codes = jnp.pad(k_codes, pad3)
+        v_codes = jnp.pad(v_codes, pad3)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_t)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_t)))
+    nt = k_codes.shape[1] // tt
+
+    tq = max(1, min(tq, tq_total))
+    pad_q = (-tq_total) % tq
+    if pad_q:
+        # pad queries attend to extra (still kv_len-masked) keys and are
+        # sliced away below: zero rows, never NaN rows
+        q_rot = jnp.pad(q_rot, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = q_rot.shape[1] // tq
+
+    kernel = functools.partial(_attn_q8_kernel, sm_scale=sm_scale, tq=tq,
+                               g=g, tt=tt, nt=nt, causal=causal)
+    grid = (r, nq, nt)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, qi, ti: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, qi, ti: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, tq, g, hd), lambda i, qi, ti: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tt, hd), lambda i, qi, ti: (i, ti, 0)),
+            pl.BlockSpec((1, tt), lambda i, qi, ti: (i, ti)),
+            pl.BlockSpec((1, tt, hd), lambda i, qi, ti: (i, ti, 0)),
+            pl.BlockSpec((1, tt), lambda i, qi, ti: (i, ti)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, g, hd), lambda i, qi, ti: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tq, g, 1), lambda i, qi, ti: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tq, g, 1), lambda i, qi, ti: (i, qi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, nq * tq, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq * g, hd), jnp.float32),
+            pltpu.VMEM((tq * g, 1), jnp.float32),
+            pltpu.VMEM((tq * g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32).reshape(r, 1),
+      q_offset.astype(jnp.int32).reshape(r, 1),
+      q_rot.astype(jnp.float32), k_codes, k_scale.astype(jnp.float32),
+      v_codes, v_scale.astype(jnp.float32))
+    if pad_q:
+        out, m, l = out[:, :tq_total], m[:, :tq_total], l[:, :tq_total]
+    return out, m, l
+
+
 def attn_decode_q8_pallas(
     q_rot: jax.Array,    # (R, G, HD) f32 — ROTATED queries, R = B*KV rows
     k_codes: jax.Array,  # (R, T, HD) int8
@@ -138,59 +275,18 @@ def attn_decode_q8_pallas(
     tt: int = DEFAULT_TT,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Online-softmax decode attention over the quantized cache.
-
-    Returns the UNNORMALIZED triple ``(acc (R, G, HD), m (R, G, 1),
-    l (R, G, 1))`` so the caller can merge the current token's self term
-    before normalizing (the cache never holds the in-flight token)."""
-    r, g, hd = q_rot.shape
-    t = k_codes.shape[1]
-    tt = max(1, min(tt, t))
-    pad_t = (-t) % tt
-    if pad_t:
-        pad3 = ((0, 0), (0, pad_t), (0, 0))
-        k_codes = jnp.pad(k_codes, pad3)
-        v_codes = jnp.pad(v_codes, pad3)
-        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_t)))
-        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_t)))
-    tp = k_codes.shape[1]
-    nt = tp // tt
-
-    kernel = functools.partial(_attn_decode_kernel, sm_scale=sm_scale,
-                               tt=tt, nt=nt)
-    grid = (r, nt)
-    out, m, l = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, t_: (i, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, g, hd), lambda i, t_: (i, 0, 0)),
-            pl.BlockSpec((1, tt, hd), lambda i, t_: (i, t_, 0)),
-            pl.BlockSpec((1, tt), lambda i, t_: (i, t_)),
-            pl.BlockSpec((1, tt, hd), lambda i, t_: (i, t_, 0)),
-            pl.BlockSpec((1, tt), lambda i, t_: (i, t_)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, g, hd), lambda i, t_: (i, 0, 0)),
-            pl.BlockSpec((1, g, 1), lambda i, t_: (i, 0, 0)),
-            pl.BlockSpec((1, g, 1), lambda i, t_: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, g, hd), jnp.float32),
-            jax.ShapeDtypeStruct((r, g, 1), jnp.float32),
-            jax.ShapeDtypeStruct((r, g, 1), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((g, hd), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(kv_len.astype(jnp.int32).reshape(r, 1), q_rot.astype(jnp.float32),
-      k_codes, k_scale.astype(jnp.float32), v_codes,
-      v_scale.astype(jnp.float32))
-    return out, m, l
+    """Decode attention over the quantized cache: the TQ=1, causal-free
+    specialization of :func:`attn_q8_pallas` (decode attends a cache that
+    does not yet contain the current token, so no in-span causality
+    exists). Returns the unnormalized ``(acc (R, G, HD), m (R, G, 1),
+    l (R, G, 1))`` triple — see :func:`decode_attn_q8` for the self-token
+    merge."""
+    r = q_rot.shape[0]
+    acc, m, l = attn_q8_pallas(
+        q_rot[:, None], k_codes, k_scale, v_codes, v_scale, kv_len,
+        jnp.zeros((r,), jnp.int32), sm_scale=sm_scale, causal=False,
+        tq=1, tt=tt, interpret=interpret)
+    return acc[:, 0], m[:, 0], l[:, 0]
 
 
 def _merge_self_token(acc, m, l, s_self, v_self):
@@ -234,6 +330,74 @@ def decode_attn_q8_ref(
     return acc, m, l
 
 
+def prefill_attn_q8_ref(
+    q_rot: jax.Array,       # (B, KV, G, TQ, HD) f32 rotated queries
+    k_codes: jax.Array,     # (B, KV, T, HD) int8
+    k_scale: jax.Array,     # (B, KV, T, 1)
+    v_codes: jax.Array,     # (B, KV, T, HD) int8
+    v_scale: jax.Array,     # (B, KV, T, 1)
+    kv_len: jax.Array,      # (B,) int32
+    q_offset: jax.Array,    # (B,) int32
+    *,
+    sm_scale: float,
+    causal: bool = True,
+    chunk: int = DEFAULT_TQ,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """jnp reference for the q-tile cache pass: same score and
+    V-scale-folding formulas as the kernel, scanned over query chunks so a
+    32k-token prefill never materializes a (TQ, T) score tensor for the
+    whole span at once — and never a dequantized K/V buffer (scores come
+    straight from the codes). Returns unnormalized (acc (B, KV, G, TQ, HD),
+    m, l (B, KV, G, TQ, 1))."""
+    b, kv, g, tq_total, hd = q_rot.shape
+    tk = k_codes.shape[2]
+    kc = k_codes.astype(jnp.float32)
+    vc = v_codes.astype(jnp.float32)
+    ks_row = jnp.swapaxes(k_scale.astype(jnp.float32), -1, -2)  # (B,KV,1,Tk)
+    vs_row = jnp.swapaxes(v_scale.astype(jnp.float32), -1, -2)
+    kpos = jnp.arange(tk)
+    len_mask = kpos[None, None, None, None, :] < kv_len[
+        :, None, None, None, None]
+
+    chunk = max(1, min(chunk, tq_total))
+    pad = (-tq_total) % chunk
+    q = q_rot.astype(jnp.float32)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    nq = q.shape[3] // chunk
+    qc = jnp.moveaxis(q.reshape(b, kv, g, nq, chunk, hd), 3, 0)
+
+    def one_chunk(ci, qi):
+        s = jnp.einsum("bkgqd,bktd->bkgqt", qi, kc)
+        s = s * (ks_row[:, :, None] * sm_scale)  # (B,KV,1,1,Tk) broadcast
+        valid = len_mask
+        if causal:
+            qpos = (q_offset[:, None] + ci * chunk
+                    + jnp.arange(chunk))  # (B, chunk)
+            valid = valid & (kpos[None, None, None, None, :]
+                             <= qpos[:, None, None, :, None])
+        s = jnp.where(valid, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.where(valid, jnp.exp(s - m), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        pv = p * vs_row[:, :, None]
+        acc = jnp.einsum("bkgqt,bktd->bkgqd", pv, vc)
+        return acc, m, l
+
+    if nq == 1:
+        acc, m, l = one_chunk(0, qc[0])
+        acc, m, l = acc[None], m[None], l[None]
+    else:
+        body = jax.checkpoint(lambda args: one_chunk(*args))
+        acc, m, l = jax.lax.map(body, (jnp.arange(nq), qc))
+
+    def unchunk(a):
+        a = jnp.moveaxis(a, 0, 3)  # (B, KV, G, nq, chunk, ...)
+        a = a.reshape(b, kv, g, nq * chunk, a.shape[-1])
+        return a[:, :, :, :tq_total]
+    return unchunk(acc), unchunk(m), unchunk(l)
+
+
 def decode_attn_q8(
     q: jax.Array,            # (B, KV, G, 1, HD) UNROTATED queries
     cache: dict,             # {"k","v": int8 (B,KV,T,HD); "k_scale","v_scale": (B,KV,T,1)}
@@ -243,6 +407,7 @@ def decode_attn_q8(
     *,
     backend: str = "auto",
     interpret: bool | None = None,
+    tt: int | None = None,
 ) -> jax.Array:
     """Single-token decode attention against the rotated-int8 cache.
 
@@ -259,11 +424,9 @@ def decode_attn_q8(
         interpret = auto_interpret()
     b, kv, g, _, hd = q.shape
     sm_scale = 1.0 / math.sqrt(hd)
+    use_kernel = _use_kernel(backend, hd, interpret=interpret)
     q_rot = fwht(q[..., 0, :].astype(jnp.float32))  # (B, KV, G, HD)
 
-    use_kernel = backend == "pallas" or (
-        backend == "auto" and not interpret and kernel_supported(
-            hd, interpret=interpret))
     if use_kernel:
         r = b * kv
         acc, m, l = attn_decode_q8_pallas(
@@ -271,7 +434,8 @@ def decode_attn_q8(
             cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
             cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
             jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
-            sm_scale=sm_scale, interpret=interpret)
+            sm_scale=sm_scale, tt=tt if tt else DEFAULT_TT,
+            interpret=interpret)
         acc = acc.reshape(b, kv, g, hd)
         m = m.reshape(b, kv, g, 1)
         l = l.reshape(b, kv, g, 1)
@@ -297,3 +461,59 @@ def decode_attn_q8(
     # kernel — undoes it for every cached token at once.
     out = fwht(out)
     return out[..., None, :]  # (B, KV, G, 1, HD)
+
+
+def prefill_attn_q8(
+    q: jax.Array,          # (B, KV, G, TQ, HD) UNROTATED queries
+    cache: dict,           # {"k","v": int8 (B,KV,T,HD); "k_scale","v_scale": (B,KV,T,1)}
+    kv_len: jax.Array,     # (B,) int32 — valid cached positions (incl. span)
+    q_offset: jax.Array,   # (B,) int32 — absolute position of the span's query 0
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    tq: int | None = None,
+    tt: int | None = None,
+) -> jax.Array:
+    """Query-span (chunked-prefill) attention against the rotated-int8
+    cache — the q-tile counterpart of :func:`decode_attn_q8`.
+
+    Unlike decode, the in-flight span's K/V codes are already WRITTEN into
+    the cache at ``q_offset..q_offset+TQ-1`` (``attention_apply`` encodes
+    and writes the span before attending), so the causal mask
+    ``q_offset + qpos >= kpos`` merges the span's self-attention block into
+    the cache pass itself — no separate self term, and the cache buffer is
+    never dequantized. Every query row sees at least its own position, so
+    the online-softmax denominator is strictly positive.
+
+    Returns (B, KV, G, TQ, HD) f32 (rotation already inverted: one inverse
+    FWHT over the whole span, outside the kernel)."""
+    from repro.kernels.ops import auto_interpret  # local: avoid import cycle
+
+    if interpret is None:
+        interpret = auto_interpret()
+    b, kv, g, tq_total, hd = q.shape
+    sm_scale = 1.0 / math.sqrt(hd)
+    use_kernel = _use_kernel(backend, hd, interpret=interpret)
+    q_rot = fwht(jnp.swapaxes(q, 2, 3).astype(jnp.float32))  # (B,KV,TQ,G,HD)
+
+    if use_kernel:
+        r = b * kv
+        acc, m, l = attn_q8_pallas(
+            q_rot.reshape(r, tq_total, g, hd),
+            cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
+            cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
+            jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
+            jnp.broadcast_to(q_offset[:, None], (b, kv)).reshape(r),
+            sm_scale=sm_scale, causal=True, tq=tq if tq else DEFAULT_TQ,
+            tt=tt if tt else DEFAULT_TT, interpret=interpret)
+        acc = jnp.swapaxes(acc.reshape(b, kv, tq_total, g, hd), 2, 3)
+        l = jnp.swapaxes(l.reshape(b, kv, tq_total, g, 1), 2, 3)
+    else:
+        acc, m, l = prefill_attn_q8_ref(
+            jnp.swapaxes(q_rot, 2, 3), cache["k"], cache["k_scale"],
+            cache["v"], cache["v_scale"], kv_len, q_offset,
+            sm_scale=sm_scale, causal=True, chunk=tq if tq else DEFAULT_TQ)
+    out = acc / l
+    # one inverse FWHT per query span — outside the tile loops, outside the
+    # kernel — undoes the rotation for every cached token at once
+    return fwht(out)

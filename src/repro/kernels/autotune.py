@@ -27,7 +27,9 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
+import warnings
 from pathlib import Path
 from typing import Optional
 
@@ -67,7 +69,16 @@ def _load() -> dict:
         try:
             with open(p) as f:
                 _mem_cache = json.load(f)
-        except (OSError, ValueError):
+        except FileNotFoundError:
+            _mem_cache = {}
+        except (OSError, ValueError) as e:
+            # a corrupt or unreadable cache (e.g. torn by a concurrent
+            # writer) degrades to "no tuned entries" — the defaults are
+            # shape-safe everywhere, so warn instead of killing the caller
+            warnings.warn(
+                f"ignoring unreadable autotune cache {p} ({e}); "
+                f"falling back to default tiles", RuntimeWarning,
+                stacklevel=2)
             _mem_cache = {}
     return _mem_cache
 
@@ -75,10 +86,20 @@ def _load() -> dict:
 def _save(cache: dict) -> None:
     p = cache_path()
     p.parent.mkdir(parents=True, exist_ok=True)
-    tmp = p.with_suffix(".tmp")
-    with open(tmp, "w") as f:
-        json.dump(cache, f, indent=1, sort_keys=True)
-    os.replace(tmp, p)
+    # unique tmp per writer: a fixed tmp name lets two concurrent processes
+    # (parallel CI shards) interleave writes and publish a torn file
+    fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=p.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def device_kind(interpret: bool = False) -> str:

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.qlinear import qmatmul
 from repro.core.quantize import QTensor
-from repro.kernels.attn_decode import decode_attn_q8
-from repro.serve.kv_quant import kv_decode, kv_encode
+from repro.kernels.attn_decode import decode_attn_q8, prefill_attn_q8
+from repro.serve.kv_quant import kv_encode
 
 __all__ = [
     "Runtime", "dense", "norm_apply", "rope", "mlp_init", "mlp_apply",
@@ -48,6 +48,8 @@ class Runtime:
     tile_n: Any = None
     autotune: bool = False  # eagerly tune kernel tiles on engine boot (TPU)
     attn_chunk: int = 512  # query-chunk size for softmax attention
+    attn_tile_q: Any = None  # quantized-cache attention query-tile; None = default
+    attn_tile_k: Any = None  # quantized-cache attention key-tile; None = default
     capacity_factor: float = 1.25  # MoE expert capacity factor
     remat: bool = False  # rematerialize each layer (training)
     remat_policy: str = "none"  # none | dots  (what each layer may save)
@@ -326,7 +328,7 @@ def attention_apply(
             kq, ks = kv_encode(k)
             vq, vs = kv_encode(v)
             out = decode_attn_q8(q, cache, (kq, ks), (vq, vs), pos_vec,
-                                 backend=rt.backend)
+                                 backend=rt.backend, tt=rt.attn_tile_k)
             out = out.astype(rt.compute_dtype)
             tok = {"k_tok": kq, "v_tok": vq,
                    "k_scale_tok": ks, "v_scale_tok": vs}
@@ -359,17 +361,22 @@ def attention_apply(
             # dequantizing the whole max_len cache every step. Only the
             # functional write above touches the full buffers.
             out = decode_attn_q8(q, cache, (kq, ks), (vq, vs), pos_vec,
-                                 backend=rt.backend)
-            out = out.astype(rt.compute_dtype)
-            out = out.reshape(b, h, 1, hd).swapaxes(1, 2).reshape(b, t, h * hd)
-            return dense(out, p["wo"], rt), new_cache
-        # prefill: attend against the dequantized cache — the decoded values
-        # are exactly what every later decode step reads back, so prefill
-        # and decode see one cache.
-        k = kv_decode(ck, cks)
-        v = kv_decode(cv, cvs)
-        kv_len = pos_vec + t
-        causal = t > 1
+                                 backend=rt.backend, tt=rt.attn_tile_k)
+        else:
+            # prefill: fused q-tile attention straight over the POST-write
+            # codes. Scores stay in the rotated domain ((Hq).(Hk) == q.k)
+            # and the span's own keys were just written at
+            # pos..pos+t-1, so the causal mask (kpos <= pos + qpos) merges
+            # the in-flight span's self-attention block into the same
+            # cache pass — the decode path's self-token merge generalized
+            # to a width-t span. The full cache buffer is NEVER
+            # dequantized: chunked prefill streams int8 codes only.
+            out = prefill_attn_q8(q, new_cache, pos_vec + t, pos_vec,
+                                  backend=rt.backend, tq=rt.attn_tile_q,
+                                  tt=rt.attn_tile_k)
+        out = out.astype(rt.compute_dtype)
+        out = out.reshape(b, h, t, hd).swapaxes(1, 2).reshape(b, t, h * hd)
+        return dense(out, p["wo"], rt), new_cache
     elif cache is not None:
         upd = jax.vmap(partial(jax.lax.dynamic_update_slice_in_dim, axis=1))
         ck = upd(cache["k"], k.astype(cache["k"].dtype), pos_vec)

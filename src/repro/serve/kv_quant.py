@@ -28,23 +28,39 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fwht import fwht, is_pow2
 
 __all__ = ["kv_encode", "kv_decode", "kv_scores", "cache_bytes_ratio"]
 
+# fp16's finite NORMAL range: the per-vector scale is STORED in fp16, so it
+# must be clamped into what fp16 can actually hold. Above max the cast
+# produces inf (codes collapse to 0 and decode yields 0 * inf = NaN,
+# poisoning the whole attention row); below the smallest normal it flushes
+# toward 0 (encode saturates at +-127 against an epsilon floor while decode
+# multiplies by the stored 0 — codes and scale disagree).
+F16_SCALE_MAX = float(np.finfo(np.float16).max)   # 65504
+F16_SCALE_MIN = float(np.finfo(np.float16).tiny)  # 2^-14, smallest normal
+
 
 def kv_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """x (..., HD) -> (int8 codes (..., HD), fp16 scales (..., 1)).
 
-    Rotate along head_dim, then per-vector absmax int8."""
+    Rotate along head_dim, then per-vector absmax int8. The scale is
+    clamped into fp16's finite normal range and the codes are quantized
+    against the value ACTUALLY stored, so encode->decode stays finite and
+    consistent at both magnitude extremes (huge vectors saturate the code
+    grid instead of NaN-ing; tiny vectors round to zero codes instead of
+    saturating against a scale that decodes as 0)."""
     hd = x.shape[-1]
     if not is_pow2(hd):
         raise ValueError(f"head_dim {hd} must be a power of two")
     xr = fwht(x.astype(jnp.float32))
     amax = jnp.max(jnp.abs(xr), axis=-1, keepdims=True)
-    scale = (amax / 127.0).astype(jnp.float16)
-    safe = jnp.maximum(scale.astype(jnp.float32), 1e-8)
+    scale = jnp.clip(amax / 127.0, F16_SCALE_MIN,
+                     F16_SCALE_MAX).astype(jnp.float16)
+    safe = scale.astype(jnp.float32)  # quantize by the stored value
     q = jnp.clip(jnp.round(xr / safe), -127, 127).astype(jnp.int8)
     return q, scale
 

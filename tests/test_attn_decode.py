@@ -267,3 +267,228 @@ def test_engine_kv_quant_matches_dequant_reference_rollout():
         out.append(int(jnp.argmax(l[0, 0])))
         pos += 1
     assert req.out[:4] == out[:4]
+
+
+# ---------------------------------------------------------------------------
+# Prefill: fused q-tile kernel vs dequantize-then-attend reference
+# ---------------------------------------------------------------------------
+
+def _dequant_prefill_reference(q, cache, kv_len, q_offset):
+    """PR-4-era composition: decode the WHOLE cache, then fp attention with
+    the same kv_len + causal(q_offset) masks — the oracle the fused q-tile
+    path replaces."""
+    b, kv, g, span, hd = q.shape
+    t = cache["k"].shape[2]
+    kf = kv_quant.kv_decode(cache["k"], cache["k_scale"])
+    vf = kv_quant.kv_decode(cache["v"], cache["v_scale"])
+    sm = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", q, kf) * sm
+    kpos = jnp.arange(t)[None, None, None, None, :]
+    qpos = (q_offset[:, None] + jnp.arange(span))[:, None, None, :, None]
+    mask = (kpos < kv_len[:, None, None, None, None]) & (kpos <= qpos)
+    w = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+    return jnp.einsum("bkgqt,bktd->bkgqd", w, vf)
+
+
+@pytest.mark.parametrize("b,kv,g,hd,t,span", [
+    (2, 1, 4, 32, 48, 7), (1, 3, 2, 64, 33, 16), (2, 2, 1, 128, 24, 24),
+])
+def test_prefill_matches_dequantize_reference(rng, b, kv, g, hd, t, span):
+    """Fused q-tile path == dequantize-the-cache-then-attend, per-row
+    ragged offsets, both backends."""
+    cache, _, _ = _quant_cache(rng, b, kv, t, hd)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, span, hd)), jnp.float32)
+    off = jnp.asarray(rng.integers(0, t - span + 1, size=b), jnp.int32)
+    kl = off + span
+    want = _dequant_prefill_reference(q, cache, kl, off)
+    for kwargs in (dict(backend="ref"),
+                   dict(backend="pallas", interpret=True)):
+        got = ad.prefill_attn_q8(q, cache, kl, off, **kwargs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_prefill_kernel_tiling_invariant(rng):
+    """Multi-tile online softmax over BOTH grid axes == single-pass
+    reference: ragged kv width for every (tq, tt) choice."""
+    b, kv, g, hd, t, span = 2, 2, 3, 64, 50, 12
+    cache, _, _ = _quant_cache(rng, b, kv, t, hd)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, span, hd)), jnp.float32)
+    off = jnp.asarray([13, 38], jnp.int32)
+    kl = off + span
+    want = np.asarray(ad.prefill_attn_q8(q, cache, kl, off, backend="ref"))
+    for tq in (1, 5, 8, 16):
+        for tt in (8, 64):  # 50 keys is ragged for both
+            got = ad.prefill_attn_q8(q, cache, kl, off, backend="pallas",
+                                     interpret=True, tq=tq, tt=tt)
+            np.testing.assert_allclose(np.asarray(got), want,
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_prefill_causal_boundary_at_span_edge(rng):
+    """Row i of the span sees exactly positions <= q_offset + i: a width-1
+    span through the prefill entry (post-write cache, causal mask) must
+    match the decode entry (pre-write cache + merged self term) on the
+    same token."""
+    b, kv, g, hd, t = 2, 2, 2, 64, 20
+    pos = 9
+    cache, k, v = _quant_cache(rng, b, kv, t, hd)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, 1, hd)), jnp.float32)
+    pos_vec = jnp.full((b,), pos, jnp.int32)
+    # decode view: the cache does NOT yet hold the token at `pos`
+    ktok = (cache["k"][:, :, pos:pos + 1], cache["k_scale"][:, :, pos:pos + 1])
+    vtok = (cache["v"][:, :, pos:pos + 1], cache["v_scale"][:, :, pos:pos + 1])
+    dec = ad.decode_attn_q8(q, cache, ktok, vtok, pos_vec, backend="ref")
+    # prefill view: same token already written at `pos`, causal mask stops
+    # the span at its own edge — positions > pos must contribute nothing
+    pre = ad.prefill_attn_q8(q, cache, pos_vec + 1, pos_vec, backend="ref")
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(dec),
+                               atol=2e-5, rtol=1e-4)
+    pre_k = ad.prefill_attn_q8(q, cache, pos_vec + 1, pos_vec,
+                               backend="pallas", interpret=True, tq=4, tt=8)
+    np.testing.assert_allclose(np.asarray(pre_k), np.asarray(dec),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_pallas_backend_shape_gate_fails_fast():
+    """Forced backend="pallas" on a shape the kernel can't lower raises the
+    named gate up front (mirroring qmatmul's dispatch errors) instead of
+    dying inside Pallas lowering."""
+    rng = np.random.default_rng(0)
+
+    def args(hd, span):
+        # raw planes (not kv_encode: the codec itself rejects non-pow2) —
+        # the gate must fire before any array math happens
+        cache = {
+            "k": jnp.asarray(rng.integers(-127, 128, size=(1, 1, 16, hd)),
+                             jnp.int8),
+            "v": jnp.asarray(rng.integers(-127, 128, size=(1, 1, 16, hd)),
+                             jnp.int8),
+            "k_scale": jnp.ones((1, 1, 16, 1), jnp.float16),
+            "v_scale": jnp.ones((1, 1, 16, 1), jnp.float16),
+        }
+        q = jnp.asarray(rng.normal(size=(1, 1, 2, span, hd)), jnp.float32)
+        return q, cache
+
+    q, cache = args(48, 1)  # non-pow2: never supported
+    ktok = (cache["k"][:, :, :1], cache["k_scale"][:, :, :1])
+    vtok = (cache["v"][:, :, :1], cache["v_scale"][:, :, :1])
+    kl = jnp.asarray([8], jnp.int32)
+    with pytest.raises(ValueError, match="power of two"):
+        ad.decode_attn_q8(q, cache, ktok, vtok, kl, backend="pallas",
+                          interpret=True)
+    q, cache = args(48, 4)
+    with pytest.raises(ValueError, match="power of two"):
+        ad.prefill_attn_q8(q, cache, kl, jnp.asarray([4], jnp.int32),
+                           backend="pallas", interpret=True)
+    # pow2 but lane-partial on real hardware (interpret=False)
+    q, cache = args(64, 4)
+    with pytest.raises(ValueError, match="128-wide lanes"):
+        ad.prefill_attn_q8(q, cache, kl, jnp.asarray([4], jnp.int32),
+                           backend="pallas", interpret=False)
+    with pytest.raises(ValueError, match="not in"):
+        ad.prefill_attn_q8(q, cache, kl, jnp.asarray([4], jnp.int32),
+                           backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Model plumbing: prefill over the quantized cache never dequantizes it
+# ---------------------------------------------------------------------------
+
+def test_attention_apply_prefill_no_full_cache_dequant(monkeypatch):
+    """Acceptance: the prefill branch streams codes — kv_decode over the
+    cache buffer is GONE from the model path for every family."""
+    import repro.models.layers as layers_mod
+
+    assert not hasattr(layers_mod, "kv_decode")  # the import itself is gone
+    monkeypatch.setattr(
+        kv_quant, "kv_decode",
+        lambda *a, **k: (_ for _ in ()).throw(
+            AssertionError("prefill dequantized the cache buffer")))
+    for arch in ("smollm-135m", "zamba2-7b"):
+        cfg = reduced(get_config(arch))
+        params = lm.init_params(KEY, cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0,
+                                  cfg.vocab_size)
+        cache = lm.init_cache(cfg, 2, 24, dtype=jnp.float32, kv_quant=True)
+        logits, cache, _ = lm.forward(params, toks, RTQ, cfg, cache=cache,
+                                      pos=0)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        # chunked continuation (pos > 0) takes the same fused path
+        logits, _, _ = lm.forward(params, toks[:, :4], RTQ, cfg, cache=cache,
+                                  pos=9)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_runtime_attn_tile_knobs_thread_through(rng, monkeypatch):
+    """Runtime.attn_tile_q/attn_tile_k REACH the kernel (spied at the
+    pallas entry — stream equality alone would also pass if the knobs were
+    silently dropped) and forced-pallas streams are identical across tile
+    choices."""
+    import repro.kernels.attn_decode as ad_mod
+
+    calls = []
+    real = ad_mod.attn_q8_pallas
+
+    def spy(*a, **kw):
+        calls.append((kw.get("tq"), kw.get("tt"), kw.get("causal")))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ad_mod, "attn_q8_pallas", spy)
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    outs = {}
+    for tiles in (None, (4, 8)):
+        rt = Runtime(compute_dtype=jnp.float32, kv_quant=True,
+                     backend="pallas",
+                     attn_tile_q=None if tiles is None else tiles[0],
+                     attn_tile_k=None if tiles is None else tiles[1])
+        eng = ServeEngine(params, cfg, slots=2, max_len=32, rt=rt)
+        calls.clear()
+        reqs = [Request(rid=i, prompt=np.arange(4 + i) + 1, max_new=4)
+                for i in range(2)]
+        eng.run(reqs)
+        outs[tiles] = [r.out for r in reqs]
+        want_tq = ad.DEFAULT_TQ if tiles is None else tiles[0]
+        want_tt = ad.DEFAULT_TT if tiles is None else tiles[1]
+        # the admission wave's prefill call carries the q-tile knobs...
+        assert (want_tq, want_tt, True) in calls, calls
+        # ...and the decode steps the key-tile knob at tq=1
+        assert (1, want_tt, False) in calls, calls
+    assert outs[None] == outs[(4, 8)]
+
+
+# ---------------------------------------------------------------------------
+# Engine: prefill streams bit-identical to the PR 4 dequantize-then-attend
+# composition (goldens captured at PR 4 HEAD on this CPU image)
+# ---------------------------------------------------------------------------
+
+GOLDEN_PR4_DENSE = [[37, 148, 42, 227, 11, 11], [37, 42, 108, 42, 227, 227]]
+GOLDEN_PR4_HYBRID = [[141, 272, 453, 227, 314, 430],
+                     [499, 77, 314, 299, 272, 77]]
+
+
+def test_engine_bucketed_prefill_stream_matches_pr4_head():
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=48, rt=RTQ, prompt_pad=8)
+    reqs = [Request(rid=i, prompt=(np.arange(6 + 3 * i) + 1) % cfg.vocab_size,
+                    max_new=6) for i in range(2)]
+    eng.run(reqs)
+    assert [r.out for r in reqs] == GOLDEN_PR4_DENSE
+
+
+def test_engine_chunk_ladder_prefill_stream_matches_pr4_head():
+    """SSM/hybrid chunk-ladder admission (prompt lengths 11/13 with
+    prompt_chunk=8 -> multi-chunk ladders incl. width-1 tail chunks) over
+    the quantized cache: token streams bit-identical to PR 4 HEAD's
+    whole-cache-dequantize prefill."""
+    cfg = reduced(get_config("zamba2-7b"))
+    params = lm.init_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=48, rt=RTQ,
+                      prompt_chunk=8)
+    reqs = [Request(rid=i,
+                    prompt=(np.arange(11 + 2 * i) + 1) % cfg.vocab_size,
+                    max_new=6) for i in range(2)]
+    eng.run(reqs)
+    assert [r.out for r in reqs] == GOLDEN_PR4_HYBRID

@@ -244,3 +244,80 @@ def test_bench_doc_schema_validation():
     ):
         with pytest.raises(ValueError):
             validate_bench_doc(bad)
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache robustness: torn/corrupt files degrade, never kill callers
+# ---------------------------------------------------------------------------
+
+def test_autotune_corrupt_cache_falls_back_with_warning(tmp_path, monkeypatch):
+    """A torn cache file (the concurrent-writer failure mode) must resolve
+    to the deterministic defaults with a warning, and the next record()
+    must publish a fresh valid file over the wreckage."""
+    path = tmp_path / "at.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    path.write_text('{"torn": ', encoding="utf-8")  # mid-write interleave
+    autotune.clear_memory_cache()
+    with pytest.warns(RuntimeWarning, match="autotune cache"):
+        tiles = autotune.get_tiles(8, 128, 256, "itq3_s", interpret=True)
+    assert tiles == (autotune.DEFAULT_TM, autotune.DEFAULT_TN)
+    autotune.record(4, 128, 256, "itq3_s", 8, 64, interpret=True)
+    autotune.clear_memory_cache()
+    assert autotune.get_tiles(4, 128, 256, "itq3_s", interpret=True) == (8, 64)
+    json.loads(path.read_text())  # the rewritten file is valid JSON again
+
+
+def test_autotune_save_unique_tmp_no_stragglers(tmp_path, monkeypatch):
+    """Every _save goes through its own mkstemp name (two concurrent
+    processes can no longer interleave into one shared .tmp) and no tmp
+    files survive a successful save."""
+    import tempfile as tempfile_mod
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear_memory_cache()
+    names = []
+    real = tempfile_mod.mkstemp
+
+    def spy(**kw):
+        fd, name = real(**kw)
+        names.append(name)
+        return fd, name
+
+    monkeypatch.setattr(autotune.tempfile, "mkstemp", spy)
+    autotune.record(4, 128, 256, "itq3_s", 8, 64, interpret=True)
+    autotune.record(4, 256, 256, "itq3_s", 8, 128, interpret=True)
+    assert len(names) == 2 and len(set(names)) == 2
+    assert list(tmp_path.glob("*.tmp")) == []
+
+
+# ---------------------------------------------------------------------------
+# Bench trajectory protection: smoke runs land in a sibling file
+# ---------------------------------------------------------------------------
+
+def test_bench_smoke_writes_sibling_file_and_forbid_smoke(tmp_path,
+                                                          monkeypatch):
+    from benchmarks import common
+
+    monkeypatch.setattr(common, "repo_root", lambda: tmp_path)
+    full = common.BenchSuite("serve")
+    full.add("serve/x", 1.0, tok_s=1)
+    smoke = common.BenchSuite("serve", smoke=True)
+    smoke.add("serve/x", 1.0, tok_s=1)
+    p_full, p_smoke = full.write(), smoke.write()
+    # the smoke run must NOT overwrite the committed full trajectory
+    assert p_full.name == "BENCH_serve.json"
+    assert p_smoke.name == "BENCH_serve.smoke.json"
+    common.load_and_validate(p_full, forbid_smoke=True)
+    common.load_and_validate(p_smoke)
+    with pytest.raises(ValueError, match="smoke"):
+        common.load_and_validate(p_smoke, forbid_smoke=True)
+
+
+def test_committed_bench_docs_are_full_runs():
+    """The CI gate, asserted in tier-1 too: the repo-root BENCH_*.json must
+    never carry smoke-sized records."""
+    from benchmarks.common import load_and_validate, repo_root
+
+    for suite in ("kernels", "serve"):
+        load_and_validate(repo_root() / f"BENCH_{suite}.json",
+                          forbid_smoke=True)

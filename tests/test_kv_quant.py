@@ -108,3 +108,72 @@ def test_encode_append_decode_ragged_roundtrip():
                                np.asarray(want), atol=1e-6)
     # unwritten tail decodes to exact zeros (zero scale), not garbage
     assert float(jnp.max(jnp.abs(out[:, :, prefix_len + 1:]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fp16-scale extremes: the stored scale must stay finite and consistent
+# with the codes (regression for the inf/flush-to-zero codec bug)
+# ---------------------------------------------------------------------------
+
+def test_encode_huge_magnitude_scale_stays_finite():
+    """amax/127 past fp16 max used to cast to inf: codes collapsed to 0 and
+    decode returned 0 * inf = NaN, poisoning the whole attention row."""
+    for mag in (1e6, 1e7):
+        x = jnp.full((3, 128), mag, jnp.float32)  # Hx peak = sqrt(128)*mag
+        q, s = kv_quant.kv_encode(x)
+        assert bool(jnp.all(jnp.isfinite(s.astype(jnp.float32)))), mag
+        dec = kv_quant.kv_decode(q, s)
+        assert bool(jnp.all(jnp.isfinite(dec))), mag
+        # saturated but directionally right: the code grid clips, 0 codes
+        # would mean the scale overflowed again
+        assert int(jnp.max(jnp.abs(q))) == 127
+
+
+def test_encode_tiny_magnitude_codes_do_not_saturate():
+    """Below fp16's smallest normal the scale used to flush to 0 while the
+    codes saturated at +-127 against an epsilon floor — decode then
+    returned zeros for saturated codes. Now the codes quantize against the
+    value actually stored: tiny vectors round to zero codes, consistently."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)) * 1e-7,
+                    jnp.float32)
+    q, s = kv_quant.kv_encode(x)
+    assert float(jnp.min(s.astype(jnp.float32))) > 0.0
+    assert int(jnp.max(jnp.abs(q))) == 0  # not +-127 garbage
+    dec = kv_quant.kv_decode(q, s)
+    assert bool(jnp.all(jnp.isfinite(dec)))
+    np.testing.assert_array_equal(np.asarray(dec), 0.0)
+
+
+def test_zero_vector_roundtrip_exact():
+    q, s = kv_quant.kv_encode(jnp.zeros((2, 32)))
+    assert float(jnp.min(s.astype(jnp.float32))) > 0.0  # finite, not 0/inf
+    np.testing.assert_array_equal(np.asarray(kv_quant.kv_decode(q, s)), 0.0)
+
+
+def test_decode_attn_finite_with_extreme_cache():
+    """encode -> decode_attn_q8 end to end with 1e6/1e-7-magnitude cached
+    vectors: every output must be finite (one NaN row used to poison the
+    softmax for the whole attention head)."""
+    from repro.kernels import attn_decode as ad
+
+    rng = np.random.default_rng(1)
+    b, kv, g, hd, t = 2, 2, 2, 128, 12
+    k = rng.normal(size=(b, kv, t, hd))
+    v = rng.normal(size=(b, kv, t, hd))
+    k[:, :, 3], v[:, :, 5] = 1e6, 1e6    # hot rows: scale used to go inf
+    k[:, :, 7], v[:, :, 2] = 1e-7, 1e-7  # cold rows: scale used to go 0
+    kc, ks = kv_quant.kv_encode(jnp.asarray(k, jnp.float32))
+    vc, vs = kv_quant.kv_encode(jnp.asarray(v, jnp.float32))
+    cache = {"k": kc, "k_scale": ks, "v": vc, "v_scale": vs}
+    q = jnp.asarray(rng.normal(size=(b, kv, g, 1, hd)), jnp.float32)
+    ktok = kv_quant.kv_encode(
+        jnp.asarray(rng.normal(size=(b, kv, 1, hd)), jnp.float32))
+    vtok = kv_quant.kv_encode(
+        jnp.asarray(rng.normal(size=(b, kv, 1, hd)), jnp.float32))
+    kl = jnp.full((b,), t, jnp.int32)
+    out = ad.decode_attn_q8(q, cache, ktok, vtok, kl, backend="ref")
+    assert bool(jnp.all(jnp.isfinite(out)))
+    qs = jnp.asarray(rng.normal(size=(b, kv, g, 4, hd)), jnp.float32)
+    outp = ad.prefill_attn_q8(qs, cache, kl, jnp.full((b,), t - 4, jnp.int32),
+                              backend="ref")
+    assert bool(jnp.all(jnp.isfinite(outp)))

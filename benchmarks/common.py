@@ -37,6 +37,7 @@ BENCH_SCHEMA = "repro.bench.v1"
 REQUIRED_METRICS_BY_PREFIX = {
     "serve/sched_": ("policy", "ttft_ms", "queue_wait_ms", "tok_s", "tokens"),
     "serve/cache_donation": ("donated", "bytes_moved", "decode_steps"),
+    "serve/tp": ("tok_s", "cache_bytes_per_device"),
 }
 
 

@@ -34,13 +34,18 @@ trajectory.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchSuite
+from benchmarks.common import BenchSuite, repo_root
 from repro.configs.base import get_config, reduced
 from repro.models import lm
 from repro.models.layers import Runtime
@@ -122,6 +127,94 @@ def _run_scheduler(params, cfg, *, policy: str, slots: int, n_requests: int,
     }
 
 
+_TP_SCRIPT = textwrap.dedent("""
+    import json, time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm
+    from repro.models.layers import Runtime
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.quantized import quantize_params
+    from repro.launch.mesh import make_host_mesh
+
+    smoke = {smoke}
+    cfg = reduced(get_config("qwen1.5-0.5b"))  # kv=4: head-sharded cache
+    params = quantize_params(lm.init_params(jax.random.PRNGKey(0), cfg),
+                             "itq3_s")
+    rt = Runtime(compute_dtype=jnp.float32, kv_quant=True)
+    n_requests, max_new = (4, 8) if smoke else (8, 24)
+
+    def reqs(seed):
+        rng = np.random.default_rng(seed)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, size=6 + i % 5),
+                        max_new=max_new) for i in range(n_requests)]
+
+    def bench(mesh, sm):
+        eng = ServeEngine(params, cfg, slots=4, max_len=64, rt=rt,
+                          mesh=mesh, tp_shard_map=sm)
+        eng.run(reqs(1))  # warmup: compile every wave shape
+        t0 = time.perf_counter()
+        done = eng.run(reqs(2))
+        wall = time.perf_counter() - t0
+        tokens = sum(len(r.out) for r in done)
+        st = eng.stats()
+        return {{"wall_s": wall, "tokens": tokens, "tok_s": tokens / wall,
+                 "cache_bytes": st["cache_bytes"],
+                 "cache_bytes_per_device": st.get("cache_bytes_per_device",
+                                                  st["cache_bytes"]),
+                 "out": [list(r.out) for r in done]}}
+
+    base = bench(None, None)
+    mesh = make_host_mesh(1, 2)
+    tp_sm = bench(mesh, True)
+    tp_gspmd = bench(mesh, False)
+    for r in (tp_sm, tp_gspmd):
+        assert r["out"] == base["out"], "TP stream diverged from baseline"
+        r["devices"] = mesh.devices.size
+    for r in (base, tp_sm, tp_gspmd):
+        r.pop("out")
+    print("TPBENCH " + json.dumps(
+        {{"single": base, "shard_map": tp_sm, "gspmd": tp_gspmd}}))
+""")
+
+
+def add_tp_records(suite: BenchSuite, *, smoke: bool) -> None:
+    """``serve/tp*`` records: 2-forced-host-device run of the mesh engine
+    (shard_map and GSPMD paths) against the single-device baseline, token
+    parity asserted inside the subprocess. Forced host devices measure
+    PLUMBING overhead on CPU (a 1-core container shows TP as pure cost) —
+    the record's job is tracking that overhead and the per-device cache
+    split, not projecting TPU scaling."""
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", jax.default_backend())
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = (str(repo_root() / "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    res = subprocess.run(
+        [sys.executable, "-c", _TP_SCRIPT.format(smoke=smoke)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    line = next((ln for ln in res.stdout.splitlines()
+                 if ln.startswith("TPBENCH ")), None)
+    if line is None:
+        raise RuntimeError(f"tp bench subprocess failed:\n"
+                           f"{res.stdout}\n{res.stderr}")
+    data = json.loads(line[len("TPBENCH "):])
+    for name, rec in (("serve/tp_single_device", data["single"]),
+                      ("serve/tp_shard_map", data["shard_map"]),
+                      ("serve/tp_gspmd", data["gspmd"])):
+        suite.add(name,
+                  us_per_call=1e6 * rec["wall_s"] / max(rec["tokens"], 1),
+                  tok_s=round(rec["tok_s"], 2),
+                  wall_s=round(rec["wall_s"], 3),
+                  tokens=rec["tokens"],
+                  cache_bytes_per_device=rec["cache_bytes_per_device"],
+                  cache_bytes=rec["cache_bytes"],
+                  devices=rec.get("devices", 1),
+                  tokens_match=True)
+
+
 def main(smoke: bool = False) -> None:
     suite = BenchSuite("serve", smoke=smoke)
     cfg = reduced(get_config("smollm-135m"))
@@ -184,6 +277,8 @@ def main(smoke: bool = False) -> None:
                   tok_s=round(r["tok_s"], 2),
                   tokens=r["tokens"],
                   slots=slots)
+
+    add_tp_records(suite, smoke=smoke)
 
     from benchmarks.attn_bench import add_serve_records
     add_serve_records(suite, smoke=smoke)

@@ -197,12 +197,21 @@ def restore(ckpt_dir: str, template, *, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
 
-def restore_tree(ckpt_dir: str, *, step: Optional[int] = None):
+def restore_tree(ckpt_dir: str, *, step: Optional[int] = None,
+                 shardings=None):
     """Template-free restore: rebuild a nested-dict pytree purely from
     ``meta.json`` (params trees are string-keyed dicts all the way down).
     QTensor leaves are reconstructed from their packed planes + stored
     QMeta — this is how a serving process boots a quantized model from a
-    bare checkpoint directory (see ServeEngine.from_checkpoint)."""
+    bare checkpoint directory (see ServeEngine.from_checkpoint).
+
+    ``shardings``, when given, is a **callable** ``(dotted_key, leaf) ->
+    placement`` consulted per leaf as it loads (there is no template to
+    align a sharding pytree against). For a QTensor leaf the returned
+    placement may be a single sharding, a dict keyed like ``.data``, or
+    None; for array leaves a sharding or None. Leaves are ``device_put``
+    immediately, so each device only ever materializes its own shard of a
+    packed plane — restore-to-sharding for serving TP."""
     d, step = _step_dir(ckpt_dir, step)
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
@@ -217,21 +226,35 @@ def restore_tree(ckpt_dir: str, *, step: Optional[int] = None):
             node = node.setdefault(p, {})
         node[parts[-1]] = value
 
+    def place(key: str, leaf):
+        if shardings is None:
+            return leaf
+        shard = shardings(key.replace(_SEP, "."), leaf)
+        if shard is None:
+            return leaf
+        if isinstance(leaf, QTensor):
+            return _put_qtensor(leaf, shard)
+        return jax.device_put(leaf, shard)
+
     for key, rec in qmetas.items():
-        insert(key, _load_qtensor(d, key, rec))
+        insert(key, place(key, _load_qtensor(d, key, rec)))
     owned = {k + _QMARK + dk for k, rec in qmetas.items() for dk in rec["keys"]}
     for key in meta["leaves"]:
         if key not in owned:
-            insert(key, np.load(os.path.join(d, key + ".npy")))
+            insert(key, place(key, np.load(os.path.join(d, key + ".npy"))))
     return tree, step
 
 
-def restore_params(ckpt_dir: str, *, step: Optional[int] = None):
+def restore_params(ckpt_dir: str, *, step: Optional[int] = None,
+                   shardings=None):
     """Template-free restore of a servable params tree: a bare params
     checkpoint is returned as-is, a TrainState checkpoint is unwrapped to
     its ``params`` member. The one entrypoint for serving-from-disk
-    (ServeEngine.from_checkpoint and the serve launcher both use it)."""
-    tree, step = restore_tree(ckpt_dir, step=step)
+    (ServeEngine.from_checkpoint and the serve launcher both use it).
+    ``shardings`` is the per-leaf placement callable of
+    :func:`restore_tree` (dotted keys include the leading ``params.`` for
+    TrainState checkpoints; serve/tp's callable strips it)."""
+    tree, step = restore_tree(ckpt_dir, step=step, shardings=shardings)
     if isinstance(tree, dict) and "params" in tree:
         tree = tree["params"]
     return tree, step

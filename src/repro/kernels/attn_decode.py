@@ -107,9 +107,26 @@ def _use_kernel(backend: str, head_dim: int, *, interpret: bool) -> bool:
     return not interpret and kernel_supported(head_dim, interpret=interpret)
 
 
+def _tile_limit(len_val, off_val, qi, *, tq: int, causal: bool):
+    """Exclusive key-position bound for query tile ``qi``: valid cache
+    length, tightened under causality to the tile's LAST query row (no key
+    past ``off + (qi+1)*tq - 1`` can ever be attended by this tile)."""
+    limit = len_val
+    if causal:
+        limit = jnp.minimum(limit, off_val + (qi + 1) * tq)
+    return limit
+
+
+def _last_tile(limit, *, tt: int):
+    """Index of the last key tile carrying any valid position:
+    ``ceil(limit/tt) - 1``, floored at 0 (an empty row still needs one
+    well-defined block index)."""
+    return jnp.maximum((limit + tt - 1) // tt - 1, 0)
+
+
 def _attn_q8_kernel(
-    len_ref,  # (1, 1) int32 SMEM — valid cache length for this row
-    off_ref,  # (1, 1) int32 SMEM — absolute position of the span's query 0
+    len_ref,  # (R,) int32 scalar-prefetch — valid cache length per row
+    off_ref,  # (R,) int32 scalar-prefetch — absolute position of query 0
     q_ref,    # (1, TQ, G, HD) f32 — rotated query tile
     kc_ref,   # (1, TT, HD) int8 — K codes tile
     ks_ref,   # (1, TT) f32 — K per-token scales
@@ -128,7 +145,9 @@ def _attn_q8_kernel(
     tt: int,
     nt: int,
     causal: bool,
+    early_exit: bool,
 ):
+    r = pl.program_id(0)
     qt = pl.program_id(1)
     t = pl.program_id(2)
 
@@ -138,47 +157,63 @@ def _attn_q8_kernel(
         mx_ref[...] = jnp.full_like(mx_ref, NEG_INF)
         dn_ref[...] = jnp.zeros_like(dn_ref)
 
-    rows = tq * g
-    hd = q_ref.shape[-1]
-    q = q_ref[0].reshape(rows, hd)  # (TQ*G, HD) f32, already rotated
-    kc = kc_ref[0].astype(jnp.float32)  # (TT, HD)
-    # dequantize-free scores: (Hq).(Hk) == q.k, per-token scale on the row
-    s = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s * (ks_ref[...] * sm_scale)  # (rows, TT) * (1, TT)
+    limit = _tile_limit(len_ref[r], off_ref[r], qt, tq=tq, causal=causal)
+    # Tile-level early exit: grid steps past ceil(limit/tt) tiles are
+    # fully masked (every kpos fails the len/causal test), so skip their
+    # compute entirely — their DMA was already elided by the clamped
+    # index maps (same block index => Pallas skips the re-fetch). The
+    # masks below keep using the GRID position t, so a skipped tile
+    # contributes exactly nothing either way (the early_exit=False parity
+    # configuration runs the full loop to prove it).
+    run = (t * tt < limit) if early_exit else (t >= 0)
 
-    kpos = t * tt + jax.lax.broadcasted_iota(jnp.int32, (1, tt), 1)
-    valid = kpos < len_ref[0, 0]  # (1, TT)
-    if causal:
-        # flattened row i is query (i // g): absolute position off + qt*TQ
-        # + i//g must not look past itself into the key tile
-        qpos = (off_ref[0, 0] + qt * tq
-                + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // g)
-        valid = valid & (kpos <= qpos)  # (rows, TT)
-    s = jnp.where(valid, s, NEG_INF)
+    @pl.when(run)
+    def _update():
+        rows = tq * g
+        hd = q_ref.shape[-1]
+        q = q_ref[0].reshape(rows, hd)  # (TQ*G, HD) f32, already rotated
+        kc = kc_ref[0].astype(jnp.float32)  # (TT, HD)
+        # dequantize-free scores: (Hq).(Hk) == q.k, per-token scale on row
+        s = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (ks_ref[...] * sm_scale)  # (rows, TT) * (1, TT)
 
-    m_old = mx_ref[...]  # (rows, 1)
-    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_old - m_new)
-    p = jnp.exp(s - m_new)
-    p = jnp.where(valid, p, 0.0)  # NEG_INF - NEG_INF == 0 would leak exp(0)
-    mx_ref[...] = m_new
-    dn_ref[...] = dn_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    # V dequant folded into the weight row: (p * v_scale) @ v_codes
-    pv = p * vs_ref[...]
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        pv, vc_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        kpos = t * tt + jax.lax.broadcasted_iota(jnp.int32, (1, tt), 1)
+        valid = kpos < len_ref[r]  # (1, TT)
+        if causal:
+            # flattened row i is query (i // g): absolute position off +
+            # qt*TQ + i//g must not look past itself into the key tile
+            qpos = (off_ref[r] + qt * tq
+                    + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // g)
+            valid_c = valid & (kpos <= qpos)  # (rows, TT)
+        else:
+            valid_c = valid
+        s = jnp.where(valid_c, s, NEG_INF)
+
+        m_old = mx_ref[...]  # (rows, 1)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid_c, p, 0.0)  # NEG_INF - NEG_INF would leak exp(0)
+        mx_ref[...] = m_new
+        dn_ref[...] = dn_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        # V dequant folded into the weight row: (p * v_scale) @ v_codes
+        pv = p * vs_ref[...]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            pv, vc_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(t == nt - 1)
     def _flush():
+        hd = q_ref.shape[-1]
         o_ref[...] = acc_ref[...].reshape(1, tq, g, hd)
         m_ref[...] = mx_ref[...].reshape(1, tq, g, 1)
         l_ref[...] = dn_ref[...].reshape(1, tq, g, 1)
 
 
 @functools.partial(jax.jit, static_argnames=("tq", "tt", "causal",
-                                             "interpret", "sm_scale"))
+                                             "interpret", "sm_scale",
+                                             "early_exit"))
 def attn_q8_pallas(
     q_rot: jax.Array,     # (R, TQ_total, G, HD) f32 — ROTATED queries
     k_codes: jax.Array,   # (R, T, HD) int8
@@ -193,9 +228,21 @@ def attn_q8_pallas(
     tq: int = DEFAULT_TQ,
     tt: int = DEFAULT_TT,
     interpret: bool = True,
+    early_exit: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Online-softmax attention over the quantized cache, tiled over both
     queries and keys (grid ``(R, NQ, NT)``, key tiles innermost).
+
+    ``kv_len``/``q_offset`` ride as SCALAR-PREFETCH operands
+    (:class:`pltpu.PrefetchScalarGridSpec`), so the K/V tile index maps can
+    read them: with ``early_exit=True`` (default) every key-tile index past
+    ``ceil(limit/tt)`` — where ``limit`` is the row's valid length,
+    causally tightened per query tile — is CLAMPED to the last needed tile.
+    Pallas skips the DMA for a revisited block index and ``pl.when``
+    predicates away the compute, so a 4-token decode against a 32k-slot
+    cache streams one tile, not 128. ``early_exit=False`` runs the full
+    key loop (the parity configuration: both must agree bitwise, because
+    skipped tiles are exactly the fully-masked ones).
 
     Returns the UNNORMALIZED triple ``(acc (R, TQ, G, HD), m (R, TQ, G, 1),
     l (R, TQ, G, 1))`` so the caller chooses what to merge before
@@ -221,41 +268,55 @@ def attn_q8_pallas(
         q_rot = jnp.pad(q_rot, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
     nq = q_rot.shape[1] // tq
 
+    def kv_tile(i, qi, ti, len_ref, off_ref):
+        if not early_exit:
+            return (i, ti, 0)
+        limit = _tile_limit(len_ref[i], off_ref[i], qi, tq=tq, causal=causal)
+        # revisit the last needed tile for every ti beyond it: an unchanged
+        # block index is Pallas's "don't re-DMA" signal
+        return (i, jnp.minimum(ti, _last_tile(limit, tt=tt)), 0)
+
+    def kv_scale_tile(i, qi, ti, len_ref, off_ref):
+        return kv_tile(i, qi, ti, len_ref, off_ref)[:2]
+
     kernel = functools.partial(_attn_q8_kernel, sm_scale=sm_scale, tq=tq,
-                               g=g, tt=tt, nt=nt, causal=causal)
-    grid = (r, nq, nt)
-    out, m, l = pl.pallas_call(
-        kernel,
-        grid=grid,
+                               g=g, tt=tt, nt=nt, causal=causal,
+                               early_exit=early_exit)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # kv_len, q_offset feed the index maps
+        grid=(r, nq, nt),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, qi, ti: (i, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1), lambda i, qi, ti: (i, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, tq, g, hd), lambda i, qi, ti: (i, qi, 0, 0)),
-            pl.BlockSpec((1, tt, hd), lambda i, qi, ti: (i, ti, 0)),
-            pl.BlockSpec((1, tt), lambda i, qi, ti: (i, ti)),
-            pl.BlockSpec((1, tt, hd), lambda i, qi, ti: (i, ti, 0)),
-            pl.BlockSpec((1, tt), lambda i, qi, ti: (i, ti)),
+            pl.BlockSpec((1, tq, g, hd),
+                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tt, hd), kv_tile),
+            pl.BlockSpec((1, tt), kv_scale_tile),
+            pl.BlockSpec((1, tt, hd), kv_tile),
+            pl.BlockSpec((1, tt), kv_scale_tile),
         ],
         out_specs=[
-            pl.BlockSpec((1, tq, g, hd), lambda i, qi, ti: (i, qi, 0, 0)),
-            pl.BlockSpec((1, tq, g, 1), lambda i, qi, ti: (i, qi, 0, 0)),
-            pl.BlockSpec((1, tq, g, 1), lambda i, qi, ti: (i, qi, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((r, nq * tq, g, hd), jnp.float32),
-            jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
-            jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
+            pl.BlockSpec((1, tq, g, hd),
+                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tq, g, 1),
+                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tq, g, 1),
+                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((tq * g, hd), jnp.float32),
             pltpu.VMEM((tq * g, 1), jnp.float32),
             pltpu.VMEM((tq * g, 1), jnp.float32),
         ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, nq * tq, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
+        ],
         interpret=interpret,
-    )(kv_len.astype(jnp.int32).reshape(r, 1),
-      q_offset.astype(jnp.int32).reshape(r, 1),
+    )(kv_len.astype(jnp.int32), q_offset.astype(jnp.int32),
       q_rot.astype(jnp.float32), k_codes, k_scale.astype(jnp.float32),
       v_codes, v_scale.astype(jnp.float32))
     if pad_q:
@@ -274,6 +335,7 @@ def attn_decode_q8_pallas(
     sm_scale: float,
     tt: int = DEFAULT_TT,
     interpret: bool = True,
+    early_exit: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Decode attention over the quantized cache: the TQ=1, causal-free
     specialization of :func:`attn_q8_pallas` (decode attends a cache that
@@ -285,7 +347,7 @@ def attn_decode_q8_pallas(
     acc, m, l = attn_q8_pallas(
         q_rot[:, None], k_codes, k_scale, v_codes, v_scale, kv_len,
         jnp.zeros((r,), jnp.int32), sm_scale=sm_scale, causal=False,
-        tq=1, tt=tt, interpret=interpret)
+        tq=1, tt=tt, interpret=interpret, early_exit=early_exit)
     return acc[:, 0], m[:, 0], l[:, 0]
 
 
@@ -408,6 +470,7 @@ def decode_attn_q8(
     backend: str = "auto",
     interpret: bool | None = None,
     tt: int | None = None,
+    early_exit: bool = True,
 ) -> jax.Array:
     """Single-token decode attention against the rotated-int8 cache.
 
@@ -428,14 +491,20 @@ def decode_attn_q8(
     q_rot = fwht(q[..., 0, :].astype(jnp.float32))  # (B, KV, G, HD)
 
     if use_kernel:
+        if tt is None:
+            # autotune-cache lookup keyed on (cache length, head_dim,
+            # kv heads); deterministic defaults in interpret mode
+            from repro.kernels.autotune import get_attn_tiles
+            _, tt = get_attn_tiles(cache["k"].shape[2], hd, kv,
+                                   interpret=interpret)
         r = b * kv
         acc, m, l = attn_decode_q8_pallas(
             q_rot.reshape(r, g, hd),
             cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
             cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
             jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
-            sm_scale=sm_scale, tt=tt if tt else DEFAULT_TT,
-            interpret=interpret)
+            sm_scale=sm_scale, tt=tt, interpret=interpret,
+            early_exit=early_exit)
         acc = acc.reshape(b, kv, g, hd)
         m = m.reshape(b, kv, g, 1)
         l = l.reshape(b, kv, g, 1)
@@ -473,6 +542,7 @@ def prefill_attn_q8(
     interpret: bool | None = None,
     tq: int | None = None,
     tt: int | None = None,
+    early_exit: bool = True,
 ) -> jax.Array:
     """Query-span (chunked-prefill) attention against the rotated-int8
     cache — the q-tile counterpart of :func:`decode_attn_q8`.
@@ -497,6 +567,12 @@ def prefill_attn_q8(
     q_rot = fwht(jnp.swapaxes(q, 2, 3).astype(jnp.float32))  # (B,KV,TQ,G,HD)
 
     if use_kernel:
+        if tq is None or tt is None:
+            from repro.kernels.autotune import get_attn_tiles
+            tuned_tq, tuned_tt = get_attn_tiles(
+                cache["k"].shape[2], hd, kv, interpret=interpret)
+            tq = tq if tq else tuned_tq
+            tt = tt if tt else tuned_tt
         r = b * kv
         acc, m, l = attn_q8_pallas(
             q_rot.reshape(r, tq_total, g, hd),
@@ -504,8 +580,8 @@ def prefill_attn_q8(
             cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
             jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
             jnp.broadcast_to(q_offset[:, None], (b, kv)).reshape(r),
-            sm_scale=sm_scale, causal=True, tq=tq if tq else DEFAULT_TQ,
-            tt=tt if tt else DEFAULT_TT, interpret=interpret)
+            sm_scale=sm_scale, causal=True, tq=tq, tt=tt,
+            interpret=interpret, early_exit=early_exit)
         acc = jnp.swapaxes(acc.reshape(b, kv, tq_total, g, hd), 2, 3)
         l = jnp.swapaxes(l.reshape(b, kv, tq_total, g, 1), 2, 3)
     else:

@@ -39,12 +39,15 @@ import numpy as np
 __all__ = [
     "DEFAULT_TM", "DEFAULT_TN", "get_tiles", "record", "autotune",
     "tune_params_shapes", "cache_path", "clear_memory_cache", "candidates",
+    "get_attn_tiles", "record_attn", "autotune_attn", "attn_candidates",
 ]
 
 DEFAULT_TM = 256
 DEFAULT_TN = 256
 _TM_LADDER = (8, 16, 32, 64, 128, 256)
 _TN_LADDER = (64, 128, 256, 512)
+_TQ_LADDER = (32, 64, 128, 256)   # attention query-tile widths
+_TT_LADDER = (128, 256, 512)      # attention key-tile widths
 
 _mem_cache: Optional[dict] = None
 
@@ -206,6 +209,107 @@ def autotune(m: int, n: int, k: int, fmt: str = "itq3_s", *,
         if us < best_us:
             best, best_us = (tm, tn), us
     record(m, n, k, fmt, *best, interpret=interpret, us=best_us, save=save)
+    return best
+
+
+# --- fused-attention (tq, tt) tiles ----------------------------------------
+#
+# The attn_decode kernel's tiles live in the SAME cache file under their own
+# key family: (device, "attn", cache-length bucket, head_dim, n_heads).
+# Sequence length buckets to the next power of two (a cache tuned at 32k
+# serves 20k), head counts matter because the grid row count R = B*KV trades
+# against per-row tile work.
+
+def _bucket_t(t: int) -> int:
+    b = 256
+    while b < t:
+        b *= 2
+    return b
+
+
+def _attn_key(t: int, head_dim: int, n_heads: int, *, interpret: bool) -> str:
+    return (f"{device_kind(interpret)}|attn|t{_bucket_t(t)}"
+            f"|hd{head_dim}|h{n_heads}")
+
+
+def attn_candidates(t: int, head_dim: int, *, decode: bool = False,
+                    ) -> list[tuple[int, int]]:
+    """The (tq, tt) lattice worth sweeping. Decode is the TQ=1
+    specialization — only the key-tile width matters."""
+    tts = [c for c in _TT_LADDER if c <= max(t, _TT_LADDER[0])] or [max(t, 1)]
+    tqs = [1] if decode else list(_TQ_LADDER)
+    return [(tq, tt) for tq in tqs for tt in tts]
+
+
+def get_attn_tiles(t: int, head_dim: int, n_heads: int, *,
+                   interpret: bool = False) -> tuple[int, int]:
+    """Cached (tq, tt) winner for this attention shape, or the
+    deterministic defaults. Pure lookup, exactly like :func:`get_tiles`:
+    interpret mode always resolves to (DEFAULT_TQ, DEFAULT_TT) unless a
+    test recorded an entry explicitly."""
+    from repro.kernels.attn_decode import DEFAULT_TQ, DEFAULT_TT
+
+    ent = _load().get(_attn_key(t, head_dim, n_heads, interpret=interpret))
+    if ent:
+        return int(ent["tq"]), int(ent["tt"])
+    return DEFAULT_TQ, DEFAULT_TT
+
+
+def record_attn(t: int, head_dim: int, n_heads: int, tq: int, tt: int, *,
+                interpret: bool = False, us: Optional[float] = None,
+                save: bool = True) -> str:
+    """Store an attention tile winner (used by :func:`autotune_attn` and by
+    tests)."""
+    cache = _load()
+    key = _attn_key(t, head_dim, n_heads, interpret=interpret)
+    cache[key] = {"tq": int(tq), "tt": int(tt)}
+    if us is not None:
+        cache[key]["us"] = round(float(us), 2)
+    if save:
+        _save(cache)
+    return key
+
+
+def autotune_attn(t: int, head_dim: int, n_heads: int, *, batch: int = 4,
+                  g: int = 1, decode: bool = False,
+                  interpret: Optional[bool] = None, iters: int = 3,
+                  save: bool = True,
+                  force_interpret_bench: bool = False) -> tuple[int, int]:
+    """Benchmark the fused attention kernel's (tq, tt) lattice on a
+    synthetic rotated-int8 cache and record the winner. Interpret mode
+    skips the sweep (same contract as :func:`autotune`)."""
+    from repro.kernels.attn_decode import (
+        DEFAULT_TQ, DEFAULT_TT, attn_q8_pallas,
+    )
+    from repro.kernels.ops import auto_interpret
+
+    if interpret is None:
+        interpret = auto_interpret()
+    if interpret and not force_interpret_bench:
+        return DEFAULT_TQ, DEFAULT_TT
+
+    rng = np.random.default_rng(0)
+    r = batch * n_heads
+    tq_total = 1 if decode else min(t, 512)
+    q = np.asarray(rng.normal(size=(r, tq_total, g, head_dim)), np.float32)
+    kc = rng.integers(-127, 128, size=(r, t, head_dim)).astype(np.int8)
+    vc = rng.integers(-127, 128, size=(r, t, head_dim)).astype(np.int8)
+    ks = np.abs(rng.normal(size=(r, t))).astype(np.float32) * 0.02
+    vs = np.abs(rng.normal(size=(r, t))).astype(np.float32) * 0.02
+    kv_len = np.full((r,), t, np.int32)
+    off = np.zeros((r,), np.int32)
+
+    best, best_us = (DEFAULT_TQ, DEFAULT_TT), float("inf")
+    for tq, tt in attn_candidates(t, head_dim, decode=decode):
+        us = _time_call(
+            lambda: attn_q8_pallas(
+                q, kc, ks, vc, vs, kv_len, off,
+                sm_scale=head_dim ** -0.5, causal=not decode, tq=tq, tt=tt,
+                interpret=interpret), iters=iters)
+        if us < best_us:
+            best, best_us = (tq, tt), us
+    record_attn(t, head_dim, n_heads, *best, interpret=interpret,
+                us=best_us, save=save)
     return best
 
 

@@ -108,11 +108,28 @@ def main() -> None:
                     help="rotated-int8 KV cache (8.25 bits/element; fused "
                          "Pallas decode attention on TPU, einsum fallback "
                          "elsewhere)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="tensor-parallel serving over a data,model device "
+                         "mesh (e.g. --mesh 1,2: packed ITQ3_S planes "
+                         "column-sharded and KV cache head-sharded over the "
+                         "model axis; clamped to available devices)")
+    ap.add_argument("--tp-shard-map", action="store_true",
+                    help="force explicit shard_map over the quantized "
+                         "kernels instead of GSPMD-partitioned jit (the "
+                         "automatic default on real TPU, where GSPMD cannot "
+                         "split a pallas_call)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_cfg(cfg)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        d, m = (int(x) for x in args.mesh.split(","))
+        mesh = make_host_mesh(d, m)
+        print(f"serving mesh: {dict(mesh.shape)} "
+              f"({mesh.devices.size} devices)")
     rt = Runtime(compute_dtype=jnp.float32, quant_mode=args.quant_mode,
                  backend=args.backend, autotune=args.autotune,
                  tile_m=args.tile_m, tile_n=args.tile_n,
@@ -120,7 +137,14 @@ def main() -> None:
 
     if args.load_quantized:
         t0 = time.time()
-        params, step = ckpt_mod.restore_params(args.load_quantized)
+        shardings = None
+        if mesh is not None:
+            # restore-to-sharding: each packed plane goes straight to its
+            # column shard as it loads off disk
+            from repro.serve import tp as tp_mod
+            shardings = tp_mod.restore_shardings(cfg, mesh)
+        params, step = ckpt_mod.restore_params(args.load_quantized,
+                                               shardings=shardings)
         print(f"loaded quantized step-{step} tree from {args.load_quantized} "
               f"in {time.time()-t0:.1f}s ({quantized_bytes(params)/1e6:.1f}MB)")
     else:
@@ -152,10 +176,16 @@ def main() -> None:
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                       rt=rt, temperature=args.temperature,
                       sample_on_host=args.sample_on_host,
-                      scheduler=args.scheduler)
+                      scheduler=args.scheduler, mesh=mesh,
+                      tp_shard_map=True if args.tp_shard_map else None)
     if args.kv_quant:
         print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
               f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
+    if mesh is not None:
+        st0 = eng.stats()
+        print(f"tp cache: {st0['cache_bytes_per_device']/1e6:.2f}MB/device "
+              f"x {st0['devices']} devices "
+              f"(shard_map={'on' if st0['tp_shard_map'] else 'off'})")
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

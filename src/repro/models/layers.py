@@ -58,6 +58,11 @@ class Runtime:
     rwkv_mode: str = "chunked"  # chunked (MXU) | scan (stepwise reference)
     rules: Any = None  # sharding.rules.Rules | None
     mesh: Any = None
+    # Tensor-parallel serving: run quantized matmuls / fused cache attention
+    # as explicit shard_maps over the mesh (serve/tp.py) instead of leaving
+    # the partitioning to GSPMD. Required on real TPU (GSPMD cannot split a
+    # pallas_call); optional on CPU/ref where both paths are bit-identical.
+    tp_shard_map: bool = False
 
 
 def shard_hint(x: jax.Array, rt: Runtime, *names: Optional[str]) -> jax.Array:
@@ -75,9 +80,16 @@ def dense(x: jax.Array, w, rt: Runtime, bias=None) -> jax.Array:
     future one) serves through the same line of code."""
     if isinstance(w, QTensor):
         backend = "pallas" if rt.use_kernel else rt.backend
-        y = qmatmul(x, w, mode=rt.quant_mode, backend=backend,
-                    compute_dtype=rt.compute_dtype,
-                    tm=rt.tile_m, tn=rt.tile_n)
+        if rt.tp_shard_map and rt.rules is not None:
+            from repro.serve import tp as tp_mod  # lazy: layers <-> serve
+            y = tp_mod.tp_qmatmul(x, w, rt.rules, mode=rt.quant_mode,
+                                  backend=backend,
+                                  compute_dtype=rt.compute_dtype,
+                                  tm=rt.tile_m, tn=rt.tile_n)
+        else:
+            y = qmatmul(x, w, mode=rt.quant_mode, backend=backend,
+                        compute_dtype=rt.compute_dtype,
+                        tm=rt.tile_m, tn=rt.tile_n)
     else:
         y = jnp.matmul(x.astype(rt.compute_dtype), w.astype(rt.compute_dtype))
     if bias is not None:
@@ -249,6 +261,30 @@ def _sdpa_chunked(q, k, v, rt: Runtime, *, causal: bool, q_offset=None,
     return out[..., :tq, :].astype(rt.compute_dtype)
 
 
+def _decode_q8(q, cache, k_tok, v_tok, kv_len, rt: Runtime):
+    """Quantized-cache decode attention, shard_mapped over kv_heads when
+    tensor-parallel serving is active (serve/tp.py)."""
+    if rt.tp_shard_map and rt.rules is not None:
+        from repro.serve import tp as tp_mod  # lazy: layers <-> serve
+        return tp_mod.tp_decode_attn_q8(q, cache, k_tok, v_tok, kv_len,
+                                        rt.rules, backend=rt.backend,
+                                        tt=rt.attn_tile_k)
+    return decode_attn_q8(q, cache, k_tok, v_tok, kv_len,
+                          backend=rt.backend, tt=rt.attn_tile_k)
+
+
+def _prefill_q8(q, cache, kv_len, q_offset, rt: Runtime):
+    """Quantized-cache prefill attention, shard_mapped under TP."""
+    if rt.tp_shard_map and rt.rules is not None:
+        from repro.serve import tp as tp_mod  # lazy: layers <-> serve
+        return tp_mod.tp_prefill_attn_q8(q, cache, kv_len, q_offset,
+                                         rt.rules, backend=rt.backend,
+                                         tq=rt.attn_tile_q,
+                                         tt=rt.attn_tile_k)
+    return prefill_attn_q8(q, cache, kv_len, q_offset, backend=rt.backend,
+                           tq=rt.attn_tile_q, tt=rt.attn_tile_k)
+
+
 def attention_apply(
     p: Params,
     x: jax.Array,  # (B, T, D)
@@ -327,8 +363,7 @@ def attention_apply(
             # later step will read back from the cache.
             kq, ks = kv_encode(k)
             vq, vs = kv_encode(v)
-            out = decode_attn_q8(q, cache, (kq, ks), (vq, vs), pos_vec,
-                                 backend=rt.backend, tt=rt.attn_tile_k)
+            out = _decode_q8(q, cache, (kq, ks), (vq, vs), pos_vec, rt)
             out = out.astype(rt.compute_dtype)
             tok = {"k_tok": kq, "v_tok": vq,
                    "k_scale_tok": ks, "v_scale_tok": vs}
@@ -360,8 +395,7 @@ def attention_apply(
             # PRE-write cache plus the encoded self term — instead of
             # dequantizing the whole max_len cache every step. Only the
             # functional write above touches the full buffers.
-            out = decode_attn_q8(q, cache, (kq, ks), (vq, vs), pos_vec,
-                                 backend=rt.backend, tt=rt.attn_tile_k)
+            out = _decode_q8(q, cache, (kq, ks), (vq, vs), pos_vec, rt)
         else:
             # prefill: fused q-tile attention straight over the POST-write
             # codes. Scores stay in the rotated domain ((Hq).(Hk) == q.k)
@@ -371,9 +405,7 @@ def attention_apply(
             # cache pass — the decode path's self-token merge generalized
             # to a width-t span. The full cache buffer is NEVER
             # dequantized: chunked prefill streams int8 codes only.
-            out = prefill_attn_q8(q, new_cache, pos_vec + t, pos_vec,
-                                  backend=rt.backend, tq=rt.attn_tile_q,
-                                  tt=rt.attn_tile_k)
+            out = _prefill_q8(q, new_cache, pos_vec + t, pos_vec, rt)
         out = out.astype(rt.compute_dtype)
         out = out.reshape(b, h, t, hd).swapaxes(1, 2).reshape(b, t, h * hd)
         return dense(out, p["wo"], rt), new_cache

@@ -111,10 +111,27 @@ class ServeEngine:
                  cache_dtype=jnp.float32,
                  sampling: Optional[SamplingParams] = None,
                  scheduler: "str | Scheduler | None" = None,
-                 eos_id: Optional[int] = None):
-        self.params = params
+                 eos_id: Optional[int] = None,
+                 mesh=None, tp_shard_map: Optional[bool] = None):
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
+        self.mesh = mesh
+        if mesh is not None:
+            # Tensor-parallel serving (serve/tp.py): derive the serving
+            # Rules, place the packed planes column-sharded (and fp leaves
+            # replicated) over the mesh, and thread rules/mesh into the
+            # Runtime so shard_hint constraints steer GSPMD inside the
+            # jitted prefill/decode. tp_shard_map defaults on for real TPU,
+            # where GSPMD cannot partition a pallas_call and the kernels
+            # must be shard_mapped explicitly.
+            from repro.serve import tp as tp_mod  # lazy: optional subsystem
+            rules = tp_mod.serve_rules(mesh, cfg)
+            if tp_shard_map is None:
+                tp_shard_map = jax.default_backend() == "tpu"
+            self.rt = dataclasses.replace(self.rt, rules=rules, mesh=mesh,
+                                          tp_shard_map=bool(tp_shard_map))
+            params = tp_mod.shard_params(params, cfg, rules)
+        self.params = params
         self.slots = slots
         self.max_len = max_len
         self.prompt_pad = prompt_pad
@@ -135,6 +152,11 @@ class ServeEngine:
         # bf16 is the deployment baseline the bytes ratio is quoted against)
         self.cache = lm.init_cache(cfg, slots, max_len, dtype=cache_dtype,
                                    kv_quant=self.rt.kv_quant)
+        if mesh is not None:
+            # per-device KV-cache shards from step 0: codes + scale planes
+            # head-sharded over `model` (replicated when GQA doesn't divide)
+            from repro.serve import tp as tp_mod
+            self.cache = tp_mod.shard_cache(self.cache, cfg, self.rt.rules)
         self._cache_nbytes = self.cache_bytes  # fixed for the engine's life
         self.pos = np.zeros(slots, dtype=np.int32)  # next write index per slot
         self.active: list[Optional[Request]] = [None] * slots
@@ -180,15 +202,26 @@ class ServeEngine:
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, cfg, *, step: Optional[int] = None,
-                        **kw) -> "ServeEngine":
+                        mesh=None, **kw) -> "ServeEngine":
         """Boot an engine from a bare checkpoint directory — including
         policy-quantized checkpoints, whose QTensor leaves are rebuilt from
         their packed planes without re-running Algorithm 1 (the
-        serve-from-disk path of the deployment story)."""
+        serve-from-disk path of the deployment story).
+
+        With ``mesh``, each leaf is ``device_put`` into its serving TP
+        placement AS IT LOADS (restore-to-sharding): packed planes go
+        straight to their column shards, so the full plane set never
+        materializes on one device — the path that makes 235B-class plane
+        sets bootable."""
         from repro.checkpoint import ckpt as ckpt_mod  # lazy: optional dep
 
-        params, _ = ckpt_mod.restore_params(ckpt_dir, step=step)
-        return cls(params, cfg, **kw)
+        shardings = None
+        if mesh is not None:
+            from repro.serve import tp as tp_mod
+            shardings = tp_mod.restore_shardings(cfg, mesh)
+        params, _ = ckpt_mod.restore_params(ckpt_dir, step=step,
+                                            shardings=shardings)
+        return cls(params, cfg, mesh=mesh, **kw)
 
     # --- compiled kernels -------------------------------------------------
     def _prefill_impl(self, params, cache, tokens, slots, last_idx, pos0,
@@ -555,7 +588,7 @@ class ServeEngine:
         # max_len + frontend_len slots), not max_len, so the vision prefix
         # isn't misbilled as per-decoded-token cost
         n_pos = attn["k"].shape[3] if attn else 1
-        return {
+        out = {
             "host_syncs": self.host_syncs,
             "tokens_decoded": self.tokens_decoded,
             "syncs_per_token": (self.host_syncs / self.tokens_decoded
@@ -569,6 +602,13 @@ class ServeEngine:
                                  type(self.scheduler).__name__),
             "waiting": len(self.scheduler),
         }
+        if self.mesh is not None:
+            from repro.serve import tp as tp_mod
+            out["devices"] = self.mesh.devices.size
+            out["cache_bytes_per_device"] = tp_mod.cache_bytes_per_device(
+                self.cache)
+            out["tp_shard_map"] = self.rt.tp_shard_map
+        return out
 
 
 def _sample_slots(last, keys, gen, temp, top_k, top_p):

@@ -1,0 +1,45 @@
+"""Shared helper for multi-device subprocess tests.
+
+Multi-device tests need ``--xla_force_host_platform_device_count`` set
+before ``import jax``, so they run in a fresh interpreter. The subprocess
+env must INHERIT the parent's platform pins: the long-standing
+``test_compressed_pod_allreduce_shardmap`` "hang" (quarantined since PR 3)
+was a stripped environment dropping ``JAX_PLATFORMS=cpu``, which sends the
+child's ``import jax`` off probing for TPU/GPU runtimes — minutes of stall
+on a CPU box before a single test line runs. Inheriting the parent env
+(and defaulting the platform to the parent's backend) turns the same
+8-device shard_map test into a ~1s pass.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_py(script: str, *, devices: int | None = None, timeout: int = 300,
+           env: dict | None = None) -> subprocess.CompletedProcess:
+    """Run ``script`` in a fresh interpreter with the repo on PYTHONPATH.
+
+    ``devices`` forces the XLA host-platform device count (must be set
+    before jax import, hence here and not in the script). The parent env is
+    inherited wholesale; JAX_PLATFORMS falls back to the parent's resolved
+    backend so the child never platform-probes."""
+    full = dict(os.environ)
+    if "JAX_PLATFORMS" not in full:
+        import jax  # parent has jax initialized already under pytest
+        full["JAX_PLATFORMS"] = jax.default_backend()
+    full["PYTHONPATH"] = SRC + (
+        os.pathsep + full["PYTHONPATH"] if full.get("PYTHONPATH") else "")
+    if devices is not None:
+        full["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices} "
+            + full.get("XLA_FLAGS", "")).strip()
+    if env:
+        full.update(env)
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=full)

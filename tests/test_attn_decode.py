@@ -492,3 +492,142 @@ def test_engine_chunk_ladder_prefill_stream_matches_pr4_head():
                     max_new=6) for i in range(2)]
     eng.run(reqs)
     assert [r.out for r in reqs] == GOLDEN_PR4_HYBRID
+
+
+# ---------------------------------------------------------------------------
+# Tile-level early exit: ceil(kv_len/TT) clamped index maps (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_early_exit_bitwise_matches_full_loop_decode(rng):
+    """Decode kernel with clamped key-tile index maps is BITWISE equal to
+    the full key loop — skipped tiles are exactly the fully-masked ones,
+    so not one float may differ."""
+    b, kv, g, hd, t = 1, 3, 2, 32, 640
+    cache, _, _ = _quant_cache(rng, b, kv, t, hd)
+    q = jnp.asarray(rng.normal(size=(b * kv, g, hd)), jnp.float32)
+    r = b * kv
+    args = (q, cache["k"].reshape(r, t, hd), cache["k_scale"].reshape(r, t),
+            cache["v"].reshape(r, t, hd), cache["v_scale"].reshape(r, t),
+            jnp.asarray([5, 300, 640], jnp.int32))  # tiny, mid, full rows
+    for tt in (64, 128, 256):
+        full = ad.attn_decode_q8_pallas(*args, sm_scale=hd ** -0.5, tt=tt,
+                                        interpret=True, early_exit=False)
+        fast = ad.attn_decode_q8_pallas(*args, sm_scale=hd ** -0.5, tt=tt,
+                                        interpret=True, early_exit=True)
+        for a, b_ in zip(full, fast):
+            assert np.array_equal(np.asarray(a), np.asarray(b_)), tt
+
+
+def test_early_exit_bitwise_matches_full_loop_prefill(rng):
+    """Causal prefill: the per-query-tile limit (kv_len AND causal bound)
+    clamps key tiles; bitwise parity with the unclamped loop across ragged
+    offsets and tile widths."""
+    r, t, g, hd, tq_total = 3, 512, 2, 32, 96
+    kc = jnp.asarray(rng.integers(-127, 128, size=(r, t, hd)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, size=(r, t, hd)), jnp.int8)
+    ks = jnp.asarray(np.abs(rng.normal(size=(r, t))) * 0.02, jnp.float32)
+    vs = jnp.asarray(np.abs(rng.normal(size=(r, t))) * 0.02, jnp.float32)
+    q = jnp.asarray(rng.normal(size=(r, tq_total, g, hd)), jnp.float32)
+    kl = jnp.asarray([100, 300, 512], jnp.int32)
+    off = jnp.asarray([4, 204, 416], jnp.int32)  # spans end at kv_len
+    for tq, tt in ((32, 64), (96, 128), (64, 256)):
+        kw = dict(sm_scale=hd ** -0.5, causal=True, tq=tq, tt=tt,
+                  interpret=True)
+        full = ad.attn_q8_pallas(q, kc, ks, vc, vs, kl, off,
+                                 early_exit=False, **kw)
+        fast = ad.attn_q8_pallas(q, kc, ks, vc, vs, kl, off,
+                                 early_exit=True, **kw)
+        for a, b_ in zip(full, fast):
+            assert np.array_equal(np.asarray(a), np.asarray(b_)), (tq, tt)
+
+
+def test_early_exit_empty_rows(rng):
+    """kv_len=0 rows (freshly admitted slots): the clamped index map floors
+    at tile 0 and the masked update leaves the init state; the engine's
+    self-token merge then owns the whole softmax."""
+    r, t, g, hd = 2, 256, 1, 32
+    kc = jnp.asarray(rng.integers(-127, 128, size=(r, t, hd)), jnp.int8)
+    ks = jnp.asarray(np.abs(rng.normal(size=(r, t))) * 0.02, jnp.float32)
+    q = jnp.asarray(rng.normal(size=(r, g, hd)), jnp.float32)
+    kl = jnp.zeros((r,), jnp.int32)
+    acc, m, l = ad.attn_decode_q8_pallas(
+        q, kc, ks, kc, ks, kl, sm_scale=hd ** -0.5, tt=64, interpret=True)
+    assert np.all(np.asarray(acc) == 0.0)
+    assert np.all(np.asarray(l) == 0.0)
+    assert np.all(np.asarray(m) == ad.NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Attention tile autotuning: (tq, tt) in the shared autotune cache (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_attn_tiles_roundtrip_and_interpret_defaults(tmp_path, monkeypatch):
+    from repro.kernels import autotune as at
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    at.clear_memory_cache()
+    # miss -> deterministic defaults (the interpret-mode contract)
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True) == (
+        ad.DEFAULT_TQ, ad.DEFAULT_TT)
+    key = at.record_attn(4096, 64, 8, 64, 512, interpret=True, us=12.5)
+    assert "attn" in key and "hd64" in key and "h8" in key
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True) == (64, 512)
+    # T buckets to the next power of two: 3000 shares 4096's entry
+    assert at.get_attn_tiles(3000, 64, 8, interpret=True) == (64, 512)
+    # distinct head count = distinct entry
+    assert at.get_attn_tiles(4096, 64, 4, interpret=True) == (
+        ad.DEFAULT_TQ, ad.DEFAULT_TT)
+    at.clear_memory_cache()
+
+
+def test_autotune_attn_sweeps_and_records(tmp_path, monkeypatch):
+    """Forced interpret-mode sweep on a tiny shape: every candidate runs,
+    a winner lands in the cache, and the lookup the kernels use finds it."""
+    from repro.kernels import autotune as at
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    at.clear_memory_cache()
+    best = at.autotune_attn(64, 32, 2, batch=1, decode=True, interpret=True,
+                            iters=1, force_interpret_bench=True)
+    assert best[0] == 1  # decode sweeps the TQ=1 specialization only
+    assert at.get_attn_tiles(64, 32, 2, interpret=True) == best
+    # without the force flag, interpret mode never benchmarks
+    assert at.autotune_attn(128, 32, 2, interpret=True) == (
+        ad.DEFAULT_TQ, ad.DEFAULT_TT)
+    at.clear_memory_cache()
+
+
+def test_decode_uses_tuned_tt(rng, tmp_path, monkeypatch):
+    """decode_attn_q8(tt=None) resolves the key-tile width through the
+    autotune cache (spied at the pallas entry)."""
+    import repro.kernels.attn_decode as ad_mod
+    from repro.kernels import autotune as at
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    at.clear_memory_cache()
+    b, kv, g, hd, t = 1, 2, 2, 32, 64
+    at.record_attn(t, hd, kv, 1, 16, interpret=True)
+    cache, _, _ = _quant_cache(rng, b, kv, t, hd)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, 1, hd)), jnp.float32)
+    ktok = kv_quant.kv_encode(
+        jnp.asarray(rng.normal(size=(b, kv, 1, hd)), jnp.float32))
+    vtok = kv_quant.kv_encode(
+        jnp.asarray(rng.normal(size=(b, kv, 1, hd)), jnp.float32))
+    kl = jnp.asarray([t], jnp.int32)
+    seen = []
+    real = ad_mod.attn_decode_q8_pallas
+
+    def spy(*a, **kw):
+        seen.append(kw.get("tt"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ad_mod, "attn_decode_q8_pallas", spy)
+    out_tuned = ad.decode_attn_q8(q, cache, ktok, vtok, kl,
+                                  backend="pallas", interpret=True)
+    assert seen == [16]  # the recorded winner, not DEFAULT_TT
+    out_default = ad.decode_attn_q8(q, cache, ktok, vtok, kl,
+                                    backend="pallas", interpret=True,
+                                    tt=ad_mod.DEFAULT_TT)
+    np.testing.assert_allclose(np.asarray(out_tuned),
+                               np.asarray(out_default), atol=1e-6)
+    at.clear_memory_cache()

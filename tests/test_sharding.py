@@ -1,13 +1,13 @@
 """Sharding rules + multi-device execution (subprocess with 8 host devices;
 this process keeps seeing 1 device per the dry-run isolation rule)."""
-import subprocess
-import sys
 import textwrap
 
 import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
+
+from _subproc import run_py
 
 from repro.configs.base import get_config
 from repro.launch.mesh import make_host_mesh
@@ -76,8 +76,6 @@ def test_param_pspecs_cover_tree():
 
 
 MULTIDEV_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.base import get_config, reduced
     from repro.launch.train import build_trainer
@@ -104,16 +102,11 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 @pytest.mark.slow
 def test_multidevice_train_subprocess():
     """Real 8-device SPMD execution of the sharded train step."""
-    res = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
-                         capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+    res = run_py(MULTIDEV_SCRIPT, devices=8, timeout=600)
     assert "MULTIDEV_OK" in res.stdout, res.stdout + res.stderr
 
 
 SINGLE_VS_MULTI = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.base import get_config, reduced
     from repro.models import lm
@@ -148,8 +141,5 @@ SINGLE_VS_MULTI = textwrap.dedent("""
 @pytest.mark.slow
 def test_sharded_forward_matches_single_device():
     """SPMD-sharded forward == single-device forward (numerics)."""
-    res = subprocess.run([sys.executable, "-c", SINGLE_VS_MULTI],
-                         capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+    res = run_py(SINGLE_VS_MULTI, devices=8, timeout=600)
     assert "SPMD_MATCH" in res.stdout, res.stdout + res.stderr

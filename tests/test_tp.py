@@ -1,0 +1,255 @@
+"""Tensor-parallel serving (serve/tp.py): placement rules in-process, and
+bit-identical token streams / restore-to-sharding in a 2-device subprocess
+(this process keeps seeing 1 device per the dry-run isolation rule)."""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from _subproc import run_py
+
+from repro.configs.base import get_config, reduced
+from repro.core import formats
+from repro.serve import tp
+from repro.sharding import rules as R
+
+
+class FakeMesh:
+    def __init__(self, data=1, model=2):
+        self.shape = {"data": data, "model": model}
+        self.axis_names = ("data", "model")
+
+
+def _rules(cfg, model=2):
+    mesh = FakeMesh(model=model)
+    base = R.make_rules(mesh, cfg, fsdp=False)
+    assignments = dict(base.assignments)
+    assignments["kv_seq"] = None
+    assignments["seq_sp"] = None
+    return R.Rules(mesh=mesh, assignments=assignments)
+
+
+# ---------------------------------------------------------------------------
+# Placement rules (pure dict/spec math, no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_serve_rules_never_seq_shards_kv():
+    """serve_rules drops the training-side kv_seq fallback: a serving
+    softmax is never split across devices, whatever make_rules chose."""
+    cfg = get_config("nemotron-4-15b")  # kv=8: doesn't divide model=16
+    mesh = FakeMesh(data=16, model=16)
+    assert R.make_rules(mesh, cfg).assignments["kv_seq"] == "model"
+    rules = tp.serve_rules(mesh, cfg)
+    assert rules.assignments["kv_seq"] is None
+    assert rules.assignments["kv_heads"] is None  # GQA fallback
+
+    cfg2 = get_config("olmoe-1b-7b")  # kv=16 divides
+    rules2 = tp.serve_rules(FakeMesh(data=16, model=16), cfg2)
+    assert rules2.assignments["kv_heads"] == "model"
+    assert rules2.assignments["kv_seq"] is None
+
+
+def test_cache_pspecs_head_sharding_and_gqa_fallback():
+    cfg = reduced(get_config("qwen1.5-0.5b"))  # kv=4: divides 2
+    rules = _rules(cfg)
+    cache = {"attn": {
+        "k": np.zeros((2, 1, 4, 8, 32), np.int8),
+        "k_scale": np.zeros((2, 1, 4, 8, 1), np.float16),
+    }}
+    specs = tp.cache_pspecs(cache, cfg, rules)
+    assert specs["attn"]["k"] == P(None, None, "model", None, None)
+    assert specs["attn"]["k_scale"] == P(None, None, "model", None, None)
+
+    cfg_g = reduced(get_config("smollm-135m"))  # kv=1: GQA fallback
+    rules_g = _rules(cfg_g)
+    assert rules_g.assignments["kv_heads"] is None
+    cache_g = {"attn": {"k": np.zeros((2, 1, 1, 8, 32), np.int8)}}
+    specs_g = tp.cache_pspecs(cache_g, cfg_g, rules_g)
+    assert specs_g["attn"]["k"] == P(None, None, None, None, None)
+
+
+def test_cache_pspecs_ssm_state_replicated():
+    cfg = reduced(get_config("zamba2-7b"))
+    rules = _rules(cfg)
+    cache = {"attn": {"k": np.zeros((2, 1, 4, 8, 32), np.int8)},
+             "ssm": {"h": np.zeros((7, 1, 4, 16), np.float32)}}
+    specs = tp.cache_pspecs(cache, cfg, rules)
+    assert specs["attn"]["k"] == P(None, None, "model", None, None)
+    assert specs["ssm"]["h"] == P(None, None, None, None)
+
+
+def test_can_tp_qmatmul_divisibility_gate(rng):
+    w = np.asarray(rng.normal(size=(256, 512)), np.float32)
+    qt = formats.quantize(w, "itq3_s")
+    assert tp.can_tp_qmatmul(qt, FakeMesh(model=2))
+    assert not tp.can_tp_qmatmul(qt, FakeMesh(model=1))  # no model axis
+    # N (and every plane's leading dim) must divide the axis
+    assert not tp.can_tp_qmatmul(qt, FakeMesh(model=3))
+
+
+def test_serve_param_pspecs_cover_quantized_tree():
+    """Every leaf (packed planes included) gets a spec; QTensor N planes
+    shard over model when divisible, fp leaves replicate, embed D-shards."""
+    import functools
+    from repro.models import lm
+    from repro.serve.quantized import quantize_params
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    params = quantize_params(params, "itq3_s")
+    rules = _rules(cfg)
+    specs = tp.serve_param_pspecs(params, cfg, rules)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree.leaves(params)
+    assert len(flat_s) == len(flat_l)
+    sharded = sum(1 for s in flat_s
+                  if isinstance(s, P) and any(ax == "model" for ax in s))
+    assert sharded > 0  # the packed planes actually shard
+    for leaf, spec in zip(flat_l, flat_s):
+        for dim, ax in enumerate(spec):
+            if ax is not None:
+                assert leaf.shape[dim] % 2 == 0, (leaf.shape, spec)
+
+
+# ---------------------------------------------------------------------------
+# 2-device execution: bit-identical streams, sharded restore
+# ---------------------------------------------------------------------------
+
+TP_PARITY = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm
+    from repro.models.layers import Runtime
+    from repro.serve.engine import ServeEngine, Request
+    from repro.serve.quantized import quantize_params
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 2)
+    assert dict(mesh.shape) == {"data": 1, "model": 2}
+
+    def streams(arch, kv_quant, mesh_, sm=None):
+        cfg = reduced(get_config(arch))
+        params = quantize_params(lm.init_params(jax.random.PRNGKey(0), cfg),
+                                 "itq3_s")
+        rt = Runtime(compute_dtype=jnp.float32, kv_quant=kv_quant)
+        eng = ServeEngine(params, cfg, slots=2, max_len=48, rt=rt,
+                          mesh=mesh_, tp_shard_map=sm)
+        reqs = [Request(rid=i, prompt=(np.arange(6 + i) + 1) % cfg.vocab_size,
+                        max_new=6) for i in range(3)]
+        eng.run(reqs)
+        return [list(r.out) for r in reqs], eng
+
+    # dense (kv=4 divides: head-sharded cache) and hybrid (attn + ssm),
+    # quantized and fp cache, BOTH execution paths (GSPMD jit / shard_map)
+    for arch in ("qwen1.5-0.5b", "zamba2-7b"):
+        for kvq in (True, False):
+            base, _ = streams(arch, kvq, None)
+            gspmd, _ = streams(arch, kvq, mesh, sm=False)
+            smap, eng = streams(arch, kvq, mesh, sm=True)
+            assert gspmd == base, (arch, kvq, "gspmd", gspmd, base)
+            assert smap == base, (arch, kvq, "shard_map", smap, base)
+            st = eng.stats()
+            assert st["devices"] == 2
+            if kvq or arch == "qwen1.5-0.5b":
+                assert st["cache_bytes_per_device"] < st["cache_bytes"], st
+    print("DENSE_HYBRID_OK")
+
+    # GQA fallback: reduced smollm has kv=1 -> replicated cache, parity holds
+    base, _ = streams("smollm-135m", True, None)
+    smap, eng = streams("smollm-135m", True, mesh, sm=True)
+    assert smap == base
+    st = eng.stats()
+    assert st["cache_bytes_per_device"] == st["cache_bytes"], st
+    print("GQA_FALLBACK_OK")
+""")
+
+
+def test_tp_engine_bit_identical_streams():
+    """ServeEngine(mesh=make_host_mesh(1, 2)) must produce bit-identical
+    token streams vs single-device — dense + hybrid, kv_quant on/off,
+    GSPMD and shard_map paths, plus the replicated-cache GQA fallback."""
+    res = run_py(TP_PARITY, devices=2, timeout=900)
+    assert "DENSE_HYBRID_OK" in res.stdout, res.stdout + res.stderr
+    assert "GQA_FALLBACK_OK" in res.stdout, res.stdout + res.stderr
+
+
+TP_RESTORE = textwrap.dedent("""
+    import tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import get_config, reduced
+    from repro.checkpoint import ckpt
+    from repro.models import lm
+    from repro.models.layers import Runtime
+    from repro.serve import tp
+    from repro.serve.engine import ServeEngine, Request
+    from repro.serve.quantized import quantize_params
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = quantize_params(lm.init_params(jax.random.PRNGKey(0), cfg),
+                             "itq3_s")
+    d = tempfile.mkdtemp()
+    ckpt.save(d, 0, params)
+
+    mesh = make_host_mesh(1, 2)
+
+    # the restore callback: per-plane dicts for QTensors ('params.' prefix
+    # stripped for TrainState checkpoints), replicated fp, None non-arrays
+    from repro.core import formats
+    place = tp.restore_shardings(cfg, mesh)
+    qt = formats.quantize(np.zeros((256, 512), np.float32), "itq3_s")
+    # top-level (unstacked) projection; under 'layers.' the same leaf would
+    # need its leading L stack dim to shard
+    for dotted in ("lm_head", "params.lm_head"):
+        shard = place(dotted, qt)
+        assert set(shard) == set(qt.data)
+        assert shard["plane2"].spec[0] == "model", shard["plane2"].spec
+    assert place("layers.ln1", np.zeros((128,), np.float32)).spec == P(None)
+    assert place("step", 7) is None
+    print("PLACE_OK")
+    plain, _ = ckpt.restore_params(d)
+    sharded, _ = ckpt.restore_params(
+        d, shardings=tp.restore_shardings(cfg, mesh))
+
+    # leaf-for-leaf plane equality: sharded restore changes PLACEMENT only
+    eq = jax.tree.map(
+        lambda a, b: np.array_equal(np.asarray(a), np.asarray(b)),
+        plain, sharded)
+    assert all(jax.tree.leaves(eq))
+    # ...and the packed planes really are split 2 ways on device
+    split = sum(
+        1 for leaf in jax.tree.leaves(sharded)
+        if hasattr(leaf, "addressable_shards")
+        and len({s.device.id for s in leaf.addressable_shards}) == 2
+        and leaf.addressable_shards[0].data.shape != leaf.shape)
+    assert split > 0, "no leaf was actually sharded"
+    print("RESTORE_EQ_OK", split)
+
+    # boot an engine straight from the sharded restore: same streams
+    rt = Runtime(compute_dtype=jnp.float32, kv_quant=True)
+    def run(eng):
+        reqs = [Request(rid=i, prompt=(np.arange(6 + i) + 1) % cfg.vocab_size,
+                        max_new=6) for i in range(2)]
+        eng.run(reqs)
+        return [list(r.out) for r in reqs]
+    base = run(ServeEngine(plain, cfg, slots=2, max_len=48,
+                           rt=Runtime(compute_dtype=jnp.float32,
+                                      kv_quant=True)))
+    tp_stream = run(ServeEngine.from_checkpoint(d, cfg, mesh=mesh, slots=2,
+                                                max_len=48, rt=rt))
+    assert tp_stream == base, (tp_stream, base)
+    print("FROM_CKPT_OK")
+""")
+
+
+def test_tp_restore_to_sharding():
+    """restore_params(shardings=...) loads each packed plane straight into
+    its column shard — values identical to the unsharded restore, and
+    ServeEngine.from_checkpoint(mesh=...) serves the same streams."""
+    res = run_py(TP_RESTORE, devices=2, timeout=900)
+    assert "PLACE_OK" in res.stdout, res.stdout + res.stderr
+    assert "RESTORE_EQ_OK" in res.stdout, res.stdout + res.stderr
+    assert "FROM_CKPT_OK" in res.stdout, res.stdout + res.stderr

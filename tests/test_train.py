@@ -95,8 +95,6 @@ def test_compressed_allreduce_error_feedback():
 
 
 SHARDMAP_COMPRESS = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.train.grad import compressed_pod_allreduce, zeros_error_buf
 
@@ -120,20 +118,13 @@ print("COMPRESS_OK", err)
 """
 
 
-@pytest.mark.slow
 def test_compressed_pod_allreduce_shardmap():
-    """Known pre-existing hang on some boxes (since the seed commit): the
-    8-device shardmap subprocess can exceed any reasonable budget. Guard
-    with a short timeout and SKIP on expiry so tier-1 wall time isn't
-    dominated by a 300s stall — a genuine regression in the compressed
-    allreduce math still fails loudly via the COMPRESS_OK assert."""
-    import subprocess, sys
-    try:
-        res = subprocess.run([sys.executable, "-c", SHARDMAP_COMPRESS],
-                             capture_output=True, text=True, timeout=60,
-                             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                  "HOME": "/root"})
-    except subprocess.TimeoutExpired:
-        pytest.skip("shardmap compressed-allreduce subprocess exceeded 60s "
-                    "(known pre-existing hang on this box; see ROADMAP)")
+    """8-device shard_map execution of the compressed allreduce. The
+    historical "hang" here (skip-on-expiry quarantine since PR 3) was never
+    the shard_map: the stripped subprocess env dropped JAX_PLATFORMS, so the
+    child's ``import jax`` went platform-probing for minutes. With the env
+    inherited (tests/_subproc.py) the same test passes in ~1s, so the
+    quarantine is gone — a timeout now fails loudly like any regression."""
+    from _subproc import run_py
+    res = run_py(SHARDMAP_COMPRESS, devices=8, timeout=120)
     assert "COMPRESS_OK" in res.stdout, res.stdout + res.stderr

@@ -38,7 +38,72 @@ REQUIRED_METRICS_BY_PREFIX = {
     "serve/sched_": ("policy", "ttft_ms", "queue_wait_ms", "tok_s", "tokens"),
     "serve/cache_donation": ("donated", "bytes_moved", "decode_steps"),
     "serve/tp": ("tok_s", "cache_bytes_per_device"),
+    "serve/faults_": ("quarantined", "deadline_expired", "rejected", "shed",
+                      "preempted", "resumed", "tok_s", "tokens"),
 }
+
+# Serving-SLO metrics the regression gate watches on serve/sched_* records,
+# with the direction that counts as WORSE.
+SLO_METRIC_SENSE = {
+    "ttft_ms": "lower",        # lower is better
+    "queue_wait_ms": "lower",
+    "tok_s": "higher",         # higher is better
+}
+
+
+def slo_regressions(committed_records, fresh_records, *, max_ratio: float,
+                    prefix: str = "serve/sched_",
+                    require_all: bool = False) -> list[str]:
+    """Compare a fresh run's ``serve/sched_*`` SLO metrics against the
+    committed trajectory. Returns a list of human-readable violations —
+    empty means the gate passes. A metric regresses when it is worse by
+    more than ``max_ratio``x (TTFT/queue-wait up, tok/s down); only
+    records present in BOTH sets are compared unless ``require_all``,
+    which also flags committed records the fresh run dropped (a silently
+    deleted policy is itself a regression)."""
+    old = {r["name"]: r.get("metrics", {}) for r in committed_records
+           if r["name"].startswith(prefix)}
+    new = {r["name"]: r.get("metrics", {}) for r in fresh_records
+           if r["name"].startswith(prefix)}
+    problems = []
+    if require_all:
+        for name in sorted(set(old) - set(new)):
+            problems.append(f"{name}: present in committed trajectory but "
+                            f"missing from the fresh run")
+    for name in sorted(set(old) & set(new)):
+        for metric, sense in SLO_METRIC_SENSE.items():
+            was, now = old[name].get(metric), new[name].get(metric)
+            if not isinstance(was, (int, float)) or not isinstance(
+                    now, (int, float)) or was <= 0 or now <= 0:
+                continue
+            ratio = (now / was) if sense == "lower" else (was / now)
+            if ratio > max_ratio:
+                worse = "rose" if sense == "lower" else "fell"
+                problems.append(
+                    f"{name}: {metric} {worse} {was:.2f} -> {now:.2f} "
+                    f"({ratio:.2f}x worse > {max_ratio:.2f}x tolerance)")
+    return problems
+
+
+def assert_no_slo_regression(committed_path, fresh_records, *,
+                             max_ratio: float | None = None,
+                             require_all: bool = False) -> None:
+    """The serving-SLO gate: raise if a fresh run's scheduler records
+    regress beyond tolerance against the COMMITTED ``BENCH_serve.json``.
+    Tolerance defaults to ``SERVE_SLO_MAX_RATIO`` (env, default 2.0 —
+    generous because CI machines differ; the gate exists to catch
+    order-of-magnitude lifecycle regressions, not wall-clock noise)."""
+    if max_ratio is None:
+        max_ratio = float(os.environ.get("SERVE_SLO_MAX_RATIO", "2.0"))
+    committed = load_and_validate(committed_path, forbid_smoke=True)
+    problems = slo_regressions(committed["records"], fresh_records,
+                               max_ratio=max_ratio, require_all=require_all)
+    if problems:
+        raise AssertionError(
+            "serving SLO regression vs committed trajectory "
+            f"({committed_path}):\n  " + "\n  ".join(problems)
+            + "\n(raise SERVE_SLO_MAX_RATIO to override a known machine "
+              "mismatch)")
 
 
 def repo_root() -> Path:

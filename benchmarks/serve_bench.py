@@ -26,8 +26,21 @@ Request-lifecycle records (PR 4):
     through ``ServeEngine.generate`` under each admission policy and
     records mean queue wait, mean TTFT, and end-to-end tok/s.
 
+Resilience records (PR 7):
+
+  * ``serve/robust_overhead`` — the same fifo workload with deadlines,
+    a bounded queue, and the watchdog armed: the fault-free cost of the
+    resilience layer (token output asserted identical).
+  * ``serve/faults_chaos`` — a seeded compound failure scenario (KV-scale
+    poison, clock-skip deadline expiry, stalled step, queue overflow,
+    priority preemption); asserts every resilience counter moved.
+  * The **serving-SLO gate**: before overwriting the committed
+    trajectory, a full run is compared against it and fails on
+    ``serve/sched_*`` TTFT / queue-wait / tok_s regressions beyond
+    ``SERVE_SLO_MAX_RATIO`` (benchmarks/common.py).
+
 Emits ``BENCH_serve.json`` at the repo root (schema: benchmarks/common.py;
-the scheduler/donation records carry required metric keys the CI
+the scheduler/donation/fault records carry required metric keys the CI
 bench-smoke job validates). Smoke mode writes ``BENCH_serve.smoke.json``
 instead — a post-run smoke must never clobber the committed full-size
 trajectory.
@@ -45,7 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchSuite, repo_root
+from benchmarks.common import BenchSuite, assert_no_slo_regression, repo_root
 from repro.configs.base import get_config, reduced
 from repro.models import lm
 from repro.models.layers import Runtime
@@ -91,20 +104,24 @@ def _run_mode(params, cfg, *, sample_on_host: bool, slots: int,
 
 
 def _run_scheduler(params, cfg, *, policy: str, slots: int, n_requests: int,
-                   max_new: int, max_len: int):
+                   max_new: int, max_len: int, eng_kw: dict | None = None,
+                   deadline_ms: float | None = None):
     """Submit a full queue up front and stream via ``generate()``: measures
     the lifecycle numbers admission policy actually moves — queue wait and
     TTFT — plus end-to-end tok/s. Prompt lengths and priorities are spread
-    so fifo/priority/sjf produce genuinely different admission orders."""
+    so fifo/priority/sjf produce genuinely different admission orders.
+    ``eng_kw``/``deadline_ms`` arm the resilience layer (the
+    ``serve/robust_overhead`` record measures its fault-free cost)."""
     eng = ServeEngine(params, cfg, slots=slots, max_len=max_len, rt=RT,
-                      scheduler=policy)
+                      scheduler=policy, **(eng_kw or {}))
     rng = np.random.default_rng(5)
 
     def make():
         return [Request(rid=i,
                         prompt=rng.integers(0, cfg.vocab_size,
                                             size=4 + (i * 7) % 13),
-                        max_new=max_new, priority=i % 3)
+                        max_new=max_new, priority=i % 3,
+                        deadline_ms=deadline_ms)
                 for i in range(n_requests)]
 
     for _ in eng.generate(make()):  # warmup: compile every wave shape
@@ -125,6 +142,79 @@ def _run_scheduler(params, cfg, *, policy: str, slots: int, n_requests: int,
         "ttft_ms": 1e3 * ttft,
         "queue_wait_ms": 1e3 * queue_wait,
     }
+
+
+def add_fault_records(suite: BenchSuite, params, cfg, *, smoke: bool) -> None:
+    """``serve/faults_chaos``: drive the engine through a seeded compound
+    failure scenario — KV-scale poisoning, deadline expiry via clock skip,
+    a stalled step, queue overflow, and priority preemption — and record
+    how every resilience path fired. The record asserts each counter
+    actually moved: a resilience path that silently stopped firing is a
+    regression even when throughput looks fine."""
+    from repro.serve.faults import Fault, FaultClock, FaultPlan, burst
+
+    rtq = Runtime(compute_dtype=jnp.float32, kv_quant=True)
+    slots = 4
+    n_low, n_high = (4, 3) if smoke else (6, 4)
+    max_new = 8 if smoke else 16
+    clk = FaultClock()
+    eng = ServeEngine(params, cfg, slots=slots, max_len=64, rt=rtq,
+                      scheduler="priority", clock=clk, max_queue=slots,
+                      shed_policy="shed_lowest", watchdog_timeout_s=0.5)
+    # warmup compiles the wave shapes WITHOUT arming faults
+    for _ in eng.generate(burst(slots, cfg.vocab_size, seed=8,
+                                max_new=max_new)):
+        pass
+    s0 = eng.decode_steps
+    eng.faults = FaultPlan([
+        Fault("kv_nan", step=s0 + 2, slot=0),
+        Fault("clock_skip", step=s0 + 6, dt=1.0),
+        Fault("stall", step=s0 + 6, dt=2.0),
+    ], clock=clk)
+    counters0 = {k: getattr(eng, k) for k in (
+        "quarantined", "deadline_expired", "requests_rejected",
+        "requests_shed", "preemptions", "resumes", "stalled_steps")}
+    toks0 = eng.tokens_decoded
+    # low-priority work first (deadline-carrying), then a queue-filling
+    # second wave, then a high-priority burst mid-stream: forces
+    # shed_lowest overflow AND should_preempt eviction in one run
+    lows = burst(slots, cfg.vocab_size, seed=9, max_new=max_new,
+                 rid0=100, priority=0, deadline_ms=400.0)
+    lows_q = burst(n_low, cfg.vocab_size, seed=9, max_new=max_new,
+                   rid0=150, priority=0, deadline_ms=400.0)
+    highs = burst(n_high, cfg.vocab_size, seed=10, max_new=max_new,
+                  rid0=200, priority=2)
+    t0 = time.perf_counter()
+    it = eng.generate(lows)
+    for _ in range(slots + 2):  # lows are live, mid-decode
+        next(it)
+    for r in lows_q + highs:
+        eng.submit_request(r)
+    for _ in it:
+        pass
+    wall = time.perf_counter() - t0
+    reqs = lows + lows_q + highs
+    assert all(r.done for r in reqs), "chaos run left unfinished requests"
+    delta = {k: getattr(eng, k) - counters0[k] for k in counters0}
+    for k in ("quarantined", "deadline_expired", "stalled_steps"):
+        assert delta[k] >= 1, f"chaos scenario never exercised {k}"
+    assert delta["requests_rejected"] + delta["requests_shed"] >= 1, \
+        "chaos burst never overflowed max_queue"
+    assert delta["preemptions"] >= 1, "priority burst never preempted"
+    tokens = eng.tokens_decoded - toks0
+    suite.add("serve/faults_chaos",
+              us_per_call=1e6 * wall / max(tokens, 1),
+              tok_s=round(tokens / wall, 2),
+              tokens=tokens,
+              requests=len(reqs),
+              quarantined=delta["quarantined"],
+              deadline_expired=delta["deadline_expired"],
+              rejected=delta["requests_rejected"],
+              shed=delta["requests_shed"],
+              preempted=delta["preemptions"],
+              resumed=delta["resumes"],
+              stalled_steps=delta["stalled_steps"],
+              all_terminal=True)
 
 
 _TP_SCRIPT = textwrap.dedent("""
@@ -265,10 +355,12 @@ def main(smoke: bool = False) -> None:
               cache_bytes=est["cache_bytes"])
 
     # request-lifecycle scheduling: queue wait / TTFT / tok/s per policy
+    sched = {}
     for policy in ("fifo", "priority", "sjf"):
         r = _run_scheduler(qparams, cfg, policy=policy, slots=slots,
                            n_requests=2 * n_requests, max_new=max_new,
                            max_len=max_len)
+        sched[policy] = r
         suite.add(f"serve/sched_{policy}",
                   us_per_call=1e6 * r["wall_s"] / max(r["tokens"], 1),
                   policy=policy,
@@ -278,10 +370,38 @@ def main(smoke: bool = False) -> None:
                   tokens=r["tokens"],
                   slots=slots)
 
+    # fault-free cost of the resilience layer: same fifo workload with
+    # deadlines armed, a bounded queue, and the watchdog on — the deadline
+    # and finiteness checks ride existing transfers, so this should be
+    # noise-level (the record tracks that claim across PRs)
+    rr = _run_scheduler(
+        qparams, cfg, policy="fifo", slots=slots, n_requests=2 * n_requests,
+        max_new=max_new, max_len=max_len,
+        eng_kw=dict(max_queue=8 * n_requests, watchdog_timeout_s=60.0),
+        deadline_ms=600_000.0)
+    assert rr["tokens"] == sched["fifo"]["tokens"], \
+        "resilience knobs changed fault-free token output"
+    suite.add("serve/robust_overhead",
+              tok_s_base=round(sched["fifo"]["tok_s"], 2),
+              tok_s_resilient=round(rr["tok_s"], 2),
+              overhead_ratio=round(
+                  sched["fifo"]["tok_s"] / max(rr["tok_s"], 1e-9), 3),
+              tokens=rr["tokens"],
+              tokens_match=True)
+
+    add_fault_records(suite, qparams, cfg, smoke=smoke)
     add_tp_records(suite, smoke=smoke)
 
     from benchmarks.attn_bench import add_serve_records
     add_serve_records(suite, smoke=smoke)
+
+    # the serving-SLO gate: a full run must not regress the committed
+    # scheduler trajectory beyond tolerance BEFORE it overwrites it (smoke
+    # runs are sized differently and never gate)
+    committed = repo_root() / "BENCH_serve.json"
+    if not smoke and committed.exists():
+        assert_no_slo_regression(committed, suite.records, require_all=True)
+
     suite.write()
 
 

@@ -52,7 +52,19 @@ class HeartbeatMonitor:
 
     def beat(self, host: int, step: int, now: Optional[float] = None):
         now = self.clock() if now is None else now
-        st = self.hosts[host]
+        st = self.hosts.get(host)
+        if st is None:
+            # A host beating after an elastic re-mesh (rejoin, or a driver
+            # monitoring a dynamic member set) must not crash the monitor:
+            # auto-register it as of this beat. Its first step-latency
+            # sample starts from here, like any fresh host. A stale
+            # exclusion from before the re-mesh is cleared — a rejoining
+            # host is alive by definition. (Hosts the driver explicitly
+            # excluded and that keep beating stay excluded: only the
+            # never-seen path re-admits.)
+            st = self.hosts[host] = HostState(last_beat=now)
+            self.num_hosts = max(self.num_hosts, len(self.hosts))
+            self.excluded.discard(host)
         if st.last_step >= 0 and step > st.last_step:
             st.step_times.append((now - st.last_beat) / max(1, step - st.last_step))
         st.last_beat = now

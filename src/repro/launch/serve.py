@@ -25,6 +25,16 @@ Request-lifecycle serving (PR 4): per-request sampling knobs
 admission policy (``--scheduler fifo|priority|sjf``), and ``--stream`` to
 print StreamEvents (finish reason, TTFT, queue wait) as requests complete
 instead of waiting for the closed batch.
+
+Failure-hardened serving (PR 7): ``--max-queue``/``--shed-policy`` bound
+admission (overflow -> terminal ``rejected`` events), ``--deadline-ms``
+arms per-request deadlines, ``--watchdog-timeout-s`` counts stalled decode
+steps, and ``--chaos`` runs the whole thing under a seeded
+``serve/faults.py`` FaultPlan (KV-scale poison + clock skip + stall) to
+demo that every failure mode drains to a terminal finish reason:
+
+    ... --reduced --kv-quant --chaos --stream --scheduler priority \
+        --max-queue 4 --shed-policy shed_lowest
 """
 from __future__ import annotations
 
@@ -118,6 +128,24 @@ def main() -> None:
                          "kernels instead of GSPMD-partitioned jit (the "
                          "automatic default on real TPU, where GSPMD cannot "
                          "split a pallas_call)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the waiting queue; overflow follows "
+                         "--shed-policy (terminal 'rejected' events)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "shed_lowest"],
+                    help="queue-overflow policy: turn the newcomer away, or "
+                         "drop the lowest-priority waiting request instead")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request submit->done deadline; expired "
+                         "requests finish with finish_reason='deadline'")
+    ap.add_argument("--watchdog-timeout-s", type=float, default=None,
+                    help="arm the decode-step watchdog: steps slower than "
+                         "this are counted in stats()['stalled_steps']")
+    ap.add_argument("--chaos", action="store_true",
+                    help="serve under a seeded FaultPlan (KV-scale poison + "
+                         "clock skip + stall): demos quarantine/deadline/"
+                         "watchdog draining to terminal events")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -173,11 +201,29 @@ def main() -> None:
             path = ckpt_mod.save(args.save_quantized, 0, params)
             print(f"saved quantized tree to {path}")
 
+    faults = None
+    if args.chaos:
+        from repro.serve.faults import Fault, FaultPlan
+        faults = FaultPlan([
+            Fault("kv_nan", step=3, slot=0,
+                  plane="k_scale" if args.kv_quant else "k"),
+            Fault("clock_skip", step=6, dt=1.0),
+            Fault("stall", step=6, dt=2.0),
+        ], seed=args.chaos_seed)
+        if args.watchdog_timeout_s is None:
+            args.watchdog_timeout_s = 0.5
+        if args.deadline_ms is None:
+            args.deadline_ms = 400.0
+        print(f"chaos mode: {len(faults.faults)} seeded faults armed "
+              f"(seed {args.chaos_seed}, deterministic clock)")
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                       rt=rt, temperature=args.temperature,
                       sample_on_host=args.sample_on_host,
                       scheduler=args.scheduler, mesh=mesh,
-                      tp_shard_map=True if args.tp_shard_map else None)
+                      tp_shard_map=True if args.tp_shard_map else None,
+                      max_queue=args.max_queue, shed_policy=args.shed_policy,
+                      watchdog_timeout_s=args.watchdog_timeout_s,
+                      faults=faults)
     if args.kv_quant:
         print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
               f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
@@ -196,7 +242,8 @@ def main() -> None:
         reqs.append(Request(
             rid=i, prompt=rng.integers(0, cfg.vocab_size, size=8 + i % 5),
             max_new=args.max_new, sampling=sp,
-            priority=i % 3 if args.scheduler == "priority" else 0))
+            priority=i % 3 if args.scheduler == "priority" else 0,
+            deadline_ms=args.deadline_ms))
     t0 = time.time()
     if args.stream:
         for ev in eng.generate(reqs):
@@ -217,6 +264,16 @@ def main() -> None:
           f"{st['syncs_per_token']:.2f} host syncs/token, "
           f"scheduler={st['scheduler']}, "
           f"cache bytes moved {st['cache_bytes_moved']})")
+    resil = {k: st[k] for k in ("quarantined", "deadline_expired",
+                                "requests_rejected", "requests_shed",
+                                "preemptions", "stalled_steps") if st.get(k)}
+    if resil or args.chaos:
+        from collections import Counter
+        reasons = Counter(r.finish_reason for r in done)
+        print(f"resilience: {resil or 'no faults fired'}; "
+              f"finish reasons {dict(reasons)}")
+        if faults is not None:
+            print(f"fault log: {faults.log}")
     for r in done[:3]:
         print(f"  rid={r.rid} -> {r.out[:10]}")
 

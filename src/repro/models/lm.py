@@ -38,7 +38,7 @@ Params = dict[str, Any]
 
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "model_flops",
-    "sample_tokens", "top_mask",
+    "sample_tokens", "top_mask", "finite_rows",
 ]
 
 
@@ -589,6 +589,18 @@ def decode_step(
     x = _embed(params, tokens, rt, cfg)
     x, new_cache, _ = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos)
     return _head(params, x, rt, cfg), new_cache
+
+
+def finite_rows(logits: jax.Array) -> jax.Array:
+    """Per-row numeric health: True where every logit in the row is finite.
+
+    The serving engine folds this into the jitted decode step (quantized
+    stacks can degenerate at runtime — an inf/NaN KV scale plane poisons a
+    row's attention — and the check must ride the step's existing token
+    transfer rather than add a host sync). Reduces (..., V) -> (...) bool
+    on device; rows that pass are untouched, so healthy streams stay
+    bit-identical."""
+    return jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
 
 
 def top_mask(

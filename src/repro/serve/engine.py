@@ -52,6 +52,45 @@ Hot-path discipline (the decode loop is the product):
   power-of-two chunk ladder (``prompt_chunk``, then halves) with state
   threaded between calls — at most log2(prompt_chunk)+1 compiled shapes
   ever, regardless of traffic.
+
+Resilience layer (every failure mode ends in a terminal StreamEvent with a
+specific ``finish_reason`` — never a hang, a crash, or a corrupted
+neighbor stream):
+
+* **Deadlines.** ``Request.deadline_ms`` (submit -> done wall budget) and
+  ``Request.decode_timeout_ms`` (first token -> done) are enforced in
+  ``_tick`` against an injectable ``clock``: queued requests past deadline
+  are shed at pop time, live slots finish with ``finish_reason="deadline"``
+  before decoding another token.
+* **Backpressure.** ``max_queue`` bounds the waiting queue. Overflow
+  follows ``shed_policy``: ``"reject"`` turns the newcomer away
+  (``submit_request`` returns False, terminal ``"rejected"`` event);
+  ``"shed_lowest"`` drops the lowest-priority waiting request instead —
+  unless the newcomer IS lowest, in which case it is rejected itself.
+* **Numeric quarantine.** The jitted decode folds a per-slot finiteness
+  check over the logits into the step and encodes failure as a ``-1``
+  sentinel in the token vector — riding the step's single device->host
+  transfer, so the 1 host sync/step discipline is preserved. A poisoned
+  slot (inf/NaN logits — e.g. a degenerate KV scale plane) finishes with
+  ``finish_reason="error"`` and its cache rows are re-zeroed; healthy
+  slots' streams are bit-identical to a fault-free run (their rows pass
+  through the check untouched; batch rows are independent).
+* **Mid-flight preemption + swap/resume.** :meth:`preempt` extracts a
+  live slot's cache rows (``_take_slots`` -> host copy) plus its stream
+  state into a swap pool and requeues the request with the scheduler; on
+  re-admission the rows are scattered back (``_put_slots``) and decoding
+  continues bit-identically — no re-prefill. Schedulers may drive this via
+  the optional ``should_preempt`` hook (PriorityScheduler evicts the
+  lowest-priority live request when strictly higher-priority work waits).
+* **Watchdog.** ``watchdog_timeout_s`` arms an ``ft.monitor``-based
+  heartbeat over decode steps: a step whose wall gap exceeds the timeout
+  is counted in ``stats()["stalled_steps"]`` (the training watchdog policy
+  reused for serving).
+* **Fault injection.** ``faults=`` accepts a ``serve/faults.py``
+  :class:`FaultPlan`; the engine calls its ``before_decode`` hook each
+  step, and adopts its deterministic clock when no explicit ``clock`` is
+  given — every policy above is exercised by seeded, reproducible tests
+  and ``launch/serve.py --chaos``.
 """
 from __future__ import annotations
 
@@ -66,11 +105,17 @@ import numpy as np
 from repro.models import lm
 from repro.models.layers import Runtime
 from repro.serve.sampling import (
-    FINISH_CANCELLED, FINISH_LENGTH, FINISH_STOP, SamplingParams, StreamEvent,
+    FINISH_CANCELLED, FINISH_DEADLINE, FINISH_ERROR, FINISH_LENGTH,
+    FINISH_REJECTED, FINISH_STOP, SamplingParams, StreamEvent,
 )
 from repro.serve.scheduler import Scheduler, get_scheduler
 
 __all__ = ["Request", "ServeEngine", "SamplingParams", "StreamEvent"]
+
+# In-band numeric-health sentinel: the jitted decode replaces a poisoned
+# slot's sampled token with this (token ids are always >= 0), so quarantine
+# detection rides the step's one device->host token transfer.
+_POISONED = -1
 
 
 @dataclasses.dataclass
@@ -80,9 +125,17 @@ class Request:
     max_new: int = 32  # output budget (SamplingParams.max_new overrides)
     sampling: Optional[SamplingParams] = None  # None -> engine default
     priority: int = 0  # PriorityScheduler: higher admits first
+    # --- SLO knobs (None disables; both measured on the engine clock) ---
+    deadline_ms: Optional[float] = None  # submit -> done wall budget;
+    #   queued requests past it are shed at pop time, live ones finish
+    #   with finish_reason="deadline" before decoding another token
+    decode_timeout_ms: Optional[float] = None  # first token -> done budget
+    #   (covers time spent swapped out by preemption, by design: the SLO
+    #   is the caller's wall clock, not the slot's)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: Optional[str] = None
+    preemptions: int = 0  # times this request was swapped out mid-flight
     # --- lifecycle stamps (perf_counter seconds, filled by the engine) ---
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None
@@ -100,6 +153,8 @@ class Request:
         if self.t_first is not None and self.t_done is not None and n > 1:
             dt = self.t_done - self.t_first
             out["decode_tok_s"] = (n - 1) / dt if dt > 0 else float("inf")
+        if self.preemptions:
+            out["preemptions"] = self.preemptions
         return out
 
 
@@ -112,7 +167,11 @@ class ServeEngine:
                  sampling: Optional[SamplingParams] = None,
                  scheduler: "str | Scheduler | None" = None,
                  eos_id: Optional[int] = None,
-                 mesh=None, tp_shard_map: Optional[bool] = None):
+                 mesh=None, tp_shard_map: Optional[bool] = None,
+                 clock=None, max_queue: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 watchdog_timeout_s: Optional[float] = None,
+                 faults=None):
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
         self.mesh = mesh
@@ -146,6 +205,36 @@ class ServeEngine:
         self.scheduler: Scheduler = get_scheduler(scheduler)
         self.eos_id = eos_id if eos_id is not None else getattr(
             cfg, "eos_token_id", None)
+        # --- resilience layer (see module docstring) ---
+        self.faults = faults
+        if clock is None and faults is not None:
+            clock = getattr(faults, "clock", None)  # deterministic test time
+        self._clock = clock or time.perf_counter
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if shed_policy not in ("reject", "shed_lowest"):
+            raise ValueError(
+                f"shed_policy must be 'reject' or 'shed_lowest', "
+                f"got {shed_policy!r}")
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        # rid -> {"cache": host pytree, "pos": int, "next_tok": int} for
+        # requests swapped out mid-flight by preempt()
+        self._swapped: dict[int, dict] = {}
+        self.watchdog = None
+        if watchdog_timeout_s is not None:
+            from repro.ft.monitor import HeartbeatMonitor  # lazy: ft layer
+            self.watchdog = HeartbeatMonitor(
+                1, timeout_s=float(watchdog_timeout_s), clock=self._clock)
+        # --- resilience counters (surfaced via stats()) ---
+        self.requests_rejected = 0  # backpressure: newcomer turned away
+        self.requests_shed = 0      # backpressure: waiting victim dropped
+        self.requests_invalid = 0   # malformed (empty prompt) at submit/admit
+        self.deadline_expired = 0   # queued or live deadline/timeout expiries
+        self.quarantined = 0        # slots evicted by the numeric-health check
+        self.preemptions = 0        # live slots swapped out mid-flight
+        self.resumes = 0            # swapped requests scattered back in
+        self.stalled_steps = 0      # decode steps slower than the watchdog
         # Runtime.kv_quant lays the attention cache out as rotated-int8
         # codes + fp16 scales (serve/kv_quant.py); cache_dtype is the fp
         # cache element type otherwise (f32 default keeps CPU tests exact,
@@ -260,8 +349,15 @@ class ServeEngine:
         into its key so row draws don't depend on slot or batchmates."""
         logits, new_cache = lm.decode_step(
             params, tokens, cache, positions, self.rt, self.cfg)
-        tok = _sample_slots(logits[:, 0], keys, gen, temp, top_k, top_p)
-        return tok, new_cache
+        last = logits[:, 0]
+        tok = _sample_slots(last, keys, gen, temp, top_k, top_p)
+        # numeric-health check folded into the step: a slot whose logits
+        # row went non-finite (inf/NaN — e.g. a poisoned KV scale plane)
+        # reports the in-band _POISONED sentinel instead of a token, so
+        # quarantine costs zero extra host syncs; healthy rows pass through
+        # untouched (batch rows are independent -> bit-identical streams)
+        ok = lm.finite_rows(last)
+        return jnp.where(ok, tok, _POISONED), new_cache
 
     def _decode_logits_impl(self, params, cache, tokens, positions):
         """Pre-overhaul decode: ship logits out, sample on host."""
@@ -282,11 +378,53 @@ class ServeEngine:
             over.update(top_k=0, top_p=1.0)
         return dataclasses.replace(sp, **over) if over else sp
 
-    def submit_request(self, req: Request) -> None:
-        """Enqueue a request with the scheduler (stamped for queue-wait)."""
+    def _terminal(self, req: Request, reason: str) -> StreamEvent:
+        """Stamp a request done OFF-slot (rejected / shed / expired while
+        queued / invalid) and queue its terminal event for the next tick."""
         if req.t_submit is None:
-            req.t_submit = time.perf_counter()
+            req.t_submit = self._clock()
+        req.done = True
+        req.finish_reason = reason
+        req.t_done = self._clock()
+        ev = StreamEvent(req.rid, None, len(req.out), finished=True,
+                         finish_reason=reason, stats=req.stats())
+        self._pending_events.append(ev)
+        return ev
+
+    def submit_request(self, req: Request) -> bool:
+        """Enqueue a request with the scheduler (stamped for queue-wait).
+
+        Returns False — with a terminal StreamEvent queued for the next
+        tick — when the request is turned away instead of enqueued:
+        malformed (empty prompt -> ``finish_reason="error"``) or shed by
+        backpressure (queue at ``max_queue`` under the ``reject`` policy,
+        or under ``shed_lowest`` when the newcomer is itself the
+        lowest-priority request waiting -> ``"rejected"``)."""
+        if len(req.prompt) == 0 and req.rid not in self._swapped:
+            # malformed: reject ALONE, loudly, before it can poison an
+            # admission wave (an empty prompt would gather last_idx=-1)
+            self.requests_invalid += 1
+            self._terminal(req, FINISH_ERROR)
+            return False
+        if self.max_queue is not None and len(self.scheduler) >= self.max_queue:
+            victim = None
+            if self.shed_policy == "shed_lowest":
+                shed = getattr(self.scheduler, "shed", None)
+                if shed is not None:
+                    victim = shed(below=int(getattr(req, "priority", 0)))
+            if victim is None:
+                # reject policy, no shed() hook, or the newcomer doesn't
+                # outrank anyone waiting: the newcomer is turned away
+                self.requests_rejected += 1
+                self._terminal(req, FINISH_REJECTED)
+                return False
+            self._swapped.pop(victim.rid, None)
+            self.requests_shed += 1
+            self._terminal(victim, FINISH_REJECTED)
+        if req.t_submit is None:
+            req.t_submit = self._clock()
         self.scheduler.add(req)
+        return True
 
     def cancel(self, rid: int) -> bool:
         """Evict a live slot or drop a queued request. The terminal
@@ -294,7 +432,8 @@ class ServeEngine:
         tick. Returns False for unknown/finished rids."""
         req = self.scheduler.cancel(rid)
         if req is not None:
-            req.t_done = time.perf_counter()
+            self._swapped.pop(rid, None)  # preempted + requeued, now dead
+            req.t_done = self._clock()
             self._pending_events.append(StreamEvent(
                 rid, None, len(req.out), finished=True,
                 finish_reason=FINISH_CANCELLED, stats=req.stats()))
@@ -304,6 +443,46 @@ class ServeEngine:
                 self._finish_slot(s, r, FINISH_CANCELLED, token=None)
                 return True
         return False
+
+    def preempt(self, rid: int) -> bool:
+        """Swap a LIVE request out mid-flight: its slot's cache rows are
+        copied to host (int8 codes / fp scales round-trip exactly) together
+        with its stream state, the slot is freed, and the request goes back
+        to the scheduler. On re-admission :meth:`_admit_group` scatters the
+        rows back and decoding continues bit-identically — no re-prefill.
+        Returns False for rids that aren't live."""
+        for s, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                break
+        else:
+            return False
+        sub = jax.device_get(
+            _take_slots(self.cache, jnp.asarray([s], jnp.int32)))
+        self._swapped[rid] = {"cache": sub, "pos": int(self.pos[s]),
+                              "next_tok": int(self._next_tok[s])}
+        # free the slot WITHOUT finishing the request (no terminal event:
+        # the stream simply pauses until resume)
+        self.active[s] = None
+        self._slot_stop[s] = frozenset()
+        self._temp[s] = 0.0
+        self._top_k[s] = 0
+        self._top_p[s] = 1.0
+        req.preemptions += 1
+        self.preemptions += 1
+        self.scheduler.add(req)
+        return True
+
+    def _resume_slot(self, req: Request, s: int) -> None:
+        """Scatter a swapped request's cache rows back into slot ``s`` and
+        rebind its stream state. Lifecycle stamps are NOT reset — queue
+        wait and TTFT stay measured from the original submission."""
+        sw = self._swapped.pop(req.rid)
+        self.cache = _put_slots(
+            self.cache, jax.tree.map(jnp.asarray, sw["cache"]),
+            jnp.asarray([s], jnp.int32))
+        self._install_slot(s, req, self._resolve(req), pos=sw["pos"],
+                           next_tok=sw["next_tok"])
+        self.resumes += 1
 
     def generate(self, requests: Iterable[Request] = (),
                  ) -> Iterator[StreamEvent]:
@@ -322,14 +501,68 @@ class ServeEngine:
     def _tick(self) -> list[StreamEvent]:
         events = self._pending_events
         self._pending_events = []
+        events += self._expire_live()
+        self._maybe_preempt()
+        events += self._pending_events  # preemption emits no events today,
+        self._pending_events = []       # but a custom hook may cancel
         free = sum(r is None for r in self.active)
         if free and len(self.scheduler):
-            wave = self.scheduler.pop(free)
+            wave = self._pop_wave(free, events)
             if wave:
                 events += self._admit_group(wave)
         if any(r is not None for r in self.active):
             events += self._step_events()
         return events
+
+    def _expired(self, req: Request, now: float) -> bool:
+        if (req.deadline_ms is not None and req.t_submit is not None
+                and (now - req.t_submit) * 1e3 > req.deadline_ms):
+            return True
+        return (req.decode_timeout_ms is not None and req.t_first is not None
+                and (now - req.t_first) * 1e3 > req.decode_timeout_ms)
+
+    def _expire_live(self) -> list[StreamEvent]:
+        """Finish live slots whose deadline/decode-timeout expired —
+        BEFORE decoding another token on their behalf."""
+        now = self._clock()
+        events = []
+        for s, req in enumerate(self.active):
+            if req is not None and self._expired(req, now):
+                self.deadline_expired += 1
+                events.append(self._finish_slot(
+                    s, req, FINISH_DEADLINE, token=None))
+        return events
+
+    def _pop_wave(self, free: int, events: list[StreamEvent]) -> list:
+        """Pop the next admission wave, shedding queued requests whose
+        deadline already expired (they would only waste a prefill)."""
+        now = self._clock()
+        wave: list = []
+        while len(wave) < free and len(self.scheduler):
+            for req in self.scheduler.pop(free - len(wave)):
+                if self._expired(req, now):
+                    self._swapped.pop(req.rid, None)
+                    self.deadline_expired += 1
+                    self._terminal(req, FINISH_DEADLINE)
+                    events.append(self._pending_events.pop())  # deliver NOW
+                else:
+                    wave.append(req)
+        return wave
+
+    def _maybe_preempt(self) -> None:
+        """Let the scheduler evict live work for higher-priority waiting
+        work — only when the machine is actually full (free slots admit
+        without anyone paying a swap)."""
+        hook = getattr(self.scheduler, "should_preempt", None)
+        if hook is None or not len(self.scheduler):
+            return
+        for _ in range(self.slots):
+            if any(r is None for r in self.active):
+                return
+            live = [r for r in self.active if r is not None]
+            rid = hook(live)
+            if rid is None or not self.preempt(rid):
+                return
 
     # --- admission --------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -338,35 +571,51 @@ class ServeEngine:
     def admit(self, reqs: list[Request]) -> int:
         """Admit as many of ``reqs`` (in order) as there are free slots,
         bypassing the scheduler (the closed-batch / legacy path).
-        Returns the number admitted."""
+        Returns the number actually admitted (malformed requests are
+        rejected with a terminal ``error`` event, not counted)."""
         free = sum(r is None for r in self.active)
         group = reqs[:free]
         if not group:
             return 0
+        inv0 = self.requests_invalid
         self._admit_group(group)
-        return len(group)
+        return len(group) - (self.requests_invalid - inv0)
 
     def _admit_group(self, group: list[Request]) -> list[StreamEvent]:
         free = [s for s in range(self.slots) if self.active[s] is None]
         assert len(group) <= len(free), "scheduler over-popped"
-        free = free[: len(group)]
-        now = time.perf_counter()
+        now = self._clock()
+        events: list[StreamEvent] = []
+        fresh: list[Request] = []
         for r in group:
-            # loud here, not garbage later: an empty prompt would gather
-            # last_idx=-1 (a pad position) in the bucketed path
-            if len(r.prompt) == 0:
-                raise ValueError(f"request rid={r.rid} has an empty prompt")
+            if r.rid in self._swapped:
+                # preempted mid-flight: scatter its rows back, no prefill
+                self._resume_slot(r, free.pop(0))
+            elif len(r.prompt) == 0:
+                # malformed: an empty prompt would gather last_idx=-1 (a
+                # pad position) in the bucketed path. Reject it ALONE with
+                # a terminal event — never abort a wave whose peers are
+                # already stamped (this is the direct-admit() screen; the
+                # queued path is screened at submit_request)
+                self.requests_invalid += 1
+                self._terminal(r, FINISH_ERROR)
+                events.append(self._pending_events.pop())  # deliver NOW
+            else:
+                fresh.append(r)
+        if not fresh:
+            return events
+        for r in fresh:
             if r.t_submit is None:
                 r.t_submit = now  # direct admit(): no queue wait
             r.t_admit = now
+        free = free[: len(fresh)]
         if self.cfg.family in ("ssm", "hybrid"):
             # recurrent state integrates every fed token: no pad buckets;
             # chunk ladder instead (bounded compiled shapes)
-            events = []
-            for req, s in zip(group, free):
+            for req, s in zip(fresh, free):
                 events += self._admit_chunked(req, s)
             return events
-        return self._admit_bucketed(group, free)
+        return events + self._admit_bucketed(fresh, free)
 
     def _group_sampling(self, group: list[Request]):
         """Per-request device vectors for one admission wave. Returns
@@ -452,29 +701,36 @@ class ServeEngine:
         else:
             firsts = np.asarray(tok)
             self.host_syncs += 1
-        now = time.perf_counter()
+        now = self._clock()
         events = []
         for g, (req, s) in enumerate(zip(group, free)):
-            sp = sps[g]
-            self.pos[s] = plens[g]
-            self.active[s] = req
-            self._slot_stop[s] = sp.stop_set(self.eos_id)
-            self._slot_max_new[s] = int(sp.max_new)
-            self._temp[s] = sp.temperature
-            self._top_k[s] = sp.top_k
-            self._top_p[s] = sp.top_p
-            self._keys[s] = sp.key_data(engine_seed=self.seed, rid=req.rid)
             first = int(firsts[g])
+            self._install_slot(s, req, sps[g], pos=plens[g], next_tok=first)
             req.out.append(first)
             req.t_first = now
-            self._next_tok[s] = first
             events.append(self._emit(s, req, first))
         return events
+
+    def _install_slot(self, s: int, req: Request, sp: SamplingParams, *,
+                      pos: int, next_tok: int) -> None:
+        """Bind a request to a slot: position counter + per-slot sampling
+        state (shared by fresh admission and preemption resume)."""
+        self.pos[s] = pos
+        self.active[s] = req
+        self._slot_stop[s] = sp.stop_set(self.eos_id)
+        self._slot_max_new[s] = int(sp.max_new)
+        self._temp[s] = sp.temperature
+        self._top_k[s] = sp.top_k
+        self._top_p[s] = sp.top_p
+        self._keys[s] = sp.key_data(engine_seed=self.seed, rid=req.rid)
+        self._next_tok[s] = next_tok
 
     # --- decode -----------------------------------------------------------
     def _step_events(self) -> list[StreamEvent]:
         """One decode step for every active slot -> one StreamEvent per
         emitted token (terminal events carry finish reason + stats)."""
+        if self.faults is not None:
+            self.faults.before_decode(self)
         toks = jnp.asarray(self._next_tok[:, None])
         positions = jnp.asarray(self.pos)
         probe = jax.tree.leaves(self.cache)
@@ -507,21 +763,44 @@ class ServeEngine:
         self.cache_donated = all(a.is_deleted() for a in probe)
         if not self.cache_donated:  # functional copy happened: count it
             self.cache_bytes_moved += self._cache_nbytes
+        if self.watchdog is not None:
+            now = self._clock()
+            self.stalled_steps += len(self.watchdog.failed(now))
+            self.watchdog.beat(0, self.decode_steps, now=now)
         events = []
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             if tok_np is None:
-                tok = int(jnp.argmax(logits[s]))  # one transfer per slot
+                row = np.asarray(logits[s])  # one transfer per slot
                 self.host_syncs += 1
+                tok = _POISONED if not np.isfinite(row).all() \
+                    else int(np.argmax(row))
             else:
                 tok = int(tok_np[s])
+            if tok == _POISONED:
+                # numeric quarantine: the slot's logits went non-finite.
+                # Finish the stream loudly (finish_reason="error") and
+                # re-zero the slot's cache rows so the poison can't leak
+                # into a later tenant of the same slot.
+                self.quarantined += 1
+                events.append(self._finish_slot(
+                    s, req, FINISH_ERROR, token=None))
+                self._zero_slot(s)
+                continue
             req.out.append(tok)
             self._next_tok[s] = tok
             self.pos[s] += 1
             self.tokens_decoded += 1
             events.append(self._emit(s, req, tok))
         return events
+
+    def _zero_slot(self, s: int) -> None:
+        """Eagerly re-zero one slot's cache rows (quarantine cleanup)."""
+        self.cache = _put_slots(self.cache, _zero_slots_like(self.cache, 1),
+                                jnp.asarray([s], jnp.int32))
+        self.pos[s] = 0
+        self._next_tok[s] = 0
 
     def _emit(self, s: int, req: Request, tok: int) -> StreamEvent:
         """Record one emitted token; finishes the slot on stop/length."""
@@ -537,7 +816,7 @@ class ServeEngine:
                      token: Optional[int]) -> StreamEvent:
         req.done = True
         req.finish_reason = reason
-        req.t_done = time.perf_counter()
+        req.t_done = self._clock()
         self.active[s] = None
         self._slot_stop[s] = frozenset()
         self._temp[s] = 0.0
@@ -601,6 +880,18 @@ class ServeEngine:
             "scheduler": getattr(self.scheduler, "name",
                                  type(self.scheduler).__name__),
             "waiting": len(self.scheduler),
+            # --- resilience counters ---
+            "requests_rejected": self.requests_rejected,
+            "requests_shed": self.requests_shed,
+            "requests_invalid": self.requests_invalid,
+            "deadline_expired": self.deadline_expired,
+            "quarantined": self.quarantined,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "stalled_steps": self.stalled_steps,
+            "swapped": len(self._swapped),
+            "max_queue": self.max_queue,
+            "shed_policy": self.shed_policy,
         }
         if self.mesh is not None:
             from repro.serve import tp as tp_mod

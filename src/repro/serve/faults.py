@@ -1,0 +1,167 @@
+"""Deterministic fault injection for the serving resilience layer.
+
+Real serving failures are timing-dependent and hard to reproduce: a KV
+scale plane goes denormal-then-inf under a driver bug, a host GC pause
+stalls a decode step, a burst of traffic overruns the queue. This module
+makes each of those a SEEDED, REPLAYABLE event so the resilience policies
+in :class:`~repro.serve.engine.ServeEngine` (numeric quarantine, deadlines,
+backpressure, watchdog) are exercised by ordinary unit tests instead of
+luck — the same discipline ``ft/monitor.py`` applies to training failures.
+
+Pieces:
+
+* :class:`FaultClock` — a deterministic engine clock. Each read advances
+  by ``tick`` (so engine stamps stay strictly ordered without wall time),
+  and :meth:`FaultClock.advance` jumps it — how tests expire deadlines and
+  trip the watchdog without sleeping.
+* :class:`Fault` — one scheduled event, keyed by the engine's
+  ``decode_steps`` counter (the only monotonic notion of "when" the engine
+  shares with the plan):
+
+  - ``kind="kv_nan"``: overwrite a slot's KV **scale plane** entries with
+    ``value`` (inf/NaN). Scales are the right poison target — the int8
+    code planes cannot hold a NaN, and a degenerate scale is exactly how
+    real quantized-cache corruption presents (one bad fp16 multiplies a
+    whole vector). Only positions **below the slot's write head** are
+    poisoned, so detection never depends on how the attention mask treats
+    unwritten positions.
+  - ``kind="clock_skip"``: advance the plan's :class:`FaultClock` by
+    ``dt`` seconds (deadline/timeout expiry).
+  - ``kind="stall"``: same clock jump, framed as a stalled step — what the
+    engine's watchdog counts.
+
+* :class:`FaultPlan` — the ordered fault schedule plus the clock. Pass it
+  to ``ServeEngine(faults=...)``: the engine calls :meth:`before_decode`
+  at the top of every decode step and (when no explicit ``clock`` is
+  given) adopts ``plan.clock``, so one object fully scripts a scenario.
+* :func:`burst` — a seeded batch of uniform requests for overflowing
+  ``max_queue`` (the backpressure scenario).
+
+Everything is driven by explicit seeds and step indices — two runs of the
+same plan produce byte-identical engine behavior, which is what lets tests
+assert healthy neighbor streams are *bit-identical* to a fault-free run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultClock", "Fault", "FaultPlan", "inject_kv_nan", "burst"]
+
+
+class FaultClock:
+    """Deterministic time source for the engine's ``clock=`` knob.
+
+    Every read returns the current time then advances it by ``tick``
+    (default 1 ms) — strictly monotone, so lifecycle stamps (submit <
+    admit < first < done) keep their ordering invariants without any wall
+    time. :meth:`advance` jumps the clock by ``dt`` seconds; faults use it
+    to expire deadlines and stall steps on demand."""
+
+    def __init__(self, t0: float = 0.0, tick: float = 1e-3):
+        self.t = float(t0)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        now = self.t
+        self.t += self.tick
+        return now
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault. ``step`` compares against the engine's
+    ``decode_steps`` counter with ``>=`` so a fault scheduled for a step
+    the engine skipped (e.g. everything finished early) still fires at the
+    next opportunity rather than silently never."""
+
+    kind: str  # "kv_nan" | "clock_skip" | "stall"
+    step: int  # fires at the first decode step with decode_steps >= step
+    slot: int = 0            # kv_nan: which cache slot to poison
+    plane: str = "k_scale"   # kv_nan: which attn plane ("k_scale"/"v_scale"
+    #   for the quantized cache, "k"/"v" for an fp cache)
+    value: float = math.nan  # kv_nan: the poison (nan or +/-inf)
+    dt: float = 0.0          # clock_skip/stall: seconds to jump the clock
+
+    _KINDS = ("kv_nan", "clock_skip", "stall")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"options {self._KINDS}")
+
+
+class FaultPlan:
+    """An ordered, replayable fault schedule threaded through the engine.
+
+    The engine calls :meth:`before_decode` at the top of every decode
+    step; each :class:`Fault` fires exactly once (tracked by identity in
+    ``_fired``) at the first step whose ``decode_steps`` reaches it.
+    ``log`` records ``(decode_steps, kind)`` per firing so tests can
+    assert the scenario actually ran."""
+
+    def __init__(self, faults=(), *, seed: int = 0,
+                 clock: Optional[FaultClock] = None):
+        self.faults = tuple(faults)
+        self.seed = int(seed)
+        self.clock = clock if clock is not None else FaultClock()
+        self.log: list[tuple[int, str]] = []
+        self._fired: set[int] = set()  # indices into self.faults
+
+    def before_decode(self, engine) -> None:
+        for i, f in enumerate(self.faults):
+            if i in self._fired or engine.decode_steps < f.step:
+                continue
+            self._fired.add(i)
+            self.log.append((engine.decode_steps, f.kind))
+            if f.kind == "kv_nan":
+                inject_kv_nan(engine, slot=f.slot, plane=f.plane,
+                              value=f.value)
+            else:  # clock_skip / stall: both are a deterministic time jump
+                self.clock.advance(f.dt)
+
+
+def inject_kv_nan(engine, *, slot: int = 0, plane: str = "k_scale",
+                  value: float = math.nan) -> None:
+    """Poison one slot's KV ``plane`` with ``value`` at every position the
+    slot has WRITTEN (``< pos[slot]``) — the corruption class the numeric
+    quarantine exists for (a degenerate scale multiplies a whole rotated
+    vector into inf/NaN, which attention then spreads across the row's
+    logits). Raises for integer planes: int8 codes cannot represent a NaN,
+    which is exactly why scales are the realistic target."""
+    attn = engine.cache.get("attn")
+    if not attn or plane not in attn:
+        raise KeyError(
+            f"cache has no attn plane {plane!r}; have "
+            f"{sorted(attn) if attn else 'no attn cache'}")
+    leaf = attn[plane]
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        raise TypeError(
+            f"plane {plane!r} is {leaf.dtype}: integer code planes cannot "
+            f"hold {value!r}; poison a float scale plane instead")
+    # leaves are (L, B, H, P, ...): poison every layer/head of `slot` at
+    # the positions already written (never the unwritten tail, so the
+    # check can't silently pass or fail through mask conventions)
+    upto = max(int(engine.pos[slot]), 1)
+    attn[plane] = leaf.at[:, slot, :, :upto].set(value)
+
+
+def burst(n: int, vocab: int, *, seed: int = 0, plen: int = 8,
+          max_new: int = 8, rid0: int = 0, priority: int = 0,
+          **req_kw) -> list:
+    """A seeded batch of ``n`` uniform requests — the traffic spike that
+    overruns ``max_queue`` in the backpressure tests and ``--chaos``."""
+    from repro.serve.engine import Request  # here to avoid a module cycle
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+                    max_new=max_new, priority=priority, **req_kw)
+            for i in range(n)]

@@ -29,12 +29,25 @@ import numpy as np
 __all__ = [
     "SamplingParams", "StreamEvent",
     "FINISH_STOP", "FINISH_LENGTH", "FINISH_CANCELLED",
+    "FINISH_DEADLINE", "FINISH_ERROR", "FINISH_REJECTED",
+    "FINISH_REASONS",
 ]
 
 # Finish reasons (string constants, JSON-friendly)
 FINISH_STOP = "stop"            # emitted a stop/EOS token
 FINISH_LENGTH = "length"        # hit max_new or the slot's cache horizon
 FINISH_CANCELLED = "cancelled"  # evicted by ServeEngine.cancel()
+FINISH_DEADLINE = "deadline"    # deadline_ms / decode_timeout_ms expired
+FINISH_ERROR = "error"          # numeric quarantine or malformed request
+FINISH_REJECTED = "rejected"    # backpressure: queue full (reject/shed)
+
+# The closed vocabulary: EVERY request the engine ever sees terminates with
+# exactly one of these on its terminal StreamEvent — the resilience-layer
+# contract (no hang, no crash, no silent drop).
+FINISH_REASONS = frozenset({
+    FINISH_STOP, FINISH_LENGTH, FINISH_CANCELLED,
+    FINISH_DEADLINE, FINISH_ERROR, FINISH_REJECTED,
+})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,6 +17,21 @@ Built-ins:
 
 All built-ins break ties by arrival sequence, so scheduling is
 deterministic for a fixed submission order.
+
+Resilience hooks (optional — the engine probes with ``getattr``, so a
+custom Scheduler that implements only the core protocol still works):
+
+* ``shed(below=None)`` — drop and return the least-valuable waiting
+  request (lowest ``priority``, youngest on ties), for the engine's
+  ``shed_lowest`` backpressure policy. ``below`` sheds only a victim with
+  priority strictly below it — on a tie the incumbent wins and the
+  newcomer is rejected instead (no churn).
+* ``should_preempt(active)`` — given the live requests, return the rid of
+  one worth evicting mid-flight in favor of the waiting queue's head, or
+  None. :class:`PriorityScheduler` preempts the lowest-priority live
+  request when a strictly higher-priority request is waiting; the engine
+  swaps the victim's cache rows to host and resumes it later without
+  re-prefill.
 """
 from __future__ import annotations
 
@@ -52,7 +67,7 @@ class Scheduler(Protocol):
 
 
 class _QueueBase:
-    """Shared cancel/len bookkeeping over lazily-compacted queue entries.
+    """Shared cancel/shed/len bookkeeping over lazily-compacted entries.
 
     Cancellation is keyed by the ENTRY's sequence number, not the rid: a
     client may cancel a queued request and resubmit the same rid, and the
@@ -80,6 +95,11 @@ class _QueueBase:
         self._live -= 1
         return req
 
+    def _entries(self) -> Iterable:
+        """All queue entries as (seq, req) pairs, arrival-ordered.
+        May include lazily-cancelled entries — callers filter."""
+        raise NotImplementedError  # pragma: no cover - abstract
+
     def _cancel_common(self, rid: int, waiting: Iterable):
         """``waiting`` yields (seq, req) in arrival order; the OLDEST live
         entry for ``rid`` is cancelled."""
@@ -91,6 +111,34 @@ class _QueueBase:
                 req.finish_reason = FINISH_CANCELLED
                 return req
         return None
+
+    def cancel(self, rid: int):
+        return self._cancel_common(rid, self._entries())
+
+    def shed(self, below: Optional[int] = None):
+        """Drop and return the least-valuable waiting request: lowest
+        ``Request.priority``, youngest entry on ties (LIFO within a level —
+        seniority is preserved under sustained overload). ``below`` only
+        sheds a victim with priority STRICTLY below it, so a newcomer never
+        displaces an equal-priority incumbent. Returns None when nothing
+        sheddable. The entry is removed via the same lazy-cancellation
+        bookkeeping as :meth:`cancel`, but the request is NOT marked — the
+        engine stamps the terminal reason (``rejected``)."""
+        best = None
+        for seq, req in self._entries():
+            if seq in self._cancelled:
+                continue
+            key = (int(getattr(req, "priority", 0)), -seq)
+            if best is None or key < best[0]:
+                best = (key, seq, req)
+        if best is None:
+            return None
+        if below is not None and best[0][0] >= below:
+            return None
+        _, seq, req = best
+        self._cancelled.add(seq)
+        self._live -= 1
+        return req
 
 
 class FIFOScheduler(_QueueBase):
@@ -111,8 +159,8 @@ class FIFOScheduler(_QueueBase):
                 out.append(req)
         return out
 
-    def cancel(self, rid: int):
-        return self._cancel_common(rid, self._q)
+    def _entries(self):
+        return iter(self._q)
 
 
 class _HeapScheduler(_QueueBase):
@@ -138,9 +186,16 @@ class _HeapScheduler(_QueueBase):
                 out.append(req)
         return out
 
-    def cancel(self, rid: int):
-        return self._cancel_common(
-            rid, sorted((e[1], e[2]) for e in self._heap))
+    def _entries(self):
+        return sorted((e[1], e[2]) for e in self._heap)
+
+    def _peek(self):
+        """The next request :meth:`pop` would return, without removing it
+        (lazily compacts cancelled entries off the heap top)."""
+        while self._heap and self._heap[0][1] in self._cancelled:
+            _, seq, _ = heapq.heappop(self._heap)
+            self._cancelled.discard(seq)
+        return self._heap[0][2] if self._heap else None
 
 
 class PriorityScheduler(_HeapScheduler):
@@ -150,6 +205,21 @@ class PriorityScheduler(_HeapScheduler):
 
     def _key(self, req):
         return -int(getattr(req, "priority", 0))
+
+    def should_preempt(self, active: list) -> Optional[int]:
+        """Evict a live request when a STRICTLY higher-priority request is
+        waiting. The victim is the lowest-priority live request, youngest
+        admission on ties (least progress lost). Ties between waiting and
+        live go to the live request — no same-priority churn."""
+        head = self._peek()
+        if head is None or not active:
+            return None
+        best = int(getattr(head, "priority", 0))
+        victim = min(active, key=lambda r: (int(getattr(r, "priority", 0)),
+                                            -(r.t_admit or 0.0)))
+        if int(getattr(victim, "priority", 0)) < best:
+            return victim.rid
+        return None
 
 
 class ShortestPromptFirstScheduler(_HeapScheduler):

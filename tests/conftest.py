@@ -1,3 +1,5 @@
+import signal
+
 import numpy as np
 import pytest
 
@@ -5,3 +7,31 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# --- @pytest.mark.timeout(seconds) ------------------------------------------
+# A hard per-test wall clock via SIGALRM (no pytest-timeout dependency).
+# The fault-injection suite uses it so a resilience regression that HANGS
+# the engine (the exact failure class the suite exists to catch) fails the
+# test instead of wedging CI. Unix-only; silently inert where SIGALRM is
+# unavailable.
+
+def pytest_runtest_setup(item):
+    marker = item.get_closest_marker("timeout")
+    if marker is None or not hasattr(signal, "SIGALRM"):
+        return
+    seconds = int(marker.args[0]) if marker.args else 60
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded its {seconds}s timeout marker (hung?)")
+
+    item._timeout_prev = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(seconds)
+
+
+def pytest_runtest_teardown(item, nextitem):
+    if hasattr(item, "_timeout_prev"):
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, item._timeout_prev)
+        del item._timeout_prev

@@ -222,12 +222,18 @@ def test_ssm_chunked_prefill_matches_exact(arch):
 
 
 def test_engine_rejects_empty_prompt():
+    # an empty prompt must NOT raise mid-admission (that used to kill the
+    # whole wave): it is rejected alone with a terminal "error" while the
+    # valid neighbor admits and decodes normally
     cfg = reduced(get_config("smollm-135m"))
     params = lm.init_params(KEY, cfg)
     eng = ServeEngine(params, cfg, slots=2, max_len=32, rt=RT)
-    with pytest.raises(ValueError, match="empty prompt"):
-        eng.admit([Request(rid=0, prompt=np.arange(4), max_new=2),
-                   Request(rid=1, prompt=np.array([], np.int32), max_new=2)])
+    good = Request(rid=0, prompt=np.arange(4), max_new=2)
+    bad = Request(rid=1, prompt=np.array([], np.int32), max_new=2)
+    assert eng.admit([good, bad]) == 1
+    assert bad.done and bad.finish_reason == "error" and bad.out == []
+    eng.run([])
+    assert good.done and len(good.out) == 2
 
 
 def test_bench_doc_schema_validation():

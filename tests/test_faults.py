@@ -1,0 +1,405 @@
+"""Failure-hardened serving: every failure mode must end in a terminal
+StreamEvent with the right finish_reason — never a hang, a crash, or a
+corrupted neighbor stream — driven by the seeded fault-injection harness
+(serve/faults.py). Each test carries a hard ``timeout`` marker: the
+regression class this suite guards against is the engine WEDGING, and a
+hung test must fail, not stall CI."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import lm
+from repro.models.layers import Runtime
+from repro.serve.engine import Request, SamplingParams, ServeEngine
+from repro.serve.faults import Fault, FaultClock, FaultPlan, burst, \
+    inject_kv_nan
+from repro.serve.sampling import (
+    FINISH_DEADLINE, FINISH_ERROR, FINISH_LENGTH, FINISH_REASONS,
+    FINISH_REJECTED,
+)
+
+KEY = jax.random.PRNGKey(0)
+RT = Runtime(compute_dtype=jnp.float32, capacity_factor=8.0)
+RTQ = Runtime(compute_dtype=jnp.float32, kv_quant=True, capacity_factor=8.0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("smollm-135m"))
+    return cfg, lm.init_params(KEY, cfg)
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("rt", RT)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _reqs(cfg, n=2, max_new=8, **kw):
+    return [Request(rid=i, prompt=(np.arange(4 + i) % cfg.vocab_size
+                                   ).astype(np.int32),
+                    max_new=max_new, **kw) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Numeric quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("value", [math.nan, math.inf])
+def test_kv_scale_poison_quarantines_slot_healthy_stream_bit_identical(
+        model, value):
+    """Poisoning one slot's KV scale plane mid-decode must (a) finish THAT
+    stream with finish_reason="error", (b) leave the co-resident stream
+    bit-identical to a fault-free run, (c) keep 1 host sync per step."""
+    cfg, _ = model
+    clean = _reqs(cfg)
+    _engine(model, rt=RTQ).run(clean)
+
+    plan = FaultPlan([Fault("kv_nan", step=2, slot=0, plane="k_scale",
+                            value=value)])
+    eng = _engine(model, rt=RTQ, faults=plan)
+    faulted = _reqs(cfg)
+    events = list(eng.generate(faulted))
+
+    poisoned, healthy = faulted
+    assert poisoned.finish_reason == FINISH_ERROR
+    assert 1 <= len(poisoned.out) < poisoned.max_new
+    assert healthy.finish_reason == FINISH_LENGTH
+    assert healthy.out == clean[1].out  # bit-identical neighbor
+    assert eng.quarantined == 1
+    assert plan.log and plan.log[0][1] == "kv_nan"
+    # quarantine detection rides the step's one token transfer
+    assert eng.host_syncs == 1 + eng.decode_steps
+    term = [e for e in events if e.finished and e.rid == poisoned.rid]
+    assert len(term) == 1 and term[0].token is None
+    assert term[0].stats["tokens"] == len(poisoned.out)
+    # the poisoned slot's rows were re-zeroed: a NEW tenant of the same
+    # slot decodes exactly as in a fresh engine
+    again = [Request(rid=10, prompt=np.arange(4, dtype=np.int32), max_new=4)]
+    list(eng.generate(again))
+    ref = [Request(rid=10, prompt=np.arange(4, dtype=np.int32), max_new=4)]
+    _engine(model, rt=RTQ).run(ref)
+    assert again[0].out == ref[0].out
+
+
+@pytest.mark.timeout(120)
+def test_fp_cache_poison_quarantines_too(model):
+    """The quarantine is cache-layout agnostic: an fp KV cache poisoned
+    through its raw "k" plane trips the same finiteness check."""
+    cfg, _ = model
+    plan = FaultPlan([Fault("kv_nan", step=1, slot=1, plane="k")])
+    eng = _engine(model, faults=plan)
+    reqs = _reqs(cfg)
+    list(eng.generate(reqs))
+    assert reqs[1].finish_reason == FINISH_ERROR
+    assert reqs[0].finish_reason == FINISH_LENGTH
+    assert eng.quarantined == 1
+
+
+@pytest.mark.timeout(60)
+def test_inject_kv_nan_rejects_int_planes_and_unknown_planes(model):
+    eng = _engine(model, rt=RTQ)
+    eng.run(_reqs(cfg=model[0], n=1, max_new=2))
+    with pytest.raises(TypeError, match="int"):
+        inject_kv_nan(eng, plane="k")  # int8 codes can't hold a NaN
+    with pytest.raises(KeyError, match="no attn plane"):
+        inject_kv_nan(eng, plane="bogus")
+
+
+@pytest.mark.timeout(120)
+def test_quarantine_on_host_sampling_path(model):
+    """sample_on_host=True fetches logits, not tokens — the host-side
+    finiteness check must quarantine there too."""
+    cfg, _ = model
+    plan = FaultPlan([Fault("kv_nan", step=1, slot=0)])
+    eng = _engine(model, rt=RTQ, sample_on_host=True, faults=plan)
+    reqs = _reqs(cfg)
+    list(eng.generate(reqs))
+    assert reqs[0].finish_reason == FINISH_ERROR
+    assert reqs[1].finish_reason == FINISH_LENGTH
+    assert eng.quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# Deadlines / timeouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_live_deadline_expires_midstream(model):
+    cfg, _ = model
+    clk = FaultClock()
+    eng = _engine(model, slots=1, clock=clk)
+    req = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=50,
+                  deadline_ms=100.0)
+    it = eng.generate([req])
+    for _ in range(3):
+        next(it)
+    clk.advance(1.0)  # blow way past the 100ms budget
+    tail = list(it)
+    assert req.finish_reason == FINISH_DEADLINE
+    assert 1 <= len(req.out) < 50
+    assert eng.deadline_expired == 1
+    assert tail[-1].finished and tail[-1].token is None
+
+
+@pytest.mark.timeout(120)
+def test_queued_deadline_sheds_at_pop_no_prefill(model):
+    """A request whose deadline passed while WAITING is shed at pop time —
+    terminal "deadline" event, never admitted (no wasted prefill)."""
+    cfg, _ = model
+    plan = FaultPlan([Fault("clock_skip", step=2, dt=1.0)])
+    eng = _engine(model, slots=1, faults=plan)
+    a = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=6)
+    b = Request(rid=1, prompt=np.arange(5, dtype=np.int32), max_new=6,
+                deadline_ms=50.0)
+    list(eng.generate([a, b]))
+    assert a.finish_reason == FINISH_LENGTH
+    assert b.finish_reason == FINISH_DEADLINE
+    assert b.t_admit is None and b.out == []  # never prefilled
+    assert eng.deadline_expired == 1
+
+
+@pytest.mark.timeout(120)
+def test_decode_timeout_expires_after_first_token(model):
+    cfg, _ = model
+    plan = FaultPlan([Fault("clock_skip", step=2, dt=1.0)])
+    eng = _engine(model, slots=1, faults=plan)
+    req = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=50,
+                  decode_timeout_ms=50.0)
+    list(eng.generate([req]))
+    assert req.finish_reason == FINISH_DEADLINE
+    assert req.t_first is not None and len(req.out) >= 1
+    assert eng.deadline_expired == 1
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_max_queue_reject_policy(model):
+    cfg, _ = model
+    eng = _engine(model, slots=1, max_queue=2)
+    reqs = burst(5, cfg.vocab_size, max_new=3)
+    accepted = [eng.submit_request(r) for r in reqs]
+    assert accepted == [True, True, False, False, False]
+    assert eng.requests_rejected == 3
+    events = list(eng.generate())
+    reasons = {r.rid: r.finish_reason for r in reqs}
+    assert [reasons[i] for i in range(5)] == [
+        FINISH_LENGTH, FINISH_LENGTH,
+        FINISH_REJECTED, FINISH_REJECTED, FINISH_REJECTED]
+    # rejected requests still got their terminal event through the stream
+    term = {e.rid for e in events if e.finished}
+    assert term == {0, 1, 2, 3, 4}
+
+
+@pytest.mark.timeout(120)
+def test_shed_lowest_evicts_waiting_victim_not_equal_priority(model):
+    cfg, _ = model
+    eng = _engine(model, slots=1, max_queue=1, shed_policy="shed_lowest",
+                  scheduler="priority")
+    low = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=3,
+                  priority=0)
+    assert eng.submit_request(low)
+    high = Request(rid=1, prompt=np.arange(4, dtype=np.int32), max_new=3,
+                   priority=5)
+    assert eng.submit_request(high)  # displaces the waiting low-priority
+    assert low.finish_reason == FINISH_REJECTED
+    assert eng.requests_shed == 1 and eng.requests_rejected == 0
+    # an EQUAL-priority newcomer never displaces the incumbent (no churn)
+    peer = Request(rid=2, prompt=np.arange(4, dtype=np.int32), max_new=3,
+                   priority=5)
+    assert not eng.submit_request(peer)
+    assert peer.finish_reason == FINISH_REJECTED
+    assert eng.requests_rejected == 1
+    list(eng.generate())
+    assert high.finish_reason == FINISH_LENGTH
+
+
+@pytest.mark.timeout(60)
+def test_engine_validates_backpressure_knobs(model):
+    with pytest.raises(ValueError, match="max_queue"):
+        _engine(model, max_queue=0)
+    with pytest.raises(ValueError, match="shed_policy"):
+        _engine(model, shed_policy="drop_newest")
+
+
+# ---------------------------------------------------------------------------
+# Malformed requests (empty prompt)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_empty_prompt_rejected_alone_not_whole_wave(model):
+    """Regression: an empty prompt used to raise mid-_admit_group AFTER
+    its wave peers were stamped, aborting the wave. It must be rejected
+    ALONE with a terminal "error" event, peers unaffected."""
+    cfg, _ = model
+    eng = _engine(model)
+    good = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=3)
+    bad = Request(rid=1, prompt=np.zeros(0, dtype=np.int32), max_new=3)
+    assert eng.admit([good, bad]) == 1
+    assert bad.finish_reason == FINISH_ERROR and bad.done
+    assert eng.active[0] is good and eng.requests_invalid == 1
+    list(eng.generate())
+    assert good.finish_reason == FINISH_LENGTH
+
+
+@pytest.mark.timeout(120)
+def test_empty_prompt_screened_at_submit(model):
+    cfg, _ = model
+    eng = _engine(model)
+    bad = Request(rid=0, prompt=np.zeros(0, dtype=np.int32), max_new=3)
+    assert not eng.submit_request(bad)
+    assert bad.finish_reason == FINISH_ERROR
+    assert len(eng.scheduler) == 0 and eng.requests_invalid == 1
+    events = list(eng.generate())
+    assert len(events) == 1 and events[0].finished
+    assert events[0].finish_reason == FINISH_ERROR
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_watchdog_counts_stalled_steps(model):
+    cfg, _ = model
+    plan = FaultPlan([Fault("stall", step=2, dt=2.0)])
+    eng = _engine(model, slots=1, watchdog_timeout_s=0.5, faults=plan)
+    req = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=6)
+    list(eng.generate([req]))
+    assert req.finish_reason == FINISH_LENGTH  # stall is slow, not fatal
+    assert eng.stalled_steps >= 1
+    assert eng.stats()["stalled_steps"] == eng.stalled_steps
+
+
+# ---------------------------------------------------------------------------
+# Preemption + swap/resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_manual_preempt_resume_bit_identical_no_reprefill(model):
+    cfg, _ = model
+    clean = _reqs(cfg, max_new=8)
+    _engine(model).run(clean)
+
+    eng = _engine(model)
+    prefills = []
+    inner = eng._jit_prefill
+    eng._jit_prefill = lambda *a, **k: (prefills.append(1) or inner(*a, **k))
+    reqs = _reqs(cfg, max_new=8)
+    it = eng.generate(reqs)
+    for _ in range(4):
+        next(it)
+    assert eng.preempt(0)
+    assert eng.stats()["swapped"] == 1
+    list(it)
+    assert [r.out for r in reqs] == [r.out for r in clean]  # bit-identical
+    assert reqs[0].preemptions == 1
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert len(prefills) == 1  # the initial wave only: resume re-prefills NOTHING
+    assert eng.stats()["swapped"] == 0
+
+
+@pytest.mark.timeout(120)
+def test_priority_scheduler_auto_preempts_for_higher_priority(model):
+    cfg, _ = model
+    alone = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=10)
+    _engine(model, slots=1).run([alone])
+
+    eng = _engine(model, slots=1, scheduler="priority")
+    low = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=10,
+                  priority=0)
+    it = eng.generate([low])
+    for _ in range(2):
+        next(it)
+    high = Request(rid=1, prompt=np.arange(5, dtype=np.int32), max_new=4,
+                   priority=5)
+    eng.submit_request(high)
+    events = list(it)
+    assert low.finish_reason == FINISH_LENGTH
+    assert high.finish_reason == FINISH_LENGTH
+    assert low.preemptions == 1 and eng.resumes == 1
+    # the high-priority request ran TO COMPLETION before low resumed
+    order = [e.rid for e in events if e.finished]
+    assert order == [1, 0]
+    # the preempted stream is bit-identical to running it alone
+    assert low.out == alone.out
+    assert low.stats()["preemptions"] == 1
+
+
+@pytest.mark.timeout(120)
+def test_preempt_unknown_rid_and_cancel_swapped(model):
+    cfg, _ = model
+    eng = _engine(model)
+    assert not eng.preempt(99)
+    reqs = _reqs(cfg, max_new=8)
+    it = eng.generate(reqs)
+    next(it)
+    assert eng.preempt(1)
+    assert eng.cancel(1)  # cancel while swapped out: swap state dropped
+    assert eng.stats()["swapped"] == 0
+    list(it)
+    assert reqs[0].finish_reason == FINISH_LENGTH
+    assert reqs[1].finish_reason == "cancelled"
+
+
+# ---------------------------------------------------------------------------
+# Determinism + chaos drain
+# ---------------------------------------------------------------------------
+
+def _chaos_run(model, seed):
+    cfg, _ = model
+    plan = FaultPlan([
+        Fault("kv_nan", step=3, slot=0),
+        Fault("clock_skip", step=5, dt=1.0),
+        Fault("stall", step=5, dt=2.0),  # same step: compound failure
+    ], seed=seed)
+    eng = _engine(model, rt=RTQ, slots=2, max_queue=3,
+                  shed_policy="shed_lowest", scheduler="priority",
+                  watchdog_timeout_s=0.5, faults=plan)
+    reqs = burst(8, cfg.vocab_size, seed=seed, max_new=6)
+    for i, r in enumerate(reqs):
+        r.priority = i % 3
+        if i % 2:
+            r.deadline_ms = 400.0
+    for r in reqs:
+        eng.submit_request(r)
+    events = list(eng.generate())
+    return eng, reqs, events, plan
+
+
+@pytest.mark.timeout(240)
+def test_chaos_everything_terminates_with_closed_vocabulary(model):
+    """The resilience contract end-to-end: under a combined fault plan,
+    EVERY submitted request reaches a terminal event with a finish_reason
+    from the closed vocabulary, and the engine drains completely."""
+    eng, reqs, events, plan = _chaos_run(model, seed=0)
+    assert all(r.done for r in reqs)
+    assert all(r.finish_reason in FINISH_REASONS for r in reqs)
+    term = [e for e in events if e.finished]
+    assert sorted(e.rid for e in term) == sorted(r.rid for r in reqs)
+    assert all(e.finish_reason in FINISH_REASONS for e in term)
+    # drained: nothing live, queued, swapped, or pending
+    assert all(r is None for r in eng.active)
+    assert len(eng.scheduler) == 0 and eng.stats()["swapped"] == 0
+    assert len(plan.log) == 3
+
+
+@pytest.mark.timeout(240)
+def test_chaos_is_deterministic_under_a_seed(model):
+    a = _chaos_run(model, seed=7)
+    b = _chaos_run(model, seed=7)
+    assert [r.out for r in a[1]] == [r.out for r in b[1]]
+    assert [r.finish_reason for r in a[1]] == [r.finish_reason for r in b[1]]
+    assert a[3].log == b[3].log
+    assert [(e.rid, e.token, e.index, e.finished) for e in a[2]] == \
+        [(e.rid, e.token, e.index, e.finished) for e in b[2]]

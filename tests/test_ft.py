@@ -32,6 +32,34 @@ def test_failure_detection_and_exclusion():
     assert mon.alive() == [0, 1]
 
 
+def test_beat_unknown_host_auto_registers():
+    """Regression: beat() from a host the monitor never saw (elastic
+    rejoin, or a dynamic member set) raised KeyError. It must auto-register
+    the host as of that beat instead of crashing."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(2, timeout_s=30, clock=clk)
+    clk.t = 5
+    mon.beat(7, 1)  # would have raised
+    assert 7 in mon.hosts and mon.num_hosts == 3
+    assert 7 in mon.alive()
+    clk.t = 10
+    mon.beat(7, 2)
+    assert len(mon.hosts[7].step_times) == 1  # latency tracking works
+    clk.t = 50
+    assert 7 in mon.failed()  # and liveness tracking too
+
+
+def test_beat_explicitly_excluded_host_stays_excluded():
+    """Only the never-seen path re-admits: a host the driver deliberately
+    left behind keeps beating but must not silently rejoin."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(3, timeout_s=30, clock=clk)
+    mon.exclude([2])
+    clk.t = 5
+    mon.beat(2, 1)
+    assert 2 in mon.excluded and 2 not in mon.alive()
+
+
 def test_plan_remesh_preserves_tp():
     plan = plan_remesh(240, model=16)
     assert plan.model == 16 and plan.data == 15 and plan.devices == 240

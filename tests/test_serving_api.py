@@ -336,6 +336,54 @@ def test_scheduler_cancel_then_resubmit_same_rid():
     assert len(sched) == 0
 
 
+@pytest.mark.parametrize("sched_cls", [
+    FIFOScheduler, PriorityScheduler, ShortestPromptFirstScheduler])
+def test_scheduler_cancel_hits_oldest_live_entry(sched_cls):
+    """With duplicate rids queued, cancel() removes the OLDEST live entry
+    — on every scheduler, including the heaps (whose _entries() view must
+    be arrival-ordered, not heap-ordered)."""
+    sched = sched_cls()
+    first = Request(rid=3, prompt=np.arange(2), max_new=2, priority=1)
+    second = Request(rid=3, prompt=np.arange(5), max_new=2, priority=9)
+    sched.add(first)
+    sched.add(second)
+    assert sched.cancel(3) is first  # oldest, NOT best-keyed
+    assert sched.cancel(3) is second
+    assert sched.cancel(3) is None
+    assert len(sched) == 0 and sched.pop(5) == []
+
+
+@pytest.mark.parametrize("sched_cls", [
+    FIFOScheduler, PriorityScheduler, ShortestPromptFirstScheduler])
+def test_scheduler_cancel_resubmit_roundtrip_all_schedulers(sched_cls):
+    """cancel -> resubmit same rid -> the FRESH entry pops (entry-keyed
+    lazy cancellation), under every built-in scheduler."""
+    sched = sched_cls()
+    stale = Request(rid=7, prompt=np.arange(4), max_new=2, priority=0)
+    sched.add(stale)
+    assert sched.cancel(7) is stale
+    fresh = Request(rid=7, prompt=np.arange(4), max_new=2, priority=5)
+    sched.add(fresh)
+    assert sched.pop(5) == [fresh] and not fresh.done
+    assert len(sched) == 0
+
+
+def test_scheduler_shed_lowest_priority_youngest_on_ties():
+    sched = PriorityScheduler()
+    reqs = [Request(rid=i, prompt=np.arange(3), max_new=2, priority=p)
+            for i, p in enumerate([1, 0, 0, 2])]
+    for r in reqs:
+        sched.add(r)
+    # lowest priority wins; among the two p=0 entries the YOUNGER goes
+    assert sched.shed() is reqs[2]
+    assert sched.shed() is reqs[1]
+    # below= only sheds STRICTLY lower priorities
+    assert sched.shed(below=1) is None
+    assert sched.shed(below=2) is reqs[0]
+    assert len(sched) == 1
+    assert sched.pop(5) == [reqs[3]]
+
+
 def test_scheduler_waiting_cancel_bookkeeping(model):
     cfg, _ = model
     sched = PriorityScheduler()

@@ -1,0 +1,125 @@
+"""Serving-SLO regression gate: the helper that fails CI when a fresh
+bench run's scheduler lifecycle numbers (TTFT / queue wait / tok_s)
+regress beyond tolerance against the committed BENCH_serve.json."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import (
+    BENCH_SCHEMA, assert_no_slo_regression, slo_regressions,
+)
+from benchmarks.serve_bench import _run_scheduler
+from repro.configs.base import get_config, reduced
+from repro.models import lm
+from repro.models.layers import Runtime
+
+
+def _rec(name, **metrics):
+    return {"name": name, "metrics": metrics}
+
+
+def _sched(name, ttft=100.0, wait=50.0, tok_s=1000.0):
+    return _rec(name, policy=name.split("_")[-1], ttft_ms=ttft,
+                queue_wait_ms=wait, tok_s=tok_s, tokens=192)
+
+
+COMMITTED = [_sched("serve/sched_fifo"),
+             _sched("serve/sched_priority", ttft=120.0),
+             _rec("serve/cache_donation", donated=True, bytes_moved=0,
+                  decode_steps=50)]
+
+
+def test_gate_passes_within_tolerance():
+    fresh = [_sched("serve/sched_fifo", ttft=150.0, wait=80.0, tok_s=700.0)]
+    assert slo_regressions(COMMITTED, fresh, max_ratio=2.0) == []
+
+
+def test_gate_flags_each_slo_metric_with_its_sense():
+    # ttft/queue_wait regress UP, tok_s regresses DOWN — and an
+    # IMPROVEMENT in any of them never trips the gate
+    fresh = [_sched("serve/sched_fifo", ttft=500.0, wait=10.0, tok_s=5000.0)]
+    probs = slo_regressions(COMMITTED, fresh, max_ratio=2.0)
+    assert len(probs) == 1 and "ttft_ms" in probs[0] \
+        and "serve/sched_fifo" in probs[0]
+    fresh = [_sched("serve/sched_fifo", tok_s=100.0)]
+    probs = slo_regressions(COMMITTED, fresh, max_ratio=2.0)
+    assert len(probs) == 1 and "tok_s" in probs[0]
+    fresh = [_sched("serve/sched_fifo", wait=500.0)]
+    assert any("queue_wait_ms" in p
+               for p in slo_regressions(COMMITTED, fresh, max_ratio=2.0))
+
+
+def test_gate_only_compares_sched_records_and_shared_names():
+    # non-sched records and names absent from one side are ignored...
+    fresh = [_sched("serve/sched_sjf", ttft=9e9),
+             _rec("serve/cache_donation", donated=False, bytes_moved=1e12,
+                  decode_steps=1)]
+    assert slo_regressions(COMMITTED, fresh, max_ratio=2.0) == []
+    # ...unless require_all, where a DROPPED committed record is itself
+    # a regression (a silently deleted policy must not pass the gate)
+    probs = slo_regressions(COMMITTED, fresh, max_ratio=2.0,
+                            require_all=True)
+    assert sorted("fifo" in p or "priority" in p for p in probs) == [
+        True, True]
+
+
+def test_gate_skips_non_numeric_and_missing_metrics():
+    fresh = [_rec("serve/sched_fifo", policy="fifo", ttft_ms="broken",
+                  queue_wait_ms=None, tokens=192)]
+    assert slo_regressions(COMMITTED, fresh, max_ratio=2.0) == []
+
+
+def _committed_doc(tmp_path, records):
+    doc = {"schema": BENCH_SCHEMA, "suite": "serve", "smoke": False,
+           "device": "cpu", "records": records}
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(doc))
+    return p
+
+
+def test_assert_no_slo_regression_env_tolerance(tmp_path, monkeypatch):
+    p = _committed_doc(tmp_path, COMMITTED)
+    bad = [_sched("serve/sched_fifo", ttft=500.0)]
+    with pytest.raises(AssertionError, match="ttft_ms"):
+        assert_no_slo_regression(p, bad, max_ratio=2.0)
+    # env knob loosens the gate (known machine mismatch escape hatch)
+    monkeypatch.setenv("SERVE_SLO_MAX_RATIO", "10.0")
+    assert_no_slo_regression(p, bad)  # 5x worse < 10x tolerance
+
+
+def test_assert_no_slo_regression_refuses_smoke_committed(tmp_path):
+    doc = {"schema": BENCH_SCHEMA, "suite": "serve", "smoke": True,
+           "device": "cpu", "records": COMMITTED}
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="smoke"):
+        assert_no_slo_regression(p, COMMITTED, max_ratio=2.0)
+
+
+@pytest.mark.timeout(300)
+def test_live_mini_run_aligns_with_committed_trajectory():
+    """End-to-end plumbing check: a tiny fifo run produces a record whose
+    name and metric keys line up with the committed trajectory, and the
+    gate runs over the REAL file. The tolerance is huge — this guards the
+    gate's wiring (renamed metrics, dropped records), not wall-clock."""
+    from benchmarks.common import load_and_validate, repo_root
+    committed = repo_root() / "BENCH_serve.json"
+    if not committed.exists():
+        pytest.skip("no committed serve trajectory")
+    cfg = reduced(get_config("smollm-135m"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    r = _run_scheduler(params, cfg, policy="fifo", slots=2, n_requests=4,
+                       max_new=4, max_len=48)
+    fresh = [{"name": "serve/sched_fifo",
+              "metrics": {"policy": "fifo", "ttft_ms": r["ttft_ms"],
+                          "queue_wait_ms": r["queue_wait_ms"],
+                          "tok_s": r["tok_s"], "tokens": r["tokens"]}}]
+    doc = load_and_validate(committed, forbid_smoke=True)
+    names = {rec["name"] for rec in doc["records"]}
+    assert "serve/sched_fifo" in names  # the record the gate anchors on
+    # a mini CPU run differs from the committed full run by workload size
+    # and machine — gate with a plumbing-only tolerance
+    assert_no_slo_regression(committed, fresh, max_ratio=1e6)

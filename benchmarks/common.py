@@ -35,6 +35,8 @@ BENCH_SCHEMA = "repro.bench.v1"
 # serving records (scheduler TTFT/queue-wait, cache-donation no-copy)
 # through the same schema gate as everything else.
 REQUIRED_METRICS_BY_PREFIX = {
+    "kernel/int8_": ("dequant_us", "speedup_vs_dequant",
+                     "bytes_streamed_total_mb", "bytes_ratio_vs_dequant"),
     "serve/sched_": ("policy", "ttft_ms", "queue_wait_ms", "tok_s", "tokens"),
     "serve/cache_donation": ("donated", "bytes_moved", "decode_steps"),
     "serve/tp": ("tok_s", "cache_bytes_per_device"),

@@ -59,6 +59,44 @@ def streamed_mb(n, k) -> float:
     return (blocks * (PACKED_BYTES + SCALE_ZP_BYTES)) / 1e6
 
 
+def add_int8_records(suite: BenchSuite, *, smoke: bool = False) -> None:
+    """W3A8 integer-path records (``kernel/int8_*``): the rotation-domain
+    int8 contraction vs the float dequant-then-matmul baseline, measured in
+    the SAME regime (both jitted XLA on this host — the ref int8 path
+    carries the integer MACs in f32, bit-identical to the kernels' int32
+    accumulators, see ``TernaryFormat.contract_int8``). Bytes accounting:
+    packed ternary weights + scale/zp planes + 1-byte int8 activations,
+    against the dequant baseline's full bf16 weight + f32 activation
+    stream."""
+    rng = np.random.default_rng(0)
+    shapes = ([("matvec", 8, 512, 512)] if smoke else
+              [("matvec", 8, 2048, 2048),      # decode-width (MMVQ class)
+               ("tiled", 256, 2048, 2048),     # batch decode / small prefill
+               ("prefill", 512, 2048, 2048)])  # chunked-prefill width
+    iters = 1 if smoke else 2
+    for label, m, n, k in shapes:
+        w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        qt = formats.quantize(w, "itq3_s")
+        dequant = jax.jit(functools.partial(qlinear.qmatmul, mode="dequant",
+                                            compute_dtype=jnp.float32))
+        us_dq = timeit(dequant, x, qt, iters=iters)
+        int8 = jax.jit(functools.partial(qlinear.qmatmul, mode="activations",
+                                         backend="ref", act_quant=True,
+                                         compute_dtype=jnp.float32))
+        us_i8 = timeit(int8, x, qt, iters=iters)
+        int8_mb = streamed_mb(n, k) + (m * k * 1 + m * 4 + m * n * 4) / 1e6
+        dq_mb = (2 * k * n + 4 * m * k + 4 * m * n) / 1e6
+        suite.add(f"kernel/int8_{label}_m{m}", us_i8,
+                  dequant_us=round(us_dq, 2),
+                  speedup_vs_dequant=round(us_dq / us_i8, 2),
+                  bytes_streamed_total_mb=round(int8_mb, 2),
+                  dequant_bytes_streamed_mb=round(dq_mb, 2),
+                  bytes_ratio_vs_dequant=round(int8_mb / dq_mb, 3),
+                  act_bytes_per_elt=1,
+                  note="jit XLA walltime for both paths (host-comparative)")
+
+
 def main(smoke: bool = False) -> None:
     suite = BenchSuite("kernels", smoke=smoke)
     rng = np.random.default_rng(0)
@@ -107,6 +145,7 @@ def main(smoke: bool = False) -> None:
                 suite.add(f"kernel/tiled_m{m}_hoist_{hoist}", us_h,
                           tile_expansions=(n // tn) * (k // BLOCK)
                           * (1 if hoist else -(-m // 128)))
+    add_int8_records(suite, smoke=smoke)
     from benchmarks.attn_bench import add_kernel_records, add_prefill_records
     add_kernel_records(suite, smoke=smoke)
     add_prefill_records(suite, smoke=smoke)

@@ -1,0 +1,78 @@
+"""Rotation-domain activation codec — the W3A8 online half.
+
+The weights are stored as ternary codes of the *rotated* tensor:
+``W_hat = H (d (q - z))`` per 256-block. H is involutory and symmetric, so
+each block contributes
+
+    x_b . H (d (q - z))_b  =  (H x_b) . (d (q - z))_b,
+
+i.e. rotating the *activation* block once replaces the per-tile inverse
+FWHT on the weight side entirely (the same isometry the attention kernels
+exploit). This module quantizes ``H x`` to int8 with one absmax scale per
+row (per token), so the contraction against the ternary codes can run as
+pure int8 x int8 -> int32 MACs:
+
+    y[m, n] = s_m * sum_b d_{n,b} * ( xq[m, b] . wint[n, b] )
+
+where ``wint = q - z`` is *exactly* representable in int8 because the
+stored zero-point is integer-valued (clipped round, |z| <= 1 ternary / 2
+fivelevel) — there is no separate zero-point correction term on the
+integer path. The per-block weight scale ``d`` cannot be folded into the
+row scale (it varies per (n, b)), so it is applied to the int32 partial of
+each reduction block; ``s_m`` is applied once at flush.
+
+Scale safety follows the kv_quant fp16 lessons even though the activation
+scale stays f32: all-zero (or padding-only) rows get scale 1.0 and all-zero
+codes instead of a 0/0 NaN, and the dequantization error is bounded by
+``amax / (2*127)`` per element regardless of magnitude.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fwht import blocked_fwht
+
+__all__ = ["ACT_QMAX", "act_encode", "act_decode"]
+
+ACT_QMAX = 127.0  # symmetric int8 grid
+
+
+def act_encode(
+    x: jax.Array,
+    *,
+    block: int = 256,
+    rotate: bool = True,
+    dsign: jax.Array | None = None,
+    fwht_fn=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Rotate + int8-quantize activations for the integer compute path.
+
+    ``x`` is ``(..., K_pad)`` with K_pad a multiple of ``block`` (callers
+    pad first — same contract as the kernels). Returns ``(codes, scale)``:
+    int8 codes of the same shape and one f32 absmax scale per row
+    ``(..., 1)``. ``dsign`` (quip3) is applied before the rotation, mirroring
+    the weight-side ``W_hat = D H v`` factorization. ``fwht_fn`` lets the
+    kernel wrapper substitute the Pallas blocked FWHT; the default is the
+    jnp reference (bit-identical math, see core/fwht.py).
+    """
+    xf = x.astype(jnp.float32)
+    if rotate:
+        if dsign is not None:
+            lead, k = xf.shape[:-1], xf.shape[-1]
+            xb = xf.reshape(*lead, k // block, block) * dsign.astype(jnp.float32)
+            xf = xb.reshape(*lead, k)
+        fn = fwht_fn if fwht_fn is not None else blocked_fwht
+        xf = fn(xf, block)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    safe = jnp.where(amax > 0, amax / ACT_QMAX, 1.0)
+    codes = jnp.clip(jnp.round(xf / safe), -ACT_QMAX, ACT_QMAX).astype(jnp.int8)
+    scale = jnp.where(amax > 0, amax / ACT_QMAX, 0.0).astype(jnp.float32)
+    return codes, scale
+
+
+def act_decode(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Rotation-domain reconstruction ``H x ~= scale * codes`` (f32). The
+    round trip back to the original domain is one more (self-inverse) FWHT;
+    tests verify ``ifwht(act_decode(act_encode(x)))`` against ``x``."""
+    return codes.astype(jnp.float32) * scale.astype(jnp.float32)

@@ -43,6 +43,7 @@ from repro.core.quantize import (
     QTensor,
     dequantize_blocks_ternary,
     decode_values,
+    decode_wint,
     from_blocks,
     pad_last_dim,
     quantize_blocks_ternary,
@@ -269,13 +270,16 @@ class TernaryFormat(Format):
           blocks tile the reduction dim, so
 
               y_n = sum_b (H (d_b (q_b - z_b 1))) . x_b
-                  = sum_b d_b q_b . (H x_b) - d_b z_b sqrt(block) * x_b[0]
+                  = sum_b d_b (q_b - z_b 1) . (H x_b)
 
-          (using ``H 1 = sqrt(block) e_0``): rotate each *activation* block
-          once (O(K) transforms per row of x, independent of N) and contract
-          against the raw ternary codes. For the sub-block-scale variant the
-          elementwise scale lives in the rotated domain so it folds into the
-          same contraction with no correction (z=0 there).
+          rotate each *activation* block once (O(K) transforms per row of x,
+          independent of N) and contract the **int8** integer weights
+          ``wint = q - z`` directly — exact because the stored zero-point is
+          integer-valued (see :func:`~repro.core.quantize.decode_wint`), so
+          no correction term and no dequantized weight tensor: the only
+          full-weight-size float tensor is the convert XLA fuses into the
+          dot, closing the PR 5 ref-path cast-traffic leftover. The block
+          scale ``d`` lands on the (..., N, KB) partials.
 
         All paths are bit-identical in exact arithmetic (tested); they
         differ only in where the rotation FLOPs land.
@@ -285,11 +289,10 @@ class TernaryFormat(Format):
 
         m = qt.meta
         block, kb, n = m.block, m.kb, m.n
-        qv = decode_values(qt.data["plane2"], qt.data["plane1"],
-                           fivelevel=m.fivelevel)
-        qv = qv.astype(compute_dtype)  # (N, KB, block)
 
         if mode == "weights":
+            qv = decode_values(qt.data["plane2"], qt.data["plane1"],
+                               fivelevel=m.fivelevel)
             if m.sub_blocks:
                 d = qt.data["scales"].astype(jnp.float32)  # (N, KB, sub)
                 d = jnp.repeat(d, block // m.sub_blocks, axis=-1)
@@ -317,30 +320,65 @@ class TernaryFormat(Format):
             dsign = qt.data.get("dsign")
             if dsign is not None:
                 xb = xb * dsign.astype(xb.dtype)  # w = D H v => w.x = v.(H D x)
-            xr = fwht(xb).astype(compute_dtype)  # (..., KB, block)
-            # zero-point correction factor: H 1 = sqrt(block) e_0 -> x_b[0]
-            x0 = (xb[..., 0] * jnp.sqrt(jnp.float32(block))).astype(compute_dtype)
-        else:
-            # iq3_s no-rotation baseline: contract codes against raw x; the
-            # zero-point couples to sum(x_b) instead.
-            xr = xb.astype(compute_dtype)
-            x0 = jnp.sum(xb, axis=-1).astype(compute_dtype)
+            xb = fwht(xb)
+        xr = xb.astype(compute_dtype)  # (..., KB, block)
 
+        wint = decode_wint(qt.data["plane2"], qt.data["plane1"],
+                           qt.data["zps"], fivelevel=m.fivelevel,
+                           sub_blocks=m.sub_blocks)  # (N, KB, block) int8
+        # Fold the per-block scale into the integer weights with ONE fused
+        # scale-and-cast — the only weight-size float materialization on
+        # this path (the old code decoded, subtracted the zero point, and
+        # carried a separate correction contraction) — so the reduction
+        # stays a single full-K GEMM.
+        d = qt.data["scales"].astype(compute_dtype)
         if m.sub_blocks:
-            d = qt.data["scales"].astype(compute_dtype)  # (N, KB, sub)
             d = jnp.repeat(d, block // m.sub_blocks, axis=-1)  # (N, KB, block)
-            wq = d * qv  # scale lives in rotated domain -> fold into codes
-            y = jnp.einsum("...kb,nkb->...n", xr, wq)
-            return y.astype(compute_dtype)
+            wq = d * wint
+        else:
+            wq = d[..., None] * wint  # (N, KB, block)
+        return jnp.einsum("...kb,nkb->...n", xr, wq).astype(compute_dtype)
 
-        d = qt.data["scales"].astype(compute_dtype)  # (N, KB)
-        z = qt.data["zps"].astype(compute_dtype)  # (N, KB)
-        # Main term: sum_b d_b * (q_b . xr_b)
-        wq = d[..., None] * qv  # (N, KB, block)
-        y = jnp.einsum("...kb,nkb->...n", xr, wq)
-        # Zero-point correction: - sum_b d_b z_b * x0_b (see above for x0).
-        corr = jnp.einsum("...k,nk->...n", x0, d * z)
-        return (y - corr).astype(compute_dtype)
+    def contract_int8(self, x, qt, *, compute_dtype=jnp.bfloat16):
+        """W3A8 reference: quantize the rotated activations to int8
+        (:func:`repro.core.act_quant.act_encode`) and contract against the
+        int8 integer weights —
+
+            y[m, n] = s_m * sum_b d_{n,b} * ( xq[m, b] . wint[n, b] )
+
+        The block MACs are integer-exact even though this path carries them
+        in f32: |xq * wint| <= 127 * 4 and a 256-wide block sum stays below
+        2**24, so f32 accumulation returns the same integers as the kernels'
+        int32 accumulators while XLA:CPU gets a BLAS batched GEMM instead of
+        a scalar int32 loop (the strict-int32 oracle the kernel tests
+        compare against lives in :func:`repro.kernels.ref.itq3_matmul_int8_ref`).
+        Scale-application order (d on block partials, s_m once at the end)
+        matches the kernels' flush exactly."""
+        from repro.core.act_quant import act_encode  # local: tiny module
+
+        m = qt.meta
+        block, kb, n = m.block, m.kb, m.n
+        xp = pad_last_dim(x, block)
+        xq, xs = act_encode(xp, block=block, rotate=m.rotate,
+                            dsign=qt.data.get("dsign"))
+        *lead, kp = xq.shape
+        xqb = xq.reshape(*lead, kb, block).astype(jnp.float32)
+        wint = decode_wint(qt.data["plane2"], qt.data["plane1"],
+                           qt.data["zps"], fivelevel=m.fivelevel,
+                           sub_blocks=m.sub_blocks)
+        d = qt.data["scales"].astype(jnp.float32)
+        if m.sub_blocks:
+            per = block // m.sub_blocks
+            xsub = xqb.reshape(*lead, kb, m.sub_blocks, per)
+            wsub = wint.reshape(n, kb, m.sub_blocks, per)
+            part = jnp.einsum("...ksp,nksp->...nks", xsub, wsub,
+                              preferred_element_type=jnp.float32)
+            y = jnp.einsum("...nks,nks->...n", part, d)
+        else:
+            part = jnp.einsum("...kb,nkb->...nk", xqb, wint,
+                              preferred_element_type=jnp.float32)
+            y = jnp.einsum("...nk,nk->...n", part, d)
+        return (y * xs).astype(compute_dtype)
 
 
 register_format(FloatFormat("fp16", "float16"))

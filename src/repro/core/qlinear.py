@@ -62,6 +62,7 @@ def qmatmul(
     tm: int | None = None,
     tn: int | None = None,
     interpret: bool | None = None,
+    act_quant: bool = False,
 ) -> jax.Array:
     """``x (..., K) @ W_hat (K, N) -> (..., N)`` for a quantized weight.
 
@@ -71,6 +72,16 @@ def qmatmul(
     winner for this shape if one exists, deterministic defaults otherwise
     (always, in interpret mode). The kernel wrapper additionally dispatches
     small-M calls to the decode-shaped matvec kernel by shape.
+
+    ``act_quant=True`` selects the W3A8 integer compute path: activations
+    are rotated + int8-quantized (core/act_quant.py) and contracted against
+    the int8 integer weights with int32 accumulation — no per-tile weight
+    rotation at all. It is honoured only where it makes sense: fused-capable
+    (ternary) formats whose :class:`~repro.core.quantize.QMeta` opts in
+    (``meta.act_quant``, settable per path via QuantPolicy), and never for
+    an explicit ``mode="dequant"`` oracle call. Everything else falls back
+    to the float contraction, so mixed trees serve through one entrypoint
+    and ``act_quant=False`` stays bit-identical to the historical streams.
     """
     m = qt.meta
     if len(m.shape) != 2:
@@ -89,9 +100,13 @@ def qmatmul(
     elif backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
 
+    act = (act_quant and spec.supports_fused and m.act_quant
+           and mode != "dequant")
     if backend == "pallas":
         from repro.kernels.ops import qmatmul_kernel  # lazy: core<->kernels
 
-        return qmatmul_kernel(x, qt, mode=mode, tm=tm, tn=tn,
+        return qmatmul_kernel(x, qt, mode=mode, act_quant=act, tm=tm, tn=tn,
                               interpret=interpret, out_dtype=compute_dtype)
+    if act:
+        return spec.contract_int8(x, qt, compute_dtype=compute_dtype)
     return spec.contract(x, qt, mode=mode, compute_dtype=compute_dtype)

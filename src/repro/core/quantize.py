@@ -41,6 +41,7 @@ __all__ = [
     "to_blocks",
     "from_blocks",
     "decode_values",
+    "decode_wint",
 ]
 
 DEFAULT_BLOCK = 256
@@ -58,6 +59,11 @@ class QMeta:
     sub_blocks: int = 0  # 0 = single block scale; 8 = paper sub-block variant
     fivelevel: bool = False
     bits_per_weight: float = 3.125
+    # Per-path W3A8 eligibility: may this weight's matmul run the integer
+    # activation-quantized path when Runtime.act_quant is on? Default True
+    # (checkpoints predating the field opt in); a QuantPolicy rule can pin
+    # sensitive paths (e.g. lm_head) back to the float contraction.
+    act_quant: bool = True
 
     @property
     def k(self) -> int:
@@ -267,6 +273,27 @@ def decode_values(
     if fivelevel:
         return _codes3_to_fivelevel(codes3)
     return (codes3 & 0x3).astype(jnp.int8) - 1
+
+
+def decode_wint(
+    plane2: jax.Array,
+    plane1: jax.Array,
+    zps: jax.Array,
+    *,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+) -> jax.Array:
+    """Packed planes -> exact int8 integer weights ``wint = q - z``
+    (..., block). The stored zero-point is integer-valued by construction
+    (clipped round, |z| <= 1 ternary / 2 fivelevel) so the subtraction is
+    exact in int8; sub-block formats store z = 0 (symmetric). Value range
+    {-2..2} ternary / {-4..4} fivelevel — the integer compute path (W3A8)
+    contracts these directly against int8 activation codes with no separate
+    zero-point correction term."""
+    qv = decode_values(plane2, plane1, fivelevel=fivelevel)
+    if sub_blocks:
+        return qv  # symmetric: z absorbed at quantization time
+    return qv - zps.astype(jnp.int8)[..., None]
 
 
 def dequantize_blocks_ternary(

@@ -124,8 +124,14 @@ def _bucket_m(m: int) -> int:
 
 
 def _key(m: int, n: int, k: int, fmt: str, *, backend: str,
-         interpret: bool) -> str:
-    return f"{device_kind(interpret)}|{backend}|{fmt}|m{_bucket_m(m)}|n{n}|k{k}"
+         interpret: bool, act_quant: bool = False) -> str:
+    # the W3A8 integer kernels have their own cost surface (no IFWHT MXU
+    # passes, int8 operand tiling), so int8-path winners live under a
+    # distinct key component; float-path keys are unchanged, preserving
+    # every previously tuned cache entry.
+    path = "|int8" if act_quant else ""
+    return (f"{device_kind(interpret)}|{backend}|{fmt}{path}"
+            f"|m{_bucket_m(m)}|n{n}|k{k}")
 
 
 def candidates(m: int, n: int, k: int) -> list[tuple[int, int]]:
@@ -140,14 +146,17 @@ def candidates(m: int, n: int, k: int) -> list[tuple[int, int]]:
 
 
 def get_tiles(m: int, n: int, k: int, fmt: str, *, backend: str = "pallas",
-              interpret: bool = False) -> tuple[int, int]:
+              interpret: bool = False,
+              act_quant: bool = False) -> tuple[int, int]:
     """Cached winner for this shape, or the deterministic defaults.
 
     Never benchmarks — interpret mode (and any untuned shape) always
     resolves to (DEFAULT_TM, DEFAULT_TN); the kernels clamp to the actual
-    M/N, so the defaults are shape-safe everywhere.
+    M/N, so the defaults are shape-safe everywhere. ``act_quant=True``
+    looks up the int8-path key family.
     """
-    ent = _load().get(_key(m, n, k, fmt, backend=backend, interpret=interpret))
+    ent = _load().get(_key(m, n, k, fmt, backend=backend, interpret=interpret,
+                           act_quant=act_quant))
     if ent:
         return int(ent["tm"]), int(ent["tn"])
     return DEFAULT_TM, DEFAULT_TN
@@ -155,10 +164,12 @@ def get_tiles(m: int, n: int, k: int, fmt: str, *, backend: str = "pallas",
 
 def record(m: int, n: int, k: int, fmt: str, tm: int, tn: int, *,
            backend: str = "pallas", interpret: bool = False,
-           us: Optional[float] = None, save: bool = True) -> str:
+           act_quant: bool = False, us: Optional[float] = None,
+           save: bool = True) -> str:
     """Store a winner (used by :func:`autotune` and by tests)."""
     cache = _load()
-    key = _key(m, n, k, fmt, backend=backend, interpret=interpret)
+    key = _key(m, n, k, fmt, backend=backend, interpret=interpret,
+               act_quant=act_quant)
     cache[key] = {"tm": int(tm), "tn": int(tn)}
     if us is not None:
         cache[key]["us"] = round(float(us), 2)
@@ -179,7 +190,8 @@ def _time_call(fn, iters: int = 3) -> float:
 
 
 def autotune(m: int, n: int, k: int, fmt: str = "itq3_s", *,
-             mode: str = "weights", interpret: Optional[bool] = None,
+             mode: str = "weights", act_quant: bool = False,
+             interpret: Optional[bool] = None,
              iters: int = 3, save: bool = True,
              force_interpret_bench: bool = False) -> tuple[int, int]:
     """Benchmark the candidate lattice for one shape and cache the winner.
@@ -187,6 +199,8 @@ def autotune(m: int, n: int, k: int, fmt: str = "itq3_s", *,
     In interpret mode the sweep is skipped (timings there measure the
     Pallas interpreter, not hardware) and the defaults are returned —
     unless ``force_interpret_bench`` (tests, tiny shapes only).
+    ``act_quant=True`` sweeps the W3A8 integer kernels and records under
+    the int8 key family, so ``qmatmul(tm=None)`` autotunes both paths.
     """
     from repro.core import formats
     from repro.kernels.ops import auto_interpret, qmatmul_kernel
@@ -204,11 +218,13 @@ def autotune(m: int, n: int, k: int, fmt: str = "itq3_s", *,
     best, best_us = (DEFAULT_TM, DEFAULT_TN), float("inf")
     for tm, tn in candidates(m, n, k):
         us = _time_call(
-            lambda: qmatmul_kernel(x, qt, mode=mode, tm=tm, tn=tn,
+            lambda: qmatmul_kernel(x, qt, mode=mode, act_quant=act_quant,
+                                   tm=tm, tn=tn,
                                    interpret=interpret), iters=iters)
         if us < best_us:
             best, best_us = (tm, tn), us
-    record(m, n, k, fmt, *best, interpret=interpret, us=best_us, save=save)
+    record(m, n, k, fmt, *best, interpret=interpret, act_quant=act_quant,
+           us=best_us, save=save)
     return best
 
 
@@ -314,11 +330,15 @@ def autotune_attn(t: int, head_dim: int, n_heads: int, *, batch: int = 4,
 
 
 def tune_params_shapes(params, m: int, *, interpret: Optional[bool] = None,
+                       act_quant: bool = False,
                        **kw) -> list[tuple[int, int, int, str]]:
     """Tune every distinct QTensor matmul shape in ``params`` at batch M.
 
     Returns the list of (m, n, k, fmt) shapes tuned; empty in interpret
-    mode (CPU serving keeps the deterministic defaults).
+    mode (CPU serving keeps the deterministic defaults). With
+    ``act_quant=True`` each shape is additionally tuned on the W3A8
+    integer kernels (its own key family), so an engine booted with the
+    integer path on warms both caches.
     """
     from repro.core.quantize import QTensor
     from repro.kernels.ops import auto_interpret
@@ -335,5 +355,7 @@ def tune_params_shapes(params, m: int, *, interpret: Optional[bool] = None,
     tuned = []
     for k, n, fmt in sorted(shapes):
         autotune(m, n, k, fmt, interpret=interpret, **kw)
+        if act_quant:
+            autotune(m, n, k, fmt, interpret=interpret, act_quant=True, **kw)
         tuned.append((m, n, k, fmt))
     return tuned

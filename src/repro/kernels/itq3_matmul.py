@@ -45,6 +45,16 @@ for the IQ3_S no-rotation baseline and for the beyond-paper
 *activation-domain* path (ops.py rotates x blockwise first; the zero-point
 then couples in the rotated domain with no extra term since z is folded
 into the dequantized tile).
+
+**W3A8 integer variants** (``itq3_matmul_int8_pallas``): when the
+activations themselves are quantized into the rotation domain
+(core/act_quant.py), steps 3-4 disappear entirely — the tile expansion is
+unpack + integer zero-point fold (``decode_wint_tile``, exact in int8
+because z is integer-valued), the MAC is int8 x int8 -> int32
+(``preferred_element_type=jnp.int32``, the MXU's DP4A analogue), the
+per-block weight scale ``d`` lands on the int32 partial, and the per-row
+activation scale is applied once at flush. Same flat/hoisted schedules;
+the hoisted int8 strip costs 1/4 of the float scratch bytes.
 """
 from __future__ import annotations
 
@@ -58,7 +68,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fwht import hadamard_matrix
 
-__all__ = ["itq3_matmul_pallas", "dequant_rotate_tile", "pad_packed_n",
+__all__ = ["itq3_matmul_pallas", "itq3_matmul_int8_pallas",
+           "dequant_rotate_tile", "decode_wint_tile", "pad_packed_n",
            "BLOCK"]
 
 BLOCK = 256
@@ -70,8 +81,10 @@ CHUNK = BLOCK // NCHUNK  # 64
 HOIST_VMEM_BUDGET = int(os.environ.get("REPRO_HOIST_VMEM_BUDGET", 8 * 2**20))
 
 
-def _decode_chunk(p2, p1, c: int, *, fivelevel: bool):
-    """Chunk c (elements c*64..c*64+63) integer grid values from the planes.
+def _decode_chunk_int(p2, p1, c: int, *, fivelevel: bool):
+    """Chunk c (elements c*64..c*64+63) integer grid values from the planes,
+    kept in **int8** — shared by the float expansion (which casts) and the
+    W3A8 integer kernels (which contract it directly).
 
     p2: (TN, 64) uint8, p1: (TN, 32) uint8. Planar-interleaved layout:
     plane2 byte i, bit-pair c  <-> element c*64 + i;
@@ -79,11 +92,16 @@ def _decode_chunk(p2, p1, c: int, *, fivelevel: bool):
     """
     payload = ((p2 >> (2 * c)) & 0x3).astype(jnp.int8) - 1  # {-1,0,1}
     if not fivelevel:
-        return payload.astype(jnp.float32)
+        return payload
     sel_lo = (p1 >> (2 * c)) & 0x1        # elements c*64 + [0..31]
     sel_hi = (p1 >> (2 * c + 1)) & 0x1    # elements c*64 + [32..63]
     sel = jnp.concatenate([sel_lo, sel_hi], axis=-1).astype(jnp.int8)
-    return (payload * (1 + sel)).astype(jnp.float32)
+    return payload * (1 + sel)
+
+
+def _decode_chunk(p2, p1, c: int, *, fivelevel: bool):
+    """Float view of :func:`_decode_chunk_int` (the float-path kernels)."""
+    return _decode_chunk_int(p2, p1, c, fivelevel=fivelevel).astype(jnp.float32)
 
 
 def dequant_rotate_tile(h_ref, p2, p1, sc_ref, zp_ref, *, rotate_weights: bool,
@@ -125,6 +143,109 @@ def dequant_rotate_tile(h_ref, p2, p1, sc_ref, zp_ref, *, rotate_weights: bool,
         w_rot = w_rot + jnp.dot(chunks[c], h_slice,
                                 preferred_element_type=jnp.float32)
     return w_rot
+
+
+def decode_wint_tile(p2, p1, zp_ref, *, fivelevel: bool,
+                     sub_blocks: int) -> jax.Array:
+    """Expand one packed weight tile to its (TN, 256) **int8** integer form
+    ``wint = q - z`` — the W3A8 counterpart of :func:`dequant_rotate_tile`.
+
+    No rotation and no float math: the zero-point is integer-valued by
+    construction (sub-block formats store z = 0), so the tile is exact in
+    int8 ({-2..2} ternary / {-4..4} fivelevel) and feeds the MXU as an
+    int8 x int8 -> int32 contraction operand. Shared by the flat, hoisted
+    and matvec int8 kernels so they stay bit-identical.
+    """
+    w = jnp.concatenate(
+        [_decode_chunk_int(p2, p1, c, fivelevel=fivelevel)
+         for c in range(NCHUNK)], axis=-1)  # (TN, 256) int8
+    if sub_blocks:
+        return w
+    return w - zp_ref[...].astype(jnp.int8)  # (TN, 1) integer-valued
+
+
+def _accumulate_int8(acc_ref, xq, w, sc_ref, *, sub_blocks: int):
+    """acc += d_k * (xq . wint^T) with int32 MACs; the per-block weight
+    scale lands on the int32 partial (it varies per (n, k) so it cannot be
+    deferred to the flush like the activation row scale)."""
+    if sub_blocks:
+        per = BLOCK // sub_blocks
+        d_sub = sc_ref[:, 0, :].astype(jnp.float32)  # (TN, SUB)
+        for s in range(sub_blocks):
+            p = jax.lax.dot_general(
+                xq[:, s * per:(s + 1) * per], w[:, s * per:(s + 1) * per],
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+            acc_ref[...] += p.astype(jnp.float32) * d_sub[:, s][None, :]
+    else:
+        d = sc_ref[...].astype(jnp.float32)  # (TN, 1)
+        p = jax.lax.dot_general(
+            xq, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc_ref[...] += p.astype(jnp.float32) * d[:, 0][None, :]
+
+
+def _itq3_matmul_int8_kernel(
+    x_ref,    # (TM, 256) int8 — rotation-domain activation codes
+    xs_ref,   # (TM, 1) f32 — per-row activation scale
+    p2_ref,   # (TN, 1, 64) uint8
+    p1_ref,   # (TN, 1, 32) uint8
+    sc_ref,   # (TN, 1) f32  |  (TN, 1, SUB) f32
+    zp_ref,   # (TN, 1) f32 (integer-valued)
+    o_ref,    # (TM, TN)
+    acc_ref,  # scratch (TM, TN) f32
+    *,
+    fivelevel: bool,
+    sub_blocks: int,
+    kb: int,
+):
+    """Flat int8 schedule: grid (MB, NB, KB). No Hadamard operand and no
+    in-kernel rotation — the FWHT already happened once on the activation
+    side (act_encode), so the per-tile work is unpack + one int dot."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = decode_wint_tile(p2_ref[:, 0, :], p1_ref[:, 0, :], zp_ref,
+                         fivelevel=fivelevel, sub_blocks=sub_blocks)
+    _accumulate_int8(acc_ref, x_ref[...], w, sc_ref, sub_blocks=sub_blocks)
+
+    @pl.when(k == kb - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * xs_ref[...]).astype(o_ref.dtype)
+
+
+def _itq3_matmul_int8_hoisted_kernel(
+    x_ref, xs_ref, p2_ref, p1_ref, sc_ref, zp_ref, o_ref,
+    acc_ref,  # scratch (TM, TN) f32
+    w_ref,    # scratch (KB, TN, 256) int8 — expanded strip for current j
+    *,
+    fivelevel: bool,
+    sub_blocks: int,
+    kb: int,
+):
+    """Hoisted int8 schedule: grid (NB, MB, KB); the int8 strip costs 1/4
+    of the float path's scratch bytes, so it fits VMEM at 4x the KB*TN."""
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i == 0)
+    def _expand():
+        w_ref[pl.ds(k, 1)] = decode_wint_tile(
+            p2_ref[:, 0, :], p1_ref[:, 0, :], zp_ref,
+            fivelevel=fivelevel, sub_blocks=sub_blocks)[None]
+
+    _accumulate_int8(acc_ref, x_ref[...], w_ref[pl.ds(k, 1)][0], sc_ref,
+                     sub_blocks=sub_blocks)
+
+    @pl.when(k == kb - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * xs_ref[...]).astype(o_ref.dtype)
 
 
 def pad_packed_n(pad_n: int, *operands):
@@ -302,4 +423,106 @@ def itq3_matmul_pallas(
         scratch_shapes=scratch,
         interpret=interpret,
     )(h, x, plane2, plane1, scales, zps)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "fivelevel", "sub_blocks", "tm", "tn", "interpret", "out_dtype",
+        "hoist",
+    ),
+)
+def itq3_matmul_int8_pallas(
+    xq: jax.Array,       # (M, K_pad) int8 — act_encode codes, K_pad = KB*256
+    xscale: jax.Array,   # (M, 1) f32 — per-row activation scale
+    plane2: jax.Array,   # (N, KB, 64) uint8
+    plane1: jax.Array,   # (N, KB, 32) uint8
+    scales: jax.Array,   # (N, KB) f16/f32  |  (N, KB, SUB)
+    zps: jax.Array,      # (N, KB) f16/f32 (integer-valued)
+    *,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+    tm: int = 256,
+    tn: int = 256,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+    hoist: bool | None = None,
+) -> jax.Array:
+    """W3A8 fused matmul: ``(M, N) = xscale * ((xq @ wint^T) scaled by d)``
+    with int8 x int8 -> int32 MACs. The activations arrive already rotated
+    and quantized (kernels/ops.py / core/act_quant.py); there is no
+    Hadamard operand and no in-kernel rotation. ``hoist=None`` auto-selects
+    the hoisted schedule under the same VMEM budget as the float kernel —
+    the int8 strip is 4x smaller, so it hoists at 4x the KB*TN.
+    """
+    m, kpad = xq.shape
+    n, kb = plane2.shape[0], plane2.shape[1]
+    if xq.dtype != jnp.int8:
+        raise ValueError(f"int8 kernel expects int8 codes, got {xq.dtype}")
+    if kpad != kb * BLOCK:
+        raise ValueError(f"xq K dim {kpad} != KB*256 = {kb * BLOCK}")
+
+    tm = max(1, min(tm, m))
+    tn = max(1, min(tn, n))
+    pad_m, pad_n = (-m) % tm, (-n) % tn
+    if pad_m:
+        xq = jnp.pad(xq, ((0, pad_m), (0, 0)))
+        xscale = jnp.pad(xscale, ((0, pad_m), (0, 0)))
+    plane2, plane1, scales, zps = pad_packed_n(
+        pad_n, plane2, plane1, scales, zps)
+    mp, np_ = xq.shape[0], plane2.shape[0]
+    mb = mp // tm
+
+    xscale = xscale.astype(jnp.float32)
+    scales = scales.astype(jnp.float32)
+    zps = zps.astype(jnp.float32)
+
+    if hoist is None:
+        hoist = mb > 1 and kb * tn * BLOCK <= HOIST_VMEM_BUDGET
+
+    kernel_kw = dict(fivelevel=fivelevel, sub_blocks=sub_blocks, kb=kb)
+    scratch = [pltpu.VMEM((tm, tn), jnp.float32)]
+    if hoist:
+        grid = (np_ // tn, mb, kb)
+        x_idx = lambda j, i, k: (i, k)
+        xs_idx = lambda j, i, k: (i, 0)
+        w_idx = lambda j, i, k: (j, k, 0)
+        s_idx2 = lambda j, i, k: (j, k)
+        o_idx = lambda j, i, k: (i, j)
+        sc_idx3 = lambda j, i, k: (j, k, 0)
+        kernel = functools.partial(_itq3_matmul_int8_hoisted_kernel,
+                                   **kernel_kw)
+        scratch.append(pltpu.VMEM((kb, tn, BLOCK), jnp.int8))
+    else:
+        grid = (mb, np_ // tn, kb)
+        x_idx = lambda i, j, k: (i, k)
+        xs_idx = lambda i, j, k: (i, 0)
+        w_idx = lambda i, j, k: (j, k, 0)
+        s_idx2 = lambda i, j, k: (j, k)
+        o_idx = lambda i, j, k: (i, j)
+        sc_idx3 = lambda i, j, k: (j, k, 0)
+        kernel = functools.partial(_itq3_matmul_int8_kernel, **kernel_kw)
+
+    if sub_blocks:
+        sc_spec = pl.BlockSpec((tn, 1, sub_blocks), sc_idx3)
+    else:
+        sc_spec = pl.BlockSpec((tn, 1), s_idx2)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, BLOCK), x_idx),
+            pl.BlockSpec((tm, 1), xs_idx),
+            pl.BlockSpec((tn, 1, CHUNK), w_idx),
+            pl.BlockSpec((tn, 1, BLOCK // 8), w_idx),
+            sc_spec,
+            pl.BlockSpec((tn, 1), s_idx2),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), o_idx),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xq, xscale, plane2, plane1, scales, zps)
     return out[:m, :n]

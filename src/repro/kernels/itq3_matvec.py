@@ -31,9 +31,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fwht import hadamard_matrix
-from repro.kernels.itq3_matmul import BLOCK, dequant_rotate_tile, pad_packed_n
+from repro.kernels.itq3_matmul import (
+    BLOCK, _accumulate_int8, decode_wint_tile, dequant_rotate_tile,
+    pad_packed_n,
+)
 
-__all__ = ["itq3_matvec_pallas", "MATVEC_MAX_M"]
+__all__ = ["itq3_matvec_pallas", "itq3_matvec_int8_pallas", "MATVEC_MAX_M"]
 
 MATVEC_MAX_M = 16  # decode / small-batch regime; above this, tile the M dim
 
@@ -135,4 +138,109 @@ def itq3_matvec_pallas(
         scratch_shapes=[pltpu.VMEM((m, tn), jnp.float32)],
         interpret=interpret,
     )(h, x, plane2, plane1, scales, zps)
+    return out[:, :n]
+
+
+def _itq3_matvec_int8_kernel(
+    x_ref,    # (M, 256) int8 — reduction block k of the activation codes
+    xs_ref,   # (M, 1) f32 — per-row activation scale
+    p2_ref,   # (TN, 1, 64) uint8
+    p1_ref,   # (TN, 1, 32) uint8
+    sc_ref,   # (TN, 1) f32  |  (TN, 1, SUB) f32
+    zp_ref,   # (TN, 1) f32 (integer-valued)
+    o_ref,    # (M, TN)
+    acc_ref,  # scratch (M, TN) f32
+    *,
+    fivelevel: bool,
+    sub_blocks: int,
+    kb: int,
+):
+    """W3A8 decode matvec: same (NB, KB) streaming grid, but the per-strip
+    work drops to unpack + integer zero-point fold + one int8 dot — no
+    Hadamard operand, no IFWHT MXU passes. Decode is weight-streaming
+    bound, so the win is dual: fewer VPU/MXU ops per tile AND 4x fewer
+    activation bytes re-read per strip."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = decode_wint_tile(p2_ref[:, 0, :], p1_ref[:, 0, :], zp_ref,
+                         fivelevel=fivelevel, sub_blocks=sub_blocks)
+    _accumulate_int8(acc_ref, x_ref[...], w, sc_ref, sub_blocks=sub_blocks)
+
+    @pl.when(k == kb - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * xs_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fivelevel", "sub_blocks", "tn", "interpret",
+                     "out_dtype"),
+)
+def itq3_matvec_int8_pallas(
+    xq: jax.Array,       # (M, K_pad) int8, M <= MATVEC_MAX_M
+    xscale: jax.Array,   # (M, 1) f32
+    plane2: jax.Array,   # (N, KB, 64) uint8
+    plane1: jax.Array,   # (N, KB, 32) uint8
+    scales: jax.Array,   # (N, KB) f16/f32  |  (N, KB, SUB)
+    zps: jax.Array,      # (N, KB) f16/f32 (integer-valued)
+    *,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+    tn: int = 256,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Decode-shaped W3A8 matvec (int8 codes in, (M, N) out); the integer
+    counterpart of :func:`itq3_matvec_pallas` with the same grid and
+    accumulation order as ``itq3_matmul_int8_pallas`` (bit-identical
+    dispatch, see kernels/ops.py)."""
+    m, kpad = xq.shape
+    n, kb = plane2.shape[0], plane2.shape[1]
+    if m > MATVEC_MAX_M:
+        raise ValueError(f"matvec kernel is for M <= {MATVEC_MAX_M}, got {m}")
+    if xq.dtype != jnp.int8:
+        raise ValueError(f"int8 kernel expects int8 codes, got {xq.dtype}")
+    if kpad != kb * BLOCK:
+        raise ValueError(f"xq K dim {kpad} != KB*256 = {kb * BLOCK}")
+
+    tn = max(1, min(tn, n))
+    plane2, plane1, scales, zps = pad_packed_n(
+        (-n) % tn, plane2, plane1, scales, zps)
+    np_ = plane2.shape[0]
+
+    xscale = xscale.astype(jnp.float32)
+    scales = scales.astype(jnp.float32)
+    zps = zps.astype(jnp.float32)
+
+    if sub_blocks:
+        sc_spec = pl.BlockSpec((tn, 1, sub_blocks), lambda j, k: (j, k, 0))
+    else:
+        sc_spec = pl.BlockSpec((tn, 1), lambda j, k: (j, k))
+
+    kernel = functools.partial(
+        _itq3_matvec_int8_kernel,
+        fivelevel=fivelevel,
+        sub_blocks=sub_blocks,
+        kb=kb,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // tn, kb),
+        in_specs=[
+            pl.BlockSpec((m, BLOCK), lambda j, k: (0, k)),
+            pl.BlockSpec((m, 1), lambda j, k: (0, 0)),
+            pl.BlockSpec((tn, 1, BLOCK // 4), lambda j, k: (j, k, 0)),
+            pl.BlockSpec((tn, 1, BLOCK // 8), lambda j, k: (j, k, 0)),
+            sc_spec,
+            pl.BlockSpec((tn, 1), lambda j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((m, tn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, tn), jnp.float32)],
+        interpret=interpret,
+    )(xq, xscale, plane2, plane1, scales, zps)
     return out[:, :n]

@@ -36,12 +36,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import formats as fmt_mod
+from repro.core.act_quant import act_encode
 from repro.core.qlinear import resolve_mode
 from repro.core.quantize import QTensor, pad_last_dim
 from repro.kernels import autotune as autotune_mod
 from repro.kernels.fwht_kernel import fwht_pallas
-from repro.kernels.itq3_matmul import BLOCK, itq3_matmul_pallas
-from repro.kernels.itq3_matvec import MATVEC_MAX_M, itq3_matvec_pallas
+from repro.kernels.itq3_matmul import (
+    BLOCK, itq3_matmul_int8_pallas, itq3_matmul_pallas,
+)
+from repro.kernels.itq3_matvec import (
+    MATVEC_MAX_M, itq3_matvec_int8_pallas, itq3_matvec_pallas,
+)
 
 __all__ = ["auto_interpret", "blocked_fwht_op", "qmatmul_kernel"]
 
@@ -66,13 +71,22 @@ def qmatmul_kernel(
     qt: QTensor,
     *,
     mode: str = "weights",
+    act_quant: bool = False,
     tm: int | None = None,
     tn: int | None = None,
     interpret: bool | None = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
     """Kernel-backed ``x (..., K) @ W_hat (K, N) -> (..., N)`` for the
-    ITQ3_S format family."""
+    ITQ3_S format family.
+
+    ``act_quant=True`` runs the W3A8 integer path: rotate + int8-quantize
+    the activations once (Pallas blocked FWHT + act_encode), then dispatch
+    by shape to the int8 kernels — int8 x int8 -> int32 MACs, weight scale
+    on the block partial, row scale at flush. ``mode`` is moot there (the
+    rotation always lands on the activation side); tiles resolve through
+    the autotune cache under the int8 key family.
+    """
     if interpret is None:
         interpret = auto_interpret()
     m = qt.meta
@@ -84,6 +98,29 @@ def qmatmul_kernel(
     xp = pad_last_dim(x.reshape(-1, x.shape[-1]), m.block)
 
     dsign = qt.data.get("dsign")
+    if act_quant:
+        xq, xs = act_encode(
+            xp, block=m.block, rotate=m.rotate, dsign=dsign,
+            fwht_fn=lambda a, b: blocked_fwht_op(a, b, interpret=interpret))
+        rows = xq.shape[0]
+        if tm is None or tn is None:
+            a_tm, a_tn = autotune_mod.get_tiles(
+                rows, m.n, m.shape[0], m.fmt, interpret=interpret,
+                act_quant=True)
+            tm = a_tm if tm is None else tm
+            tn = a_tn if tn is None else tn
+        common = dict(fivelevel=m.fivelevel, sub_blocks=m.sub_blocks, tn=tn,
+                      interpret=interpret, out_dtype=out_dtype)
+        if rows <= MATVEC_MAX_M:
+            out = itq3_matvec_int8_pallas(
+                xq, xs, qt.data["plane2"], qt.data["plane1"],
+                qt.data["scales"], qt.data["zps"], **common)
+        else:
+            out = itq3_matmul_int8_pallas(
+                xq, xs, qt.data["plane2"], qt.data["plane1"],
+                qt.data["scales"], qt.data["zps"], tm=tm, **common)
+        return out.reshape(*lead, m.n)
+
     rotate = m.rotate
     if rotate:
         if mode == "activations":

@@ -3,6 +3,15 @@
 Each function computes exactly what the corresponding kernel must produce,
 built from the independently-tested :mod:`repro.core` primitives. Kernel
 tests sweep shapes/dtypes and ``assert_allclose`` against these.
+
+The float oracle keeps the unpacked codes in **int8 until the contraction**
+(the PR 5 leftover): the stored zero-point is integer-valued, so
+``wint = q - z`` is an exact int8 tensor and the only full-weight-size f32
+tensor XLA ever sees is the convert fused into the dot itself — no
+dequantized weight, and no FWHT over the (N, K)-sized weight tensor. The
+rotation rides on the activation side instead via the isometry
+``x . H w = (H x) . w`` (H involutory + symmetric); the per-block scale
+``d`` lands on the (..., N, KB) partials. A jaxpr spy test pins this down.
 """
 from __future__ import annotations
 
@@ -10,14 +19,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fwht import blocked_fwht
-from repro.core.quantize import decode_values
+from repro.core.quantize import decode_wint
 
-__all__ = ["fwht_ref", "itq3_matmul_ref"]
+__all__ = ["fwht_ref", "itq3_matmul_ref", "itq3_matmul_int8_ref",
+           "decode_wint"]
 
 
 def fwht_ref(x: jax.Array, block: int = 256) -> jax.Array:
     """Oracle for kernels.fwht_kernel.fwht_pallas."""
     return blocked_fwht(x.astype(jnp.float32), block=block).astype(x.dtype)
+
+
+def _scaled_partials(xr: jax.Array, wint: jax.Array, scales: jax.Array, *,
+                     sub_blocks: int, block: int) -> jax.Array:
+    """``sum_b d_b * (xr_b . wint_b)``: contract int8 codes against (already
+    rotated) activations blockwise, then apply the per-(n, block) weight
+    scale to the partials. The einsum promotes wint in-dot — codes stay
+    int8 in HBM."""
+    d = scales.astype(jnp.float32)
+    if sub_blocks:
+        per = block // sub_blocks
+        *lead, kb, _ = xr.shape
+        xs = xr.reshape(*lead, kb, sub_blocks, per)
+        ws = wint.reshape(*wint.shape[:-1], sub_blocks, per)
+        part = jnp.einsum("...ksp,nksp->...nks", xs, ws)  # (..., N, KB, SUB)
+        return jnp.einsum("...nks,nks->...n", part, d)
+    part = jnp.einsum("...kb,nkb->...nk", xr, wint)  # (..., N, KB)
+    return jnp.einsum("...nk,nk->...n", part, d)
 
 
 def itq3_matmul_ref(
@@ -35,18 +63,55 @@ def itq3_matmul_ref(
     """Oracle for kernels.itq3_matmul.itq3_matmul_pallas.
 
     x: (M, KB*256); planes (N, KB, 64)/(N, KB, 32); scales (N, KB[, SUB]).
+    ``rotate_weights=True`` is computed as ``(H x) . (d (q - z))`` — the
+    same value as rotating the weights, without ever materializing them.
+    """
+    block = plane2.shape[-1] * 4
+    kb = plane2.shape[1]
+    wint = decode_wint(plane2, plane1, zps, fivelevel=fivelevel,
+                       sub_blocks=sub_blocks)
+    xf = x.astype(jnp.float32)
+    if rotate_weights:
+        xf = blocked_fwht(xf, block=block)
+    xr = xf.reshape(*x.shape[:-1], kb, block)
+    y = _scaled_partials(xr, wint, scales, sub_blocks=sub_blocks, block=block)
+    return y.astype(out_dtype)
+
+
+def itq3_matmul_int8_ref(
+    xq: jax.Array,
+    xscale: jax.Array,
+    plane2: jax.Array,
+    plane1: jax.Array,
+    scales: jax.Array,
+    zps: jax.Array,
+    *,
+    fivelevel: bool = False,
+    sub_blocks: int = 0,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the int8-accumulation kernels (W3A8 path).
+
+    xq: (M, KB*256) int8 rotation-domain activation codes (act_encode);
+    xscale: (M, 1) f32 per-row scale. Contractions are exact int8 x int8 ->
+    int32; the weight scale ``d`` lands on the int32 block partials and the
+    row scale once at the end — the same order as the kernels' flush.
     """
     block = plane2.shape[-1] * 4
     n, kb = plane2.shape[0], plane2.shape[1]
-    qv = decode_values(plane2, plane1, fivelevel=fivelevel).astype(jnp.float32)
+    wint = decode_wint(plane2, plane1, zps, fivelevel=fivelevel,
+                       sub_blocks=sub_blocks)
+    xb = xq.reshape(*xq.shape[:-1], kb, block)
+    d = scales.astype(jnp.float32)
     if sub_blocks:
-        d = jnp.repeat(scales.astype(jnp.float32), block // sub_blocks, axis=-1)
-        vals = d * qv
+        per = block // sub_blocks
+        xs = xb.reshape(*xb.shape[:-1], sub_blocks, per)
+        ws = wint.reshape(n, kb, sub_blocks, per)
+        part = jnp.einsum("...ksp,nksp->...nks", xs, ws,
+                          preferred_element_type=jnp.int32)
+        y = jnp.einsum("...nks,nks->...n", part.astype(jnp.float32), d)
     else:
-        vals = scales.astype(jnp.float32)[..., None] * (
-            qv - zps.astype(jnp.float32)[..., None]
-        )
-    if rotate_weights:
-        vals = blocked_fwht(vals, block=block)
-    w = vals.reshape(n, kb * block).T  # (K_pad, N)
-    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)
+        part = jnp.einsum("...kb,nkb->...nk", xb, wint,
+                          preferred_element_type=jnp.int32)
+        y = jnp.einsum("...nk,nk->...n", part.astype(jnp.float32), d)
+    return (y * xscale.astype(jnp.float32)).astype(out_dtype)

@@ -118,6 +118,11 @@ def main() -> None:
                     help="rotated-int8 KV cache (8.25 bits/element; fused "
                          "Pallas decode attention on TPU, einsum fallback "
                          "elsewhere)")
+    ap.add_argument("--act-quant", action="store_true",
+                    help="W3A8 integer compute path: quantize activations "
+                         "to int8 in the rotation domain and contract "
+                         "against ternary codes with int32 accumulation "
+                         "(QuantPolicy act_quant=False pins paths to float)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="tensor-parallel serving over a data,model device "
                          "mesh (e.g. --mesh 1,2: packed ITQ3_S planes "
@@ -161,7 +166,7 @@ def main() -> None:
     rt = Runtime(compute_dtype=jnp.float32, quant_mode=args.quant_mode,
                  backend=args.backend, autotune=args.autotune,
                  tile_m=args.tile_m, tile_n=args.tile_n,
-                 kv_quant=args.kv_quant)
+                 kv_quant=args.kv_quant, act_quant=args.act_quant)
 
     if args.load_quantized:
         t0 = time.time()
@@ -227,6 +232,9 @@ def main() -> None:
     if args.kv_quant:
         print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
               f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
+    if args.act_quant:
+        print("act_quant: W3A8 integer compute path "
+              "(int8 rotation-domain activations, int32 accumulation)")
     if mesh is not None:
         st0 = eng.stats()
         print(f"tp cache: {st0['cache_bytes_per_device']/1e6:.2f}MB/device "

@@ -55,6 +55,12 @@ class Runtime:
     remat_policy: str = "none"  # none | dots  (what each layer may save)
     decode_token_cache: bool = True  # O(1)-byte decode cache writes (perf log A2)
     kv_quant: bool = False  # rotated-int8 KV cache (serve/kv_quant.py codec)
+    # W3A8 integer compute path: rotate + int8-quantize activations and
+    # contract against the ternary codes with int32 accumulation
+    # (core/act_quant.py). Off by default — the float path stays
+    # bit-identical to historical streams; QMeta.act_quant opts individual
+    # weight paths out even when this is on.
+    act_quant: bool = False
     rwkv_mode: str = "chunked"  # chunked (MXU) | scan (stepwise reference)
     rules: Any = None  # sharding.rules.Rules | None
     mesh: Any = None
@@ -85,11 +91,13 @@ def dense(x: jax.Array, w, rt: Runtime, bias=None) -> jax.Array:
             y = tp_mod.tp_qmatmul(x, w, rt.rules, mode=rt.quant_mode,
                                   backend=backend,
                                   compute_dtype=rt.compute_dtype,
-                                  tm=rt.tile_m, tn=rt.tile_n)
+                                  tm=rt.tile_m, tn=rt.tile_n,
+                                  act_quant=rt.act_quant)
         else:
             y = qmatmul(x, w, mode=rt.quant_mode, backend=backend,
                         compute_dtype=rt.compute_dtype,
-                        tm=rt.tile_m, tn=rt.tile_n)
+                        tm=rt.tile_m, tn=rt.tile_n,
+                        act_quant=rt.act_quant)
     else:
         y = jnp.matmul(x.astype(rt.compute_dtype), w.astype(rt.compute_dtype))
     if bias is not None:

@@ -892,6 +892,10 @@ class ServeEngine:
             "swapped": len(self._swapped),
             "max_queue": self.max_queue,
             "shed_policy": self.shed_policy,
+            # --- compute-path knobs (which numeric paths served this run) ---
+            "backend": self.rt.backend,
+            "kv_quant": self.rt.kv_quant,
+            "act_quant": self.rt.act_quant,
         }
         if self.mesh is not None:
             from repro.serve import tp as tp_mod

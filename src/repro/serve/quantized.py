@@ -63,13 +63,18 @@ class QuantRule:
     the router fp" is an early ``fmt=None`` rule). ``rule``/``seed``/
     ``sub_blocks`` override the policy-wide defaults for matching leaves;
     ``sub_blocks`` is honoured by the ternary family (finer scale
-    granularity on selected layers)."""
+    granularity on selected layers). ``act_quant`` is the per-path W3A8
+    opt-in/out: ``False`` pins matching paths to the float contraction even
+    when ``Runtime.act_quant`` turns the integer path on (e.g. keep
+    ``lm_head`` full-fidelity), ``True``/``None`` leave the runtime knob in
+    charge (QMeta defaults to eligible)."""
 
     pattern: str
     fmt: Optional[str]
     rule: Optional[str] = None  # scale rule: "paper" | "lloyd"
     seed: Optional[int] = None
     sub_blocks: Optional[int] = None
+    act_quant: Optional[bool] = None
 
     def __post_init__(self):
         re.compile(self.pattern)  # fail fast on bad patterns
@@ -168,19 +173,25 @@ def quantize_params(params, fmt: "str | QuantPolicy" = "itq3_s", *,
         if r.sub_blocks is not None:
             kwargs["sub_blocks"] = r.sub_blocks
 
+        def finish(qt):
+            if r.act_quant is None:
+                return qt
+            return QTensor(qt.data, dataclasses.replace(
+                qt.meta, act_quant=r.act_quant))
+
         is_embed = dotted.split(".")[-1] == "embed"
         if is_embed:
             # table is gathered, not matmul'd: quantize as (V, D) blocks
             if leaf.ndim != 2:
                 return leaf
-            return spec.quantize(leaf.T, **kwargs)
+            return finish(spec.quantize(leaf.T, **kwargs))
         if leaf.ndim < 2 or leaf.shape[-2] < MIN_REDUCTION:
             return leaf
 
         fn = lambda w: spec.quantize(w, **kwargs)
         for _ in range(leaf.ndim - 2):
             fn = jax.vmap(fn)
-        return fn(leaf)
+        return finish(fn(leaf))
 
     return jax.tree_util.tree_map_with_path(visit, params)
 

@@ -225,16 +225,20 @@ def _qdata_specs(qt: QTensor, msize: int):
 
 
 def tp_qmatmul(x: jax.Array, qt: QTensor, rules: R.Rules, *, mode: str,
-               backend: str, compute_dtype, tm=None, tn=None) -> jax.Array:
+               backend: str, compute_dtype, tm=None, tn=None,
+               act_quant: bool = False) -> jax.Array:
     """Column-parallel ``x @ W_hat`` under shard_map: planes N-sharded, x
     replicated (shard_map gathers it exactly if it arrives sharded), each
     device runs the full qmatmul/itq3_matvec dispatch on its N/msize shard.
     Output is N-sharded; ineligible shapes fall through to plain qmatmul
-    (replicated planes)."""
+    (replicated planes). ``act_quant`` composes freely with column
+    parallelism: the activation codec depends only on x (replicated), so
+    every device quantizes identically and contracts its own N shard."""
     mesh = rules.mesh
     if not can_tp_qmatmul(qt, mesh):
         return qmatmul(x, qt, mode=mode, backend=backend,
-                       compute_dtype=compute_dtype, tm=tm, tn=tn)
+                       compute_dtype=compute_dtype, tm=tm, tn=tn,
+                       act_quant=act_quant)
     msize = mesh.shape["model"]
     k, n = qt.meta.shape
     local_meta = dataclasses.replace(qt.meta, shape=(k, n // msize))
@@ -242,7 +246,8 @@ def tp_qmatmul(x: jax.Array, qt: QTensor, rules: R.Rules, *, mode: str,
     def local_fn(xs, q_local):
         q_local = QTensor(q_local.data, local_meta)
         return qmatmul(xs, q_local, mode=mode, backend=backend,
-                       compute_dtype=compute_dtype, tm=tm, tn=tn)
+                       compute_dtype=compute_dtype, tm=tm, tn=tn,
+                       act_quant=act_quant)
 
     out_spec = P(*([None] * (x.ndim - 1) + ["model"]))
     fn = shard_map(local_fn, mesh=mesh,

@@ -42,6 +42,7 @@ REQUIRED_METRICS_BY_PREFIX = {
     "serve/tp": ("tok_s", "cache_bytes_per_device"),
     "serve/faults_": ("quarantined", "deadline_expired", "rejected", "shed",
                       "preempted", "resumed", "tok_s", "tokens"),
+    "serve/paged_": ("tok_s", "pool_utilization", "max_concurrent"),
 }
 
 # Serving-SLO metrics the regression gate watches on serve/sched_* records,

@@ -217,6 +217,86 @@ def add_fault_records(suite: BenchSuite, params, cfg, *, smoke: bool) -> None:
               all_terminal=True)
 
 
+def add_paged_records(suite: BenchSuite, params, cfg, *, smoke: bool) -> None:
+    """``serve/paged_*``: dense reservation vs the paged block pool at EQUAL
+    cache bytes on a heterogeneous-length burst. The dense engine caps
+    concurrency at ``slots`` because every slot reserves ``max_len``
+    positions; the paged engine only holds blocks for live tokens, so the
+    same bytes serve >= 2x the concurrent requests (the acceptance bar this
+    record asserts). Token streams are checked identical request-by-request
+    — paging must change capacity, never content."""
+    rtq = Runtime(compute_dtype=jnp.float32, kv_quant=True)
+    max_len, block_size = 64, 16
+    dense_slots = 4
+    # equal token capacity: dense reserves 4 x 64 = 256 positions; the pool
+    # gets 256 / 16 = 16 usable blocks (+ the reserved null block)
+    num_blocks = dense_slots * max_len // block_size + 1
+    paged_slots = 16
+    n = 12 if smoke else 24
+
+    def reqs():
+        # per-request tokens (plen + max_new) <= 15: one block each, so the
+        # pool can host paged_slots concurrent requests without thrashing
+        rng = np.random.default_rng(11)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=3 + i % 7).astype(np.int32),
+                        max_new=6) for i in range(n)]
+
+    def bench(paged: bool):
+        kw = dict(paged=True, num_blocks=num_blocks,
+                  block_size=block_size) if paged else {}
+        eng = ServeEngine(params, cfg, slots=paged_slots if paged
+                          else dense_slots, max_len=max_len, rt=rtq, **kw)
+        eng.run(reqs())  # warmup: compile every wave shape
+        eng.max_concurrent = 0
+        peak_util = 0.0
+        batch = reqs()
+        t0 = time.perf_counter()
+        for _ in eng.generate(batch):
+            if paged:
+                peak_util = max(peak_util, eng.pool.utilization())
+        wall = time.perf_counter() - t0
+        st = eng.stats()
+        return {"wall_s": wall,
+                "tokens": sum(len(r.out) for r in batch),
+                "out": {r.rid: list(r.out) for r in batch},
+                "max_concurrent": st["max_concurrent"],
+                "cache_bytes": st["cache_bytes"],
+                "pool_utilization": round(peak_util, 4) if paged else 1.0,
+                "stats": st}
+
+    dense = bench(paged=False)
+    paged = bench(paged=True)
+    assert paged["out"] == dense["out"], \
+        "paged engine token streams diverged from dense"
+    assert paged["max_concurrent"] >= 2 * dense["max_concurrent"], (
+        f"paged concurrency {paged['max_concurrent']} is not >= 2x dense "
+        f"{dense['max_concurrent']} at equal cache bytes")
+    for name, r, extra in (
+            ("serve/paged_dense_baseline", dense,
+             dict(slots=dense_slots)),
+            ("serve/paged_pool", paged,
+             dict(slots=paged_slots, block_size=block_size,
+                  pool_blocks=num_blocks - 1,
+                  blocks_swapped=paged["stats"]["blocks_swapped"],
+                  prefix_hits=paged["stats"]["prefix_hits"],
+                  concurrency_vs_dense=round(
+                      paged["max_concurrent"]
+                      / max(dense["max_concurrent"], 1), 2)))):
+        suite.add(name,
+                  us_per_call=1e6 * r["wall_s"] / max(r["tokens"], 1),
+                  tok_s=round(r["tokens"] / r["wall_s"], 2),
+                  wall_s=round(r["wall_s"], 3),
+                  tokens=r["tokens"],
+                  requests=n,
+                  max_concurrent=r["max_concurrent"],
+                  pool_utilization=r["pool_utilization"],
+                  cache_bytes=r["cache_bytes"],
+                  tokens_match=True,
+                  **extra)
+
+
 _TP_SCRIPT = textwrap.dedent("""
     import json, time
     import jax, jax.numpy as jnp, numpy as np
@@ -390,6 +470,7 @@ def main(smoke: bool = False) -> None:
               tokens_match=True)
 
     add_fault_records(suite, qparams, cfg, smoke=smoke)
+    add_paged_records(suite, qparams, cfg, smoke=smoke)
     add_tp_records(suite, smoke=smoke)
 
     from benchmarks.attn_bench import add_serve_records

@@ -89,3 +89,28 @@ if os.environ.get("REPRO_LONG500K", "1") != "0":
           f"cache {eng_h.cache_bytes / 1e6:.0f} MB rotated-int8, "
           f"boot {boot_s:.0f}s, 3 tokens in {time.time() - t0:.0f}s, "
           f"tokens {r.out}")
+
+    # --- the same long_500k window through the PAGED pool ------------------
+    # The dense engine above must ALLOCATE all 524288 positions to open the
+    # window; the paged engine opens the identical window with a block table
+    # 32768 entries wide but only allocates pool blocks for live tokens —
+    # here 64 blocks (1024 token-slots), ~512x less cache memory resident
+    # for the same max_len. (On CPU the einsum reference still gathers a
+    # dense view per step, so this cell demonstrates ALLOCATION, not CPU
+    # walltime; the TPU kernel reads blocks through the table directly.)
+    t0 = time.time()
+    eng_p = ServeEngine(params, cfg, slots=1, max_len=long_T,
+                        rt=Runtime(compute_dtype=jnp.float32, kv_quant=True),
+                        paged=True, num_blocks=65, block_size=16)
+    boot_s = time.time() - t0
+    t0 = time.time()
+    [rp] = eng_p.run([Request(rid=0, prompt=rng.integers(
+        1, cfg.vocab_size, size=9), max_new=3)])
+    assert len(rp.out) == 3 and rp.finish_reason == "length", (
+        rp.out, rp.finish_reason)
+    st = eng_p.stats()
+    print(f"long_500k paged dry run (reduced {cfg.name}, {long_T}-position "
+          f"window): pool {eng_p.cache_bytes / 1e6:.1f} MB vs "
+          f"{kv_cache_bytes_per_token(cfg, kv_quant=True) * long_T / 1e6:.0f}"
+          f" MB dense reservation, boot {boot_s:.0f}s, 3 tokens in "
+          f"{time.time() - t0:.0f}s, tokens {rp.out}")

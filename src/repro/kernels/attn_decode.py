@@ -52,6 +52,18 @@ odd shapes; ``backend="pallas"`` on an unsupported shape fails fast with a
 ValueError naming the gate instead of dying in Pallas lowering. The
 backends share score/weight formulas exactly (scores from codes, V scale
 folded into the weight row), so greedy token streams are identical.
+
+**Paged layout** (serve/paged.py): the same kernels also read a BLOCK-POOL
+cache — K/V planes stored as ``(num_blocks*KV, block_size, HD)`` pooled
+rows instead of per-slot rows, with a per-row int32 block table mapping
+each slot's logical key tile to its pool row. The table rides as a THIRD
+scalar-prefetch operand, so the key-tile index map does exactly one more
+gather: ``row = table[i, tile // tiles_per_block]`` instead of ``row = i``.
+The kernel body, masks, and early exit are untouched (masks key on the
+LOGICAL grid position), so paged and dense attention are bitwise identical
+whenever the gathered blocks hold the same codes/scales — the property
+tests/test_paged.py pins. The jnp reference path gathers ``pool[table]``
+back into the dense per-slot view and reuses the dense reference math.
 """
 from __future__ import annotations
 
@@ -68,6 +80,7 @@ from repro.core.fwht import fwht, is_pow2
 __all__ = [
     "attn_q8_pallas", "attn_decode_q8_pallas", "decode_attn_q8",
     "decode_attn_q8_ref", "prefill_attn_q8", "prefill_attn_q8_ref",
+    "paged_row_table", "paged_to_dense",
     "kernel_supported", "DEFAULT_TT", "DEFAULT_TQ", "ATTN_BACKENDS",
 ]
 
@@ -213,15 +226,16 @@ def _attn_q8_kernel(
 
 @functools.partial(jax.jit, static_argnames=("tq", "tt", "causal",
                                              "interpret", "sm_scale",
-                                             "early_exit"))
+                                             "early_exit", "block_size"))
 def attn_q8_pallas(
     q_rot: jax.Array,     # (R, TQ_total, G, HD) f32 — ROTATED queries
-    k_codes: jax.Array,   # (R, T, HD) int8
-    k_scale: jax.Array,   # (R, T) f16/f32
-    v_codes: jax.Array,   # (R, T, HD) int8
-    v_scale: jax.Array,   # (R, T) f16/f32
+    k_codes: jax.Array,   # (R, T, HD) int8 — or (PR, BS, HD) pooled blocks
+    k_scale: jax.Array,   # (R, T) f16/f32 — or (PR, BS)
+    v_codes: jax.Array,   # (R, T, HD) int8 — or (PR, BS, HD)
+    v_scale: jax.Array,   # (R, T) f16/f32 — or (PR, BS)
     kv_len: jax.Array,    # (R,) int32 — valid cache positions per row
     q_offset: jax.Array,  # (R,) int32 — absolute position of query 0
+    table: jax.Array | None = None,  # (R, MAXB) int32 pool-row block table
     *,
     sm_scale: float,
     causal: bool = True,
@@ -229,6 +243,7 @@ def attn_q8_pallas(
     tt: int = DEFAULT_TT,
     interpret: bool = True,
     early_exit: bool = True,
+    block_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Online-softmax attention over the quantized cache, tiled over both
     queries and keys (grid ``(R, NQ, NT)``, key tiles innermost).
@@ -244,21 +259,46 @@ def attn_q8_pallas(
     key loop (the parity configuration: both must agree bitwise, because
     skipped tiles are exactly the fully-masked ones).
 
+    With ``table``/``block_size`` set, the K/V operands are a BLOCK POOL:
+    ``(pool_rows, block_size, ...)`` planes whose row for logical key tile
+    ``ti`` of grid row ``i`` is ``table[i, ti*tt // block_size]`` — the
+    per-slot block table already multiplied out to pool-row units by the
+    caller (serve/paged.py). The index maps do that one extra gather; the
+    kernel body and its kv_len/causal masks keep using LOGICAL positions
+    ``ti*tt + j``, so a paged pass is bitwise identical to the dense pass
+    over the same token contents. ``tt`` is clamped to divide
+    ``block_size`` (a key tile never straddles two pool blocks).
+
     Returns the UNNORMALIZED triple ``(acc (R, TQ, G, HD), m (R, TQ, G, 1),
     l (R, TQ, G, 1))`` so the caller chooses what to merge before
     normalizing (decode merges the in-flight token's self term; prefill,
     whose span is already in the cache, just divides)."""
     r, tq_total, g, hd = q_rot.shape
-    t = k_codes.shape[1]
-    tt = max(1, min(tt, t))
-    pad_t = (-t) % tt
-    if pad_t:
-        pad3 = ((0, 0), (0, pad_t), (0, 0))
-        k_codes = jnp.pad(k_codes, pad3)
-        v_codes = jnp.pad(v_codes, pad3)
-        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_t)))
-        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_t)))
-    nt = k_codes.shape[1] // tt
+    paged = table is not None
+    if paged:
+        if block_size is None:
+            raise ValueError("paged attention needs block_size with table")
+        bs = int(block_size)
+        if k_codes.shape[1] != bs:
+            raise ValueError(
+                f"pooled K/V planes must be (pool_rows, block_size, ...); "
+                f"got {k_codes.shape} for block_size {bs}")
+        # a key tile must never straddle two pool blocks: largest common
+        # divisor keeps power-of-two tunings intact (min of the two)
+        tt = math.gcd(max(1, min(tt, bs)), bs)
+        tpb = bs // tt  # key tiles per pool block
+        nt = table.shape[1] * tpb  # logical tiles = MAXB blocks * tpb
+    else:
+        t = k_codes.shape[1]
+        tt = max(1, min(tt, t))
+        pad_t = (-t) % tt
+        if pad_t:
+            pad3 = ((0, 0), (0, pad_t), (0, 0))
+            k_codes = jnp.pad(k_codes, pad3)
+            v_codes = jnp.pad(v_codes, pad3)
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_t)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_t)))
+        nt = k_codes.shape[1] // tt
 
     tq = max(1, min(tq, tq_total))
     pad_q = (-tq_total) % tq
@@ -276,30 +316,44 @@ def attn_q8_pallas(
         # block index is Pallas's "don't re-DMA" signal
         return (i, jnp.minimum(ti, _last_tile(limit, tt=tt)), 0)
 
-    def kv_scale_tile(i, qi, ti, len_ref, off_ref):
-        return kv_tile(i, qi, ti, len_ref, off_ref)[:2]
+    def kv_tile_paged(i, qi, ti, len_ref, off_ref, tbl_ref):
+        if early_exit:
+            limit = _tile_limit(len_ref[i], off_ref[i], qi, tq=tq,
+                                causal=causal)
+            ti = jnp.minimum(ti, _last_tile(limit, tt=tt))
+        # the one extra scalar-prefetch gather paging costs: logical tile
+        # -> (pool row via the block table, tile offset within the block)
+        return (tbl_ref[i, ti // tpb], ti % tpb, 0)
+
+    def kv_scale_tile(i, qi, ti, *refs):
+        return (kv_tile_paged if paged else kv_tile)(i, qi, ti, *refs)[:2]
+
+    kv_map = kv_tile_paged if paged else kv_tile
+
+    def q_map(i, qi, ti, *refs):
+        return (i, qi, 0, 0)
 
     kernel = functools.partial(_attn_q8_kernel, sm_scale=sm_scale, tq=tq,
                                g=g, tt=tt, nt=nt, causal=causal,
                                early_exit=early_exit)
+    if paged:
+        # scalar-prefetch refs lead the kernel args; the body never reads
+        # the table (only the index maps do), so drop it before dispatch
+        kernel = functools.partial(_drop_table_ref, kernel)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # kv_len, q_offset feed the index maps
+        num_scalar_prefetch=3 if paged else 2,  # kv_len, q_offset[, table]
         grid=(r, nq, nt),
         in_specs=[
-            pl.BlockSpec((1, tq, g, hd),
-                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
-            pl.BlockSpec((1, tt, hd), kv_tile),
+            pl.BlockSpec((1, tq, g, hd), q_map),
+            pl.BlockSpec((1, tt, hd), kv_map),
             pl.BlockSpec((1, tt), kv_scale_tile),
-            pl.BlockSpec((1, tt, hd), kv_tile),
+            pl.BlockSpec((1, tt, hd), kv_map),
             pl.BlockSpec((1, tt), kv_scale_tile),
         ],
         out_specs=[
-            pl.BlockSpec((1, tq, g, hd),
-                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
-            pl.BlockSpec((1, tq, g, 1),
-                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
-            pl.BlockSpec((1, tq, g, 1),
-                         lambda i, qi, ti, len_ref, off_ref: (i, qi, 0, 0)),
+            pl.BlockSpec((1, tq, g, hd), q_map),
+            pl.BlockSpec((1, tq, g, 1), q_map),
+            pl.BlockSpec((1, tq, g, 1), q_map),
         ],
         scratch_shapes=[
             pltpu.VMEM((tq * g, hd), jnp.float32),
@@ -307,6 +361,9 @@ def attn_q8_pallas(
             pltpu.VMEM((tq * g, 1), jnp.float32),
         ],
     )
+    scalars = [kv_len.astype(jnp.int32), q_offset.astype(jnp.int32)]
+    if paged:
+        scalars.append(table.astype(jnp.int32))
     out, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -316,26 +373,33 @@ def attn_q8_pallas(
             jax.ShapeDtypeStruct((r, nq * tq, g, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(kv_len.astype(jnp.int32), q_offset.astype(jnp.int32),
-      q_rot.astype(jnp.float32), k_codes, k_scale.astype(jnp.float32),
-      v_codes, v_scale.astype(jnp.float32))
+    )(*scalars, q_rot.astype(jnp.float32), k_codes,
+      k_scale.astype(jnp.float32), v_codes, v_scale.astype(jnp.float32))
     if pad_q:
         out, m, l = out[:, :tq_total], m[:, :tq_total], l[:, :tq_total]
     return out, m, l
 
 
+def _drop_table_ref(kernel, len_ref, off_ref, tbl_ref, *rest):
+    """Adapter for the paged call: the block table is scalar-prefetch
+    operand #3 (index maps read it) but the kernel body has no use for it."""
+    return kernel(len_ref, off_ref, *rest)
+
+
 def attn_decode_q8_pallas(
     q_rot: jax.Array,    # (R, G, HD) f32 — ROTATED queries, R = B*KV rows
-    k_codes: jax.Array,  # (R, T, HD) int8
-    k_scale: jax.Array,  # (R, T) f16/f32
-    v_codes: jax.Array,  # (R, T, HD) int8
-    v_scale: jax.Array,  # (R, T) f16/f32
+    k_codes: jax.Array,  # (R, T, HD) int8 — or (PR, BS, HD) pooled blocks
+    k_scale: jax.Array,  # (R, T) f16/f32 — or (PR, BS)
+    v_codes: jax.Array,  # (R, T, HD) int8 — or (PR, BS, HD)
+    v_scale: jax.Array,  # (R, T) f16/f32 — or (PR, BS)
     kv_len: jax.Array,   # (R,) int32 — valid cache positions per row
+    table: jax.Array | None = None,  # (R, MAXB) int32 pool-row block table
     *,
     sm_scale: float,
     tt: int = DEFAULT_TT,
     interpret: bool = True,
     early_exit: bool = True,
+    block_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Decode attention over the quantized cache: the TQ=1, causal-free
     specialization of :func:`attn_q8_pallas` (decode attends a cache that
@@ -346,8 +410,9 @@ def attn_decode_q8_pallas(
     r = q_rot.shape[0]
     acc, m, l = attn_q8_pallas(
         q_rot[:, None], k_codes, k_scale, v_codes, v_scale, kv_len,
-        jnp.zeros((r,), jnp.int32), sm_scale=sm_scale, causal=False,
-        tq=1, tt=tt, interpret=interpret, early_exit=early_exit)
+        jnp.zeros((r,), jnp.int32), table, sm_scale=sm_scale, causal=False,
+        tq=1, tt=tt, interpret=interpret, early_exit=early_exit,
+        block_size=block_size)
     return acc[:, 0], m[:, 0], l[:, 0]
 
 
@@ -460,6 +525,33 @@ def prefill_attn_q8_ref(
     return unchunk(acc), unchunk(m), unchunk(l)
 
 
+def paged_row_table(table: jax.Array, kv_heads: int) -> jax.Array:
+    """Expand a per-slot pool-BLOCK table (B, MAXB) to the per-(b, kv_head)
+    pool-ROW table (B*KV, MAXB) the kernel's index maps consume: pooled
+    planes flatten (num_blocks, KV, ...) to row ``block*KV + head``, so the
+    head offset folds into the table once, outside the kernel."""
+    b, maxb = table.shape
+    rows = (table[:, None, :] * kv_heads
+            + jnp.arange(kv_heads, dtype=table.dtype)[None, :, None])
+    return rows.reshape(b * kv_heads, maxb)
+
+
+def paged_to_dense(cache: dict) -> dict:
+    """Gather the dense per-slot view back out of a paged cache dict —
+    ``pool[table]`` per plane. The jnp reference path (non-TPU backends)
+    runs the UNCHANGED dense reference math over this view, so paged ref
+    results are bitwise identical to dense by construction; it is also the
+    bit-parity oracle the paged kernel is tested against."""
+    nb, kvh, bs, _ = cache["k"].shape
+    tbl = cache["table"]
+
+    def g(leaf):  # (NB, KV, BS, X) -> (B, KV, MAXB*BS, X)
+        x = jnp.swapaxes(leaf[tbl], 1, 2)  # (B, KV, MAXB, BS, X)
+        return x.reshape(x.shape[0], kvh, -1, x.shape[-1])
+
+    return {key: g(cache[key]) for key in ("k", "v", "k_scale", "v_scale")}
+
+
 def decode_attn_q8(
     q: jax.Array,            # (B, KV, G, 1, HD) UNROTATED queries
     cache: dict,             # {"k","v": int8 (B,KV,T,HD); "k_scale","v_scale": (B,KV,T,1)}
@@ -480,6 +572,12 @@ def decode_attn_q8(
     the values every later step will read back — greedy streams match the
     dequantize-then-attend reference bit-for-decision.
 
+    A PAGED cache dict (extra ``"table"`` key; planes laid out
+    (num_blocks, KV, block_size, HD|1) — serve/paged.py) routes through the
+    same kernel with the block table as a third scalar-prefetch operand, or
+    through the dense reference over the gathered :func:`paged_to_dense`
+    view.
+
     Returns (B, KV, G, 1, HD) f32."""
     from repro.kernels.ops import auto_interpret  # local: avoid import cycle
 
@@ -489,29 +587,46 @@ def decode_attn_q8(
     sm_scale = 1.0 / math.sqrt(hd)
     use_kernel = _use_kernel(backend, hd, interpret=interpret)
     q_rot = fwht(q[..., 0, :].astype(jnp.float32))  # (B, KV, G, HD)
+    paged = "table" in cache
 
     if use_kernel:
+        cache_len = (cache["table"].shape[1] * cache["k"].shape[2]
+                     if paged else cache["k"].shape[2])
         if tt is None:
             # autotune-cache lookup keyed on (cache length, head_dim,
             # kv heads); deterministic defaults in interpret mode
             from repro.kernels.autotune import get_attn_tiles
-            _, tt = get_attn_tiles(cache["k"].shape[2], hd, kv,
-                                   interpret=interpret)
+            _, tt = get_attn_tiles(cache_len, hd, kv, interpret=interpret)
         r = b * kv
-        acc, m, l = attn_decode_q8_pallas(
-            q_rot.reshape(r, g, hd),
-            cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
-            cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
-            jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
-            sm_scale=sm_scale, tt=tt, interpret=interpret,
-            early_exit=early_exit)
+        if paged:
+            nb, _, bs, _ = cache["k"].shape
+            pool_rows = nb * kv
+            acc, m, l = attn_decode_q8_pallas(
+                q_rot.reshape(r, g, hd),
+                cache["k"].reshape(pool_rows, bs, hd),
+                cache["k_scale"].reshape(pool_rows, bs),
+                cache["v"].reshape(pool_rows, bs, hd),
+                cache["v_scale"].reshape(pool_rows, bs),
+                jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
+                paged_row_table(cache["table"], kv),
+                sm_scale=sm_scale, tt=tt, interpret=interpret,
+                early_exit=early_exit, block_size=bs)
+        else:
+            acc, m, l = attn_decode_q8_pallas(
+                q_rot.reshape(r, g, hd),
+                cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
+                cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
+                jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
+                sm_scale=sm_scale, tt=tt, interpret=interpret,
+                early_exit=early_exit)
         acc = acc.reshape(b, kv, g, hd)
         m = m.reshape(b, kv, g, 1)
         l = l.reshape(b, kv, g, 1)
     else:
+        dc = paged_to_dense(cache) if paged else cache
         acc, m, l = decode_attn_q8_ref(
-            q_rot, cache["k"], cache["k_scale"], cache["v"],
-            cache["v_scale"], kv_len, sm_scale=sm_scale)
+            q_rot, dc["k"], dc["k_scale"], dc["v"],
+            dc["v_scale"], kv_len, sm_scale=sm_scale)
 
     kc_tok, ks_tok = k_tok
     vc_tok, vs_tok = v_tok
@@ -565,29 +680,48 @@ def prefill_attn_q8(
     sm_scale = 1.0 / math.sqrt(hd)
     use_kernel = _use_kernel(backend, hd, interpret=interpret)
     q_rot = fwht(jnp.swapaxes(q, 2, 3).astype(jnp.float32))  # (B,KV,TQ,G,HD)
+    paged = "table" in cache
 
     if use_kernel:
+        cache_len = (cache["table"].shape[1] * cache["k"].shape[2]
+                     if paged else cache["k"].shape[2])
         if tq is None or tt is None:
             from repro.kernels.autotune import get_attn_tiles
             tuned_tq, tuned_tt = get_attn_tiles(
-                cache["k"].shape[2], hd, kv, interpret=interpret)
+                cache_len, hd, kv, interpret=interpret)
             tq = tq if tq else tuned_tq
             tt = tt if tt else tuned_tt
         r = b * kv
-        acc, m, l = attn_q8_pallas(
-            q_rot.reshape(r, tq_total, g, hd),
-            cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
-            cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
-            jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
-            jnp.broadcast_to(q_offset[:, None], (b, kv)).reshape(r),
-            sm_scale=sm_scale, causal=True, tq=tq, tt=tt,
-            interpret=interpret, early_exit=early_exit)
+        if paged:
+            nb, _, bs, _ = cache["k"].shape
+            pool_rows = nb * kv
+            acc, m, l = attn_q8_pallas(
+                q_rot.reshape(r, tq_total, g, hd),
+                cache["k"].reshape(pool_rows, bs, hd),
+                cache["k_scale"].reshape(pool_rows, bs),
+                cache["v"].reshape(pool_rows, bs, hd),
+                cache["v_scale"].reshape(pool_rows, bs),
+                jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
+                jnp.broadcast_to(q_offset[:, None], (b, kv)).reshape(r),
+                paged_row_table(cache["table"], kv),
+                sm_scale=sm_scale, causal=True, tq=tq, tt=tt,
+                interpret=interpret, early_exit=early_exit, block_size=bs)
+        else:
+            acc, m, l = attn_q8_pallas(
+                q_rot.reshape(r, tq_total, g, hd),
+                cache["k"].reshape(r, -1, hd), cache["k_scale"].reshape(r, -1),
+                cache["v"].reshape(r, -1, hd), cache["v_scale"].reshape(r, -1),
+                jnp.broadcast_to(kv_len[:, None], (b, kv)).reshape(r),
+                jnp.broadcast_to(q_offset[:, None], (b, kv)).reshape(r),
+                sm_scale=sm_scale, causal=True, tq=tq, tt=tt,
+                interpret=interpret, early_exit=early_exit)
         acc = jnp.swapaxes(acc.reshape(b, kv, tq_total, g, hd), 2, 3)
         l = jnp.swapaxes(l.reshape(b, kv, tq_total, g, 1), 2, 3)
     else:
+        dc = paged_to_dense(cache) if paged else cache
         acc, m, l = prefill_attn_q8_ref(
-            jnp.swapaxes(q_rot, 2, 3), cache["k"], cache["k_scale"],
-            cache["v"], cache["v_scale"], kv_len, q_offset,
+            jnp.swapaxes(q_rot, 2, 3), dc["k"], dc["k_scale"],
+            dc["v"], dc["v_scale"], kv_len, q_offset,
             sm_scale=sm_scale, causal=True, chunk=tq if tq else DEFAULT_TQ)
     out = acc / l
     # one inverse FWHT per query span — outside the tile loops, outside the

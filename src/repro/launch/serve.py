@@ -118,6 +118,16 @@ def main() -> None:
                     help="rotated-int8 KV cache (8.25 bits/element; fused "
                          "Pallas decode attention on TPU, einsum fallback "
                          "elsewhere)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block-pool allocator + per-slot "
+                         "block table over the rotated-int8 planes "
+                         "(requires --kv-quant; concurrency bounded by live "
+                         "tokens instead of slots x max_len reservation)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="pool size for --paged (default: enough for every "
+                         "slot to reach max_len, i.e. dense-equivalent)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per pool block for --paged")
     ap.add_argument("--act-quant", action="store_true",
                     help="W3A8 integer compute path: quantize activations "
                          "to int8 in the rotation domain and contract "
@@ -228,10 +238,16 @@ def main() -> None:
                       tp_shard_map=True if args.tp_shard_map else None,
                       max_queue=args.max_queue, shed_policy=args.shed_policy,
                       watchdog_timeout_s=args.watchdog_timeout_s,
-                      faults=faults)
+                      faults=faults, paged=args.paged,
+                      num_blocks=args.num_blocks, block_size=args.block_size)
     if args.kv_quant:
         print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
               f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
+    if args.paged:
+        st0 = eng.stats()
+        print(f"paged pool: {st0['pool_blocks']} blocks x "
+              f"{st0['block_size']} tokens "
+              f"({st0['cache_bytes_reserved']/1e6:.2f}MB reserved)")
     if args.act_quant:
         print("act_quant: W3A8 integer compute path "
               "(int8 rotation-domain activations, int32 accumulation)")

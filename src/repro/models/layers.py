@@ -386,16 +386,41 @@ def attention_apply(
         # encode the new K/V span and write codes+scales at pos.
         kq, ks = kv_encode(k)
         vq, vs = kv_encode(v)
-        upd = jax.vmap(partial(jax.lax.dynamic_update_slice_in_dim, axis=1))
-        ck = upd(cache["k"], kq, pos_vec)
-        cks = upd(cache["k_scale"], ks.astype(cache["k_scale"].dtype), pos_vec)
-        cv = upd(cache["v"], vq, pos_vec)
-        cvs = upd(cache["v_scale"], vs.astype(cache["v_scale"].dtype), pos_vec)
-        ck = shard_hint(ck, rt, "batch", "kv_heads", "kv_seq", None)
-        cv = shard_hint(cv, rt, "batch", "kv_heads", "kv_seq", None)
-        cks = shard_hint(cks, rt, "batch", "kv_heads", "kv_seq", None)
-        cvs = shard_hint(cvs, rt, "batch", "kv_heads", "kv_seq", None)
-        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        if "table" in cache:
+            # paged pool: scatter the span through the block table. Leaves
+            # are (NB, KV, BS, X); token p of slot b lands in block
+            # tbl[b, p // BS] at offset p % BS. Slots whose rows point at
+            # the reserved null block 0 (padding / inactive) scatter finite
+            # garbage there — never read, masked by kv_len.
+            tbl = cache["table"]
+            bs = cache["k"].shape[2]
+            span = pos_vec[:, None] + jnp.arange(t)  # (B, T)
+            blk = jnp.take_along_axis(tbl, span // bs, axis=1)  # (B, T)
+            off = span % bs
+
+            def scat(pool, vals):  # pool (NB, KV, BS, X); vals (B, KV, T, X)
+                return pool.at[blk, :, off, :].set(
+                    jnp.swapaxes(vals, 1, 2).astype(pool.dtype))
+
+            new_cache = {"k": scat(cache["k"], kq),
+                         "v": scat(cache["v"], vq),
+                         "k_scale": scat(cache["k_scale"], ks),
+                         "v_scale": scat(cache["v_scale"], vs)}
+            read_cache = dict(new_cache, table=tbl)
+        else:
+            upd = jax.vmap(partial(jax.lax.dynamic_update_slice_in_dim, axis=1))
+            ck = upd(cache["k"], kq, pos_vec)
+            cks = upd(cache["k_scale"], ks.astype(cache["k_scale"].dtype),
+                      pos_vec)
+            cv = upd(cache["v"], vq, pos_vec)
+            cvs = upd(cache["v_scale"], vs.astype(cache["v_scale"].dtype),
+                      pos_vec)
+            ck = shard_hint(ck, rt, "batch", "kv_heads", "kv_seq", None)
+            cv = shard_hint(cv, rt, "batch", "kv_heads", "kv_seq", None)
+            cks = shard_hint(cks, rt, "batch", "kv_heads", "kv_seq", None)
+            cvs = shard_hint(cvs, rt, "batch", "kv_heads", "kv_seq", None)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            read_cache = new_cache
         if t == 1:
             # single-token decode WITHOUT the scan-carry mechanism (hybrid's
             # shared attention block, or decode_token_cache=False): same
@@ -413,7 +438,7 @@ def attention_apply(
             # cache pass — the decode path's self-token merge generalized
             # to a width-t span. The full cache buffer is NEVER
             # dequantized: chunked prefill streams int8 codes only.
-            out = _prefill_q8(q, new_cache, pos_vec + t, pos_vec, rt)
+            out = _prefill_q8(q, read_cache, pos_vec + t, pos_vec, rt)
         out = out.astype(rt.compute_dtype)
         out = out.reshape(b, h, t, hd).swapaxes(1, 2).reshape(b, t, h * hd)
         return dense(out, p["wo"], rt), new_cache

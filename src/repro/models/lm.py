@@ -221,8 +221,16 @@ def _run_decoder(params, x, rt, cfg, *, cache, pos, memory=None, causal=True):
         if cache is not None and x.shape[1] == 1 and rt.decode_token_cache:
             return _run_decoder_token(params, x, rt, cfg, cache=cache, pos=pos)
 
+        # Paged pool: the block table (B, MAXB) has no layer axis, so it
+        # cannot ride the scan xs — thread it via closure instead and merge
+        # it into each layer's attn-cache slice inside the body.
+        tbl = cache.get("table") if cache is not None else None
+
         def body(xc, inp):
             lp, c = inp
+            if tbl is not None:
+                c = dict(c)
+                c["attn"] = dict(c["attn"], table=tbl)
             xnew, cnew, aux = _dense_layer_apply(
                 lp, xc, rt, cfg, cache=c, pos=pos, memory=memory, causal=causal)
             return xnew, (cnew, aux)
@@ -279,6 +287,20 @@ def _write_token_kv(stacked, tok, layer_idx, pos_vec):
     return jax.vmap(upd, in_axes=(1, 0, 0), out_axes=1)(stacked, tok, pos_vec)
 
 
+def _write_token_kv_paged(stacked, tok, layer_idx, tbl, pos_vec):
+    """Paged analogue of :func:`_write_token_kv`: scatter (B, KV, 1, HD)
+    token K/V into the stacked pool (L, NB, KV, BS, HD) through the block
+    table. Slot b's token at logical position p lands in pool block
+    ``tbl[b, p // BS]`` at offset ``p % BS``. Inactive slots must keep
+    their table rows pointing at the reserved null block 0 so their
+    (garbage but finite) writes never land in a live block."""
+    bs = stacked.shape[3]
+    blk = jnp.take_along_axis(tbl, (pos_vec // bs)[:, None], axis=1)[:, 0]
+    off = pos_vec % bs
+    return stacked.at[layer_idx, blk, :, off, :].set(
+        tok[:, :, 0, :].astype(stacked.dtype))
+
+
 # attn-cache leaf -> the token-slice key attention_apply returns for it.
 # fp caches carry {k, v}; rotated-int8 caches also carry the scale planes.
 _TOK_KEYS = {"k": "k_tok", "v": "v_tok",
@@ -299,11 +321,14 @@ def _run_decoder_token(params, x, rt, cfg, *, cache, pos):
     pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     has_x = "xattn" in cache
     leaf_keys = sorted(cache["attn"].keys())
+    tbl = cache.get("table")
 
     def body(carry, inp):
         xc, cdict, i = carry
         layer_attn = {lk: jax.lax.dynamic_index_in_dim(cdict[lk], i, 0, False)
                       for lk in leaf_keys}
+        if tbl is not None:
+            layer_attn["table"] = tbl
         if has_x:
             lp, xk, xv = inp
             layer_cache = {"attn": layer_attn, "xattn": {"k": xk, "v": xv}}
@@ -312,9 +337,14 @@ def _run_decoder_token(params, x, rt, cfg, *, cache, pos):
             layer_cache = {"attn": layer_attn}
         xnew, cnew, aux = _dense_layer_apply(
             lp, xc, rt, cfg, cache=layer_cache, pos=pos_vec, token_cache=True)
-        cdict = {lk: _write_token_kv(cdict[lk], cnew["attn"][_TOK_KEYS[lk]],
-                                     i, pos_vec)
-                 for lk in leaf_keys}
+        if tbl is not None:
+            cdict = {lk: _write_token_kv_paged(
+                cdict[lk], cnew["attn"][_TOK_KEYS[lk]], i, tbl, pos_vec)
+                for lk in leaf_keys}
+        else:
+            cdict = {lk: _write_token_kv(cdict[lk], cnew["attn"][_TOK_KEYS[lk]],
+                                         i, pos_vec)
+                     for lk in leaf_keys}
         return (xnew, cdict, i + 1), aux
 
     xs = (params["layers"], cache["xattn"]["k"], cache["xattn"]["v"]) if has_x \

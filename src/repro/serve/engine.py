@@ -171,10 +171,23 @@ class ServeEngine:
                  clock=None, max_queue: Optional[int] = None,
                  shed_policy: str = "reject",
                  watchdog_timeout_s: Optional[float] = None,
-                 faults=None):
+                 faults=None, paged: bool = False,
+                 num_blocks: Optional[int] = None, block_size: int = 16):
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
         self.mesh = mesh
+        if mesh is not None and mesh.shape.get("data", 1) > 1:
+            # the serving layout head-shards the KV planes over "model" and
+            # keeps the slot batch whole on every device — nothing below
+            # partitions over "data", so a multi-way data axis would place
+            # every "replicated" leaf wrong silently. Name the limitation
+            # instead (ROADMAP: data-parallel serving is future work).
+            raise ValueError(
+                f"ServeEngine assumes a serving mesh with a trivial 'data' "
+                f"axis (data=1); got data={mesh.shape['data']}. The slot "
+                f"batch is not data-sharded — reshape the mesh so all "
+                f"devices sit on the 'model' axis for tensor-parallel "
+                f"serving.")
         if mesh is not None:
             # Tensor-parallel serving (serve/tp.py): derive the serving
             # Rules, place the packed planes column-sharded (and fp leaves
@@ -235,12 +248,47 @@ class ServeEngine:
         self.preemptions = 0        # live slots swapped out mid-flight
         self.resumes = 0            # swapped requests scattered back in
         self.stalled_steps = 0      # decode steps slower than the watchdog
+        # --- paged-pool counters (zero for dense engines) ---
+        self.blocks_swapped = 0     # blocks host-swapped by preemption
+        self.pool_exhausted = 0     # slots error-finished on a dry pool
+        self.max_concurrent = 0     # peak simultaneously-decoding requests
         # Runtime.kv_quant lays the attention cache out as rotated-int8
         # codes + fp16 scales (serve/kv_quant.py); cache_dtype is the fp
         # cache element type otherwise (f32 default keeps CPU tests exact,
         # bf16 is the deployment baseline the bytes ratio is quoted against)
-        self.cache = lm.init_cache(cfg, slots, max_len, dtype=cache_dtype,
-                                   kv_quant=self.rt.kv_quant)
+        self.paged = bool(paged)
+        if self.paged:
+            # paged pool (serve/paged.py): cache positions come from a
+            # shared ref-counted block pool instead of a per-slot max_len
+            # reservation — admission is bounded by LIVE tokens, not slots
+            from repro.serve import paged as paged_mod
+            if not self.rt.kv_quant:
+                raise ValueError(
+                    "paged=True requires Runtime(kv_quant=True): the block "
+                    "pool is laid out over the rotated-int8 codes + scale "
+                    "planes")
+            n_pos = max_len + (cfg.frontend_len if cfg.frontend else 0)
+            self.block_size = int(block_size)
+            # per-slot table width: enough entries to address every logical
+            # position a slot can reach
+            self._maxb = -(-n_pos // self.block_size)
+            if num_blocks is None:
+                # default: dense-equivalent capacity (every slot could run
+                # to max_len) + the reserved null block — callers shrink it
+                # to realize the memory win
+                num_blocks = slots * self._maxb + 1
+            self.num_blocks = int(num_blocks)
+            self.pool = paged_mod.BlockPool(self.num_blocks, self.block_size)
+            self._table = np.zeros((slots, self._maxb), np.int32)
+            self._slot_blocks: list[list[int]] = [[] for _ in range(slots)]
+            self.cache = paged_mod.init_paged_cache(
+                cfg, self.num_blocks, self.block_size)
+        else:
+            self.block_size = None
+            self.num_blocks = None
+            self.pool = None
+            self.cache = lm.init_cache(cfg, slots, max_len, dtype=cache_dtype,
+                                       kv_quant=self.rt.kv_quant)
         if mesh is not None:
             # per-device KV-cache shards from step 0: codes + scale planes
             # head-sharded over `model` (replicated when GQA doesn't divide)
@@ -314,7 +362,7 @@ class ServeEngine:
 
     # --- compiled kernels -------------------------------------------------
     def _prefill_impl(self, params, cache, tokens, slots, last_idx, pos0,
-                      keys, temp, top_k, top_p, *, plen, fresh):
+                      keys, temp, top_k, top_p, table=None, *, plen, fresh):
         """One admission wave: tokens (G, plen) for slot ids ``slots`` (G,).
 
         ``fresh=True`` starts each admitted slot from a ZEROED state (the
@@ -322,33 +370,57 @@ class ServeEngine:
         ``fresh=False`` continues from the slot's current state (the
         SSM/hybrid chunk ladder). ``keys`` is a (G, 2) batch of per-request
         PRNG keys (None for an all-greedy wave: no PRNG in the trace).
+
+        PAGED engines pass ``table`` (G, MAXB) — the admitted slots' block
+        rows. Writes scatter through the table into the shared pool, so
+        there is no per-slot gather/zero/scatter: freshly allocated blocks
+        may hold a finished request's stale FINITE codes, which the kv_len
+        mask zeroes exactly (the finite-garbage invariant; serve/paged.py).
         Returns (cache, sampled (G,) first tokens, last-real-token logits
         (G, V))."""
-        g = tokens.shape[0]
-        if fresh:
-            slot_cache = _zero_slots_like(cache, g)
+        if table is not None:
+            model_cache = {"attn": cache["attn"], "table": table}
+            logits, new_cache, _ = lm.forward(
+                params, tokens, self.rt, self.cfg, cache=model_cache,
+                pos=pos0, last_idx=last_idx)
+            cache = {"attn": new_cache["attn"]}
         else:
-            slot_cache = _take_slots(cache, slots)
-        # pad tokens run through the model (masked later via pos), but the
-        # head + first sampled token come from the TRUE last prompt
-        # position only — one V-row per slot, not V logits per pad
-        logits, new_slot_cache, _ = lm.forward(
-            params, tokens, self.rt, self.cfg, cache=slot_cache, pos=pos0,
-            last_idx=last_idx)
-        cache = _put_slots(cache, new_slot_cache, slots)
+            g = tokens.shape[0]
+            if fresh:
+                slot_cache = _zero_slots_like(cache, g)
+            else:
+                slot_cache = _take_slots(cache, slots)
+            # pad tokens run through the model (masked later via pos), but
+            # the head + first sampled token come from the TRUE last prompt
+            # position only — one V-row per slot, not V logits per pad
+            logits, new_slot_cache, _ = lm.forward(
+                params, tokens, self.rt, self.cfg, cache=slot_cache,
+                pos=pos0, last_idx=last_idx)
+            cache = _put_slots(cache, new_slot_cache, slots)
         last = logits[:, 0]
         tok = _sample_slots(last, keys, jnp.zeros_like(slots), temp,
                             top_k, top_p)
         return cache, tok, last
 
+    def _model_cache(self, cache, table):
+        """The cache pytree the model sees: the engine cache, plus the
+        block table threaded OUTSIDE it for paged engines — the table rides
+        the jitted calls as its own argument so the cache-donation probe
+        (``jax.tree.leaves(self.cache)``) never sees it."""
+        return cache if table is None else {"attn": cache["attn"],
+                                            "table": table}
+
     def _decode_impl(self, params, cache, tokens, positions, keys, gen,
-                     temp, top_k, top_p):
+                     temp, top_k, top_p, table=None):
         """tokens (S, 1); per-slot positions (S,). Sampling stays on device
         under per-slot vectors: the step's only fetch is the (S,) token
         vector. ``gen`` (S,) is each request's own token index — folded
         into its key so row draws don't depend on slot or batchmates."""
         logits, new_cache = lm.decode_step(
-            params, tokens, cache, positions, self.rt, self.cfg)
+            params, tokens, self._model_cache(cache, table), positions,
+            self.rt, self.cfg)
+        if table is not None:
+            new_cache = {"attn": new_cache["attn"]}
         last = logits[:, 0]
         tok = _sample_slots(last, keys, gen, temp, top_k, top_p)
         # numeric-health check folded into the step: a slot whose logits
@@ -359,10 +431,14 @@ class ServeEngine:
         ok = lm.finite_rows(last)
         return jnp.where(ok, tok, _POISONED), new_cache
 
-    def _decode_logits_impl(self, params, cache, tokens, positions):
+    def _decode_logits_impl(self, params, cache, tokens, positions,
+                            table=None):
         """Pre-overhaul decode: ship logits out, sample on host."""
         logits, new_cache = lm.decode_step(
-            params, tokens, cache, positions, self.rt, self.cfg)
+            params, tokens, self._model_cache(cache, table), positions,
+            self.rt, self.cfg)
+        if table is not None:
+            new_cache = {"attn": new_cache["attn"]}
         return logits[:, 0], new_cache
 
     # --- request lifecycle ------------------------------------------------
@@ -456,10 +532,24 @@ class ServeEngine:
                 break
         else:
             return False
-        sub = jax.device_get(
-            _take_slots(self.cache, jnp.asarray([s], jnp.int32)))
-        self._swapped[rid] = {"cache": sub, "pos": int(self.pos[s]),
-                              "next_tok": int(self._next_tok[s])}
+        if self.paged:
+            # gather the slot's BLOCKS (pool axis) to host, then release
+            # them: the swap entry is self-contained, so the blocks can be
+            # reused immediately — resume scatters into fresh blocks with
+            # bit-identical contents
+            blocks = list(self._slot_blocks[s])
+            sub = jax.device_get(
+                _take_slots(self.cache, jnp.asarray(blocks, jnp.int32)))
+            self._swapped[rid] = {"cache": sub, "pos": int(self.pos[s]),
+                                  "next_tok": int(self._next_tok[s]),
+                                  "nblocks": len(blocks)}
+            self.blocks_swapped += len(blocks)
+            self._release_blocks(s, zero=False)
+        else:
+            sub = jax.device_get(
+                _take_slots(self.cache, jnp.asarray([s], jnp.int32)))
+            self._swapped[rid] = {"cache": sub, "pos": int(self.pos[s]),
+                                  "next_tok": int(self._next_tok[s])}
         # free the slot WITHOUT finishing the request (no terminal event:
         # the stream simply pauses until resume)
         self.active[s] = None
@@ -472,17 +562,66 @@ class ServeEngine:
         self.scheduler.add(req)
         return True
 
-    def _resume_slot(self, req: Request, s: int) -> None:
+    def _release_blocks(self, s: int, *, zero: bool) -> None:
+        """Drop slot ``s``'s references into the block pool and clear its
+        table row. ``zero=True`` (quarantine) first zeroes the blocks this
+        slot holds EXCLUSIVELY — NaN is the one garbage the kv_len mask
+        cannot neutralize (0 * NaN), so poisoned blocks must not reenter
+        the free list dirty; shared blocks hold clean prompt codes some
+        other holder is still reading."""
+        from repro.serve import paged as paged_mod
+        blocks = self._slot_blocks[s]
+        if zero and blocks:
+            exclusive = [b for b in blocks if self.pool.ref[b] == 1]
+            if exclusive:
+                self.cache = paged_mod.zero_blocks(self.cache, exclusive)
+        for b in blocks:
+            self.pool.decref(b)
+        self._slot_blocks[s] = []
+        self._table[s, :] = paged_mod.NULL_BLOCK
+
+    def _resume_slot(self, req: Request, s: int) -> bool:
         """Scatter a swapped request's cache rows back into slot ``s`` and
         rebind its stream state. Lifecycle stamps are NOT reset — queue
-        wait and TTFT stay measured from the original submission."""
-        sw = self._swapped.pop(req.rid)
-        self.cache = _put_slots(
-            self.cache, jax.tree.map(jnp.asarray, sw["cache"]),
-            jnp.asarray([s], jnp.int32))
+        wait and TTFT stay measured from the original submission. Returns
+        True when the slot was consumed; paged engines return False when
+        the pool cannot supply the blocks right now (request requeued,
+        swap entry kept) or the request can never fit (error-finished)."""
+        sw = self._swapped[req.rid]
+        if self.paged:
+            from repro.serve.paged import PoolExhausted
+            n = sw["nblocks"]
+            if n > self.pool.capacity:
+                # can NEVER fit: finish loudly instead of spinning forever
+                self._swapped.pop(req.rid)
+                self.pool_exhausted += 1
+                self._terminal(req, FINISH_ERROR)
+                return False  # slot stays free; terminal event queued
+            blocks: list[int] = []
+            try:
+                for _ in range(n):
+                    blocks.append(self.pool.alloc())
+            except PoolExhausted:
+                for b in blocks:
+                    self.pool.decref(b)
+                self.scheduler.add(req)  # retry when blocks free up
+                return False
+            self._swapped.pop(req.rid)
+            self.cache = _put_slots(
+                self.cache, jax.tree.map(jnp.asarray, sw["cache"]),
+                jnp.asarray(blocks, jnp.int32))
+            self._slot_blocks[s] = blocks
+            self._table[s, :] = 0
+            self._table[s, :len(blocks)] = blocks
+        else:
+            self._swapped.pop(req.rid)
+            self.cache = _put_slots(
+                self.cache, jax.tree.map(jnp.asarray, sw["cache"]),
+                jnp.asarray([s], jnp.int32))
         self._install_slot(s, req, self._resolve(req), pos=sw["pos"],
                            next_tok=sw["next_tok"])
         self.resumes += 1
+        return True
 
     def generate(self, requests: Iterable[Request] = (),
                  ) -> Iterator[StreamEvent]:
@@ -590,7 +729,9 @@ class ServeEngine:
         for r in group:
             if r.rid in self._swapped:
                 # preempted mid-flight: scatter its rows back, no prefill
-                self._resume_slot(r, free.pop(0))
+                # (paged resume can fail allocation — slot stays free)
+                if self._resume_slot(r, free[0]):
+                    free.pop(0)
             elif len(r.prompt) == 0:
                 # malformed: an empty prompt would gather last_idx=-1 (a
                 # pad position) in the bucketed path. Reject it ALONE with
@@ -602,6 +743,31 @@ class ServeEngine:
                 events.append(self._pending_events.pop())  # deliver NOW
             else:
                 fresh.append(r)
+        if self.paged and fresh:
+            # allocate each prompt's block chain BEFORE the compiled wave;
+            # requests the pool cannot hold right now go back to the
+            # scheduler (decode progress frees blocks), and requests that
+            # can NEVER fit are error-finished instead of spinning
+            admitted: list[Request] = []
+            from repro.serve.paged import PoolExhausted
+            for r in fresh:
+                s = free[len(admitted)]  # the slot zip() will pair r with
+                try:
+                    blocks = self.pool.alloc_prompt(r.prompt)
+                except PoolExhausted:
+                    if -(-len(r.prompt) // self.block_size) > \
+                            self.pool.capacity:
+                        self.pool_exhausted += 1
+                        self._terminal(r, FINISH_ERROR)
+                        events.append(self._pending_events.pop())
+                    else:
+                        self.scheduler.add(r)  # retry when blocks free
+                    continue
+                self._slot_blocks[s] = blocks
+                self._table[s, :] = 0
+                self._table[s, :len(blocks)] = blocks
+                admitted.append(r)
+            fresh = admitted
         if not fresh:
             return events
         for r in fresh:
@@ -660,12 +826,13 @@ class ServeEngine:
                                 (0, bucket - p))
                          for r, p in zip(group, plens)])
         sps, keys, temp, top_k, top_p = self._group_sampling(group)
+        table = jnp.asarray(self._table[free]) if self.paged else None
         self.cache, tok, last = self._jit_prefill(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(free, jnp.int32),
             jnp.asarray([p - 1 for p in plens], jnp.int32),
             jnp.zeros(len(group), jnp.int32),
-            keys, temp, top_k, top_p, plen=bucket, fresh=True)
+            keys, temp, top_k, top_p, table, plen=bucket, fresh=True)
         return self._finish_admission(group, free, plens, sps, tok, last)
 
     def _admit_chunked(self, req: Request, s: int) -> list[StreamEvent]:
@@ -731,12 +898,23 @@ class ServeEngine:
         emitted token (terminal events carry finish reason + stats)."""
         if self.faults is not None:
             self.faults.before_decode(self)
+        events0: list[StreamEvent] = []
+        if self.paged:
+            # grow block chains for slots whose next write crosses a block
+            # boundary (preempting victims on a dry pool); exhaustion can
+            # finish slots, so re-check liveness before decoding
+            events0 = self._ensure_decode_blocks()
+            if not any(r is not None for r in self.active):
+                return events0
+        n_live = sum(r is not None for r in self.active)
+        self.max_concurrent = max(self.max_concurrent, n_live)
         toks = jnp.asarray(self._next_tok[:, None])
         positions = jnp.asarray(self.pos)
+        table = jnp.asarray(self._table) if self.paged else None
         probe = jax.tree.leaves(self.cache)
         if self.sample_on_host:
             logits, self.cache = self._jit_decode_logits(
-                self.params, self.cache, toks, positions)
+                self.params, self.cache, toks, positions, table)
             tok_np = None
         else:
             live = [s for s, r in enumerate(self.active) if r is not None]
@@ -753,7 +931,7 @@ class ServeEngine:
                 top_k, top_p = self._filter_vectors(self._top_k, self._top_p)
             tok_dev, self.cache = self._jit_decode(
                 self.params, self.cache, toks, positions,
-                keys, gen, temp, top_k, top_p)
+                keys, gen, temp, top_k, top_p, table)
             tok_np = np.asarray(tok_dev)  # THE step's one transfer
             self.host_syncs += 1
         self.decode_steps += 1
@@ -767,7 +945,7 @@ class ServeEngine:
             now = self._clock()
             self.stalled_steps += len(self.watchdog.failed(now))
             self.watchdog.beat(0, self.decode_steps, now=now)
-        events = []
+        events = events0
         for s, req in enumerate(self.active):
             if req is None:
                 continue
@@ -795,10 +973,55 @@ class ServeEngine:
             events.append(self._emit(s, req, tok))
         return events
 
+    def _ensure_decode_blocks(self) -> list[StreamEvent]:
+        """Paged decode admission control: before each step, every live
+        slot must own the block its next write lands in. On a dry pool,
+        preempt a victim (lowest priority, newest admission) to free its
+        blocks; when no victim exists the slot itself error-finishes — the
+        pool physically cannot hold it."""
+        from repro.serve.paged import PoolExhausted
+        events: list[StreamEvent] = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            need = int(self.pos[s]) // self.block_size + 1
+            while len(self._slot_blocks[s]) < need:
+                try:
+                    blk = self.pool.alloc()
+                except PoolExhausted:
+                    victim = self._pick_victim(exclude=s)
+                    if victim is not None and self.preempt(victim):
+                        continue  # victim's blocks are free now: retry
+                    self.pool_exhausted += 1
+                    events.append(self._finish_slot(
+                        s, req, FINISH_ERROR, token=None))
+                    break  # _finish_slot released this slot's blocks
+                self._slot_blocks[s].append(blk)
+                self._table[s, len(self._slot_blocks[s]) - 1] = blk
+        return events
+
+    def _pick_victim(self, *, exclude: int) -> Optional[int]:
+        """rid of the live request to preempt when the pool runs dry:
+        lowest priority first, newest admission breaks ties (it has the
+        least sunk prefill work)."""
+        best = None
+        for s, r in enumerate(self.active):
+            if r is None or s == exclude:
+                continue
+            key = (int(getattr(r, "priority", 0)), -(r.t_admit or 0.0))
+            if best is None or key < best[0]:
+                best = (key, r.rid)
+        return best[1] if best else None
+
     def _zero_slot(self, s: int) -> None:
-        """Eagerly re-zero one slot's cache rows (quarantine cleanup)."""
-        self.cache = _put_slots(self.cache, _zero_slots_like(self.cache, 1),
-                                jnp.asarray([s], jnp.int32))
+        """Eagerly re-zero one slot's cache rows (quarantine cleanup).
+        Paged engines already zeroed + freed the poisoned blocks in
+        ``_release_blocks`` (via ``_finish_slot``); only the host-side
+        counters remain."""
+        if not self.paged:
+            self.cache = _put_slots(self.cache,
+                                    _zero_slots_like(self.cache, 1),
+                                    jnp.asarray([s], jnp.int32))
         self.pos[s] = 0
         self._next_tok[s] = 0
 
@@ -817,6 +1040,11 @@ class ServeEngine:
         req.done = True
         req.finish_reason = reason
         req.t_done = self._clock()
+        if self.paged:
+            # blocks return to the pool the moment the stream ends;
+            # quarantine (reason="error") zeroes exclusively-held blocks
+            # first so NaN never reenters circulation
+            self._release_blocks(s, zero=(reason == FINISH_ERROR))
         self.active[s] = None
         self._slot_stop[s] = frozenset()
         self._temp[s] = 0.0
@@ -863,17 +1091,38 @@ class ServeEngine:
         (an attention-free arch reports 0)."""
         attn = self.cache.get("attn", {})
         attn_bytes = sum(a.nbytes for a in jax.tree.leaves(attn))
-        # divide by the buffer's REAL position count (frontend archs allocate
-        # max_len + frontend_len slots), not max_len, so the vision prefix
-        # isn't misbilled as per-decoded-token cost
-        n_pos = attn["k"].shape[3] if attn else 1
+        if self.paged:
+            # pool planes are (L, NB, KV, BS, *): NB * BS addressable
+            # positions, shared by every slot
+            n_tokens_cap = self.num_blocks * self.block_size
+        else:
+            # divide by the buffer's REAL position count (frontend archs
+            # allocate max_len + frontend_len slots), not max_len, so the
+            # vision prefix isn't misbilled as per-decoded-token cost
+            n_pos = attn["k"].shape[3] if attn else 1
+            n_tokens_cap = self.slots * n_pos
+        bytes_per_token = attn_bytes / max(n_tokens_cap, 1)
+        # reserved: bytes requests currently CLAIM (a dense engine claims
+        # its full B x max_len allocation for the engine's life; a paged
+        # engine claims only allocated blocks). live: pos-weighted bytes of
+        # tokens actually written — the gap between the two is the
+        # reservation waste the paged pool exists to reclaim.
+        live_tokens = int(sum(int(self.pos[s])
+                              for s, r in enumerate(self.active)
+                              if r is not None))
+        if self.paged:
+            reserved = bytes_per_token * self.pool.used() * self.block_size
+        else:
+            reserved = attn_bytes
         out = {
             "host_syncs": self.host_syncs,
             "tokens_decoded": self.tokens_decoded,
             "syncs_per_token": (self.host_syncs / self.tokens_decoded
                                 if self.tokens_decoded else float("nan")),
             "cache_bytes": self.cache_bytes,
-            "cache_bytes_per_token": attn_bytes / (self.slots * n_pos),
+            "cache_bytes_reserved": int(reserved),
+            "cache_bytes_live": int(bytes_per_token * live_tokens),
+            "cache_bytes_per_token": bytes_per_token,
             "decode_steps": self.decode_steps,
             "cache_donated": self.cache_donated,
             "cache_bytes_moved": self.cache_bytes_moved,
@@ -896,7 +1145,19 @@ class ServeEngine:
             "backend": self.rt.backend,
             "kv_quant": self.rt.kv_quant,
             "act_quant": self.rt.act_quant,
+            "max_concurrent": self.max_concurrent,
         }
+        if self.paged:
+            out.update(
+                paged=True,
+                block_size=self.block_size,
+                pool_blocks=self.pool.capacity,
+                pool_blocks_used=self.pool.used(),
+                pool_utilization=round(self.pool.utilization(), 4),
+                blocks_swapped=self.blocks_swapped,
+                pool_exhausted=self.pool_exhausted,
+                prefix_hits=self.pool.prefix_hits,
+            )
         if self.mesh is not None:
             from repro.serve import tp as tp_mod
             out["devices"] = self.mesh.devices.size

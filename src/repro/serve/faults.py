@@ -146,11 +146,22 @@ def inject_kv_nan(engine, *, slot: int = 0, plane: str = "k_scale",
         raise TypeError(
             f"plane {plane!r} is {leaf.dtype}: integer code planes cannot "
             f"hold {value!r}; poison a float scale plane instead")
-    # leaves are (L, B, H, P, ...): poison every layer/head of `slot` at
-    # the positions already written (never the unwritten tail, so the
-    # check can't silently pass or fail through mask conventions)
     upto = max(int(engine.pos[slot]), 1)
-    attn[plane] = leaf.at[:, slot, :, :upto].set(value)
+    if getattr(engine, "paged", False):
+        # paged pool: leaves are (L, NB, KV, BS, ...); route the poison
+        # through the slot's block table to the same logical positions the
+        # dense fault hits — the corruption a real driver bug would land in
+        # whatever blocks the slot happens to own
+        bs = engine.block_size
+        tbl = np.asarray(engine._table[slot])
+        p = np.arange(upto)
+        blk = tbl[p // bs]
+        attn[plane] = leaf.at[:, blk, :, p % bs].set(value)
+    else:
+        # leaves are (L, B, H, P, ...): poison every layer/head of `slot`
+        # at the positions already written (never the unwritten tail, so
+        # the check can't silently pass or fail through mask conventions)
+        attn[plane] = leaf.at[:, slot, :, :upto].set(value)
 
 
 def burst(n: int, vocab: int, *, seed: int = 0, plen: int = 8,

@@ -1,0 +1,262 @@
+"""Paged rotated-int8 KV cache: a block-pool allocator over the quantized
+code + scale planes.
+
+The dense engine reserves ``slots x max_len`` cache positions for the
+lifetime of every request — concurrency is capped by RESERVATION, not by
+live tokens. This module converts the rotated-int8 cache's byte savings
+into served capacity the way vLLM's PagedAttention converts fp16 savings:
+one shared pool of ``num_blocks`` fixed-size blocks, a per-slot int32 block
+table mapping logical position ``p`` to pool block ``table[slot, p // BS]``
+offset ``p % BS``, and a free-list allocator with ref-counted blocks.
+
+Layout
+------
+Pool planes are ``(L, num_blocks, KV, block_size, HD)`` int8 codes and
+``(L, num_blocks, KV, block_size, 1)`` fp16 scales — the dense
+``(L, B, KV, T, *)`` layout with the (batch, position) axes re-cut into
+(block, offset). Same rank means the engine's ``_take_slots``/``_put_slots``
+host-swap plumbing gathers/scatters BLOCKS (axis 1) verbatim, and
+``serve/tp.py`` head-sharding specs (kv_heads at axis 2) apply unchanged.
+
+**Block 0 is the reserved null block**: empty table entries point at it,
+and padded-bucket prefill writes for positions past a slot's allocation
+land there. It accumulates finite garbage that is never read (attention is
+masked by ``kv_len``), which is what makes admission zero-free: a freshly
+allocated block may hold a finished request's stale codes, but stale
+FINITE values behind the mask contribute exactly 0 — the engine only
+zeroes blocks when quarantining a numerically poisoned slot, because NaN
+is the one kind of garbage the mask cannot neutralize (``0 * NaN = NaN``).
+
+Prefix sharing
+--------------
+Requests whose prompts share a prefix of FULL blocks share those pool
+blocks via refcounts. Keys are CHAIN hashes (each block's hash folds in
+its predecessor's), because the K/V written at position ``p`` depend on
+every earlier token through causal attention — a content hash of one
+block alone would alias different contexts. Only full blocks are shared;
+the partial tail block is always private. Admission still prefills the
+whole prompt — a shared block is rewritten with bit-identical values
+(causal-prefix determinism), so sharing dedups MEMORY without touching
+the compiled path, and streams stay bit-identical to the dense engine.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockPool", "PoolExhausted", "init_paged_cache", "zero_blocks",
+           "NULL_BLOCK"]
+
+# Block 0 never leaves the pool: empty table entries and pad writes target
+# it, so a table row of zeros is always safe to gather/scatter through.
+NULL_BLOCK = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by :meth:`BlockPool.alloc` when no free block remains. The
+    engine turns this into admission backoff (requeue) or victim
+    preemption — never a crash mid-wave."""
+
+
+class BlockPool:
+    """Host-side free-list allocator with ref-counted blocks.
+
+    Pure bookkeeping — it never touches device memory. The engine owns the
+    device planes; this class decides which block ids are free, which are
+    shared (refcount > 1), and which prefix hashes map to which blocks.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (block 0 is the reserved "
+                             f"null block), got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.ref = np.zeros(num_blocks, np.int32)
+        self.ref[NULL_BLOCK] = 1  # pinned forever
+        # LIFO free list: most-recently-freed block is reallocated first
+        # (its planes are warmest in whatever cache hierarchy exists)
+        self._free = list(range(num_blocks - 1, NULL_BLOCK, -1))
+        # chain hash of a FULL prompt block -> block id holding it, and the
+        # inverse (to unregister on free)
+        self._prefix: dict[bytes, int] = {}
+        self._block_key: dict[int, bytes] = {}
+        # counters (surfaced through engine stats)
+        self.prefix_hits = 0
+        self.allocs = 0
+
+    # --- capacity ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (the null block is not allocatable)."""
+        return self.num_blocks - 1
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def used(self) -> int:
+        return self.capacity - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used() / self.capacity
+
+    # --- alloc / refcount -------------------------------------------------
+    def alloc(self) -> int:
+        """Pop a free block with refcount 1. Raises :class:`PoolExhausted`
+        when the pool is dry."""
+        if not self._free:
+            raise PoolExhausted(
+                f"block pool dry: {self.capacity} blocks all referenced")
+        blk = self._free.pop()
+        assert self.ref[blk] == 0, f"free-list block {blk} has refs"
+        self.ref[blk] = 1
+        self.allocs += 1
+        return blk
+
+    def incref(self, blk: int) -> None:
+        if blk == NULL_BLOCK:
+            return
+        assert self.ref[blk] > 0, f"incref on unallocated block {blk}"
+        self.ref[blk] += 1
+
+    def decref(self, blk: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        if blk == NULL_BLOCK:
+            return False
+        assert self.ref[blk] > 0, f"double free of block {blk}"
+        self.ref[blk] -= 1
+        if self.ref[blk] == 0:
+            key = self._block_key.pop(blk, None)
+            if key is not None:
+                self._prefix.pop(key, None)
+            self._free.append(blk)
+            return True
+        return False
+
+    # --- prefix sharing ---------------------------------------------------
+    @staticmethod
+    def chain_hashes(prompt: np.ndarray, block_size: int) -> list[bytes]:
+        """Chain hash per FULL block of ``prompt``: hash(i) covers tokens
+        [0, (i+1)*BS) — block i's content folds in every predecessor, so
+        two prompts share hash(i) iff their first (i+1)*BS tokens are
+        identical (the causal-attention sharing condition)."""
+        toks = np.asarray(prompt, np.int32)
+        out, h = [], b""
+        for i in range(len(toks) // block_size):
+            chunk = toks[i * block_size:(i + 1) * block_size]
+            h = hashlib.sha1(h + chunk.tobytes()).digest()
+            out.append(h)
+        return out
+
+    def lookup_prefix(self, key: bytes) -> Optional[int]:
+        """Live block holding this chain hash, or None."""
+        return self._prefix.get(key)
+
+    def register_prefix(self, key: bytes, blk: int) -> None:
+        """Publish ``blk`` as the holder of chain hash ``key`` (no-op if a
+        holder already exists — first writer wins; both wrote identical
+        bytes anyway)."""
+        if key not in self._prefix:
+            self._prefix[key] = blk
+            self._block_key[blk] = key
+
+    def alloc_prompt(self, prompt: np.ndarray) -> list[int]:
+        """Allocate the block chain for a prompt of ``len(prompt)`` tokens:
+        full prefix blocks are shared through the chain-hash map when a
+        live holder exists (incref, no new block), everything else is a
+        fresh allocation. All-or-nothing: on :class:`PoolExhausted` every
+        block taken so far is released before re-raising."""
+        n = len(prompt)
+        nblk = -(-n // self.block_size)  # ceil
+        keys = self.chain_hashes(prompt, self.block_size)
+        blocks: list[int] = []
+        try:
+            for i in range(nblk):
+                shared = self.lookup_prefix(keys[i]) if i < len(keys) else None
+                if shared is not None:
+                    self.incref(shared)
+                    self.prefix_hits += 1
+                    blocks.append(shared)
+                else:
+                    blk = self.alloc()
+                    if i < len(keys):  # full block: publish for sharers
+                        self.register_prefix(keys[i], blk)
+                    blocks.append(blk)
+        except PoolExhausted:
+            for blk in blocks:
+                self.decref(blk)
+            raise
+        return blocks
+
+    # --- invariants (property tests) --------------------------------------
+    def check(self, tables: Iterable[Iterable[int]] = ()) -> None:
+        """Assert allocator consistency: refcounts match the live tables,
+        the free list is disjoint from referenced blocks, and no block
+        leaked (referenced by nothing yet absent from the free list)."""
+        counts = np.zeros(self.num_blocks, np.int64)
+        for row in tables:
+            for blk in row:
+                if blk != NULL_BLOCK:
+                    counts[blk] += 1
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert NULL_BLOCK not in free, "null block escaped into free list"
+        assert self.ref[NULL_BLOCK] >= 1, "null block lost its pin"
+        for blk in range(1, self.num_blocks):
+            r = int(self.ref[blk])
+            assert r >= 0, f"negative refcount on block {blk}"
+            assert (blk in free) == (r == 0), (
+                f"block {blk}: ref={r} but free-list membership "
+                f"{blk in free}")
+            assert r >= counts[blk], (
+                f"block {blk}: {counts[blk]} table references exceed "
+                f"refcount {r}")
+        for key, blk in self._prefix.items():
+            assert self.ref[blk] > 0, f"prefix map points at freed block {blk}"
+            assert self._block_key.get(blk) == key, "prefix maps diverged"
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int):
+    """Zero-initialized paged pool pytree: ``{"attn": {k, v, k_scale,
+    v_scale}}`` with planes (L, num_blocks, KV, block_size, HD|1) — the
+    paged analogue of ``lm.init_cache(..., kv_quant=True)``. The block
+    table lives OUTSIDE this tree (it rides the jitted calls as an explicit
+    argument so cache-buffer donation probes stay exact)."""
+    from repro.core.fwht import is_pow2
+
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if not is_pow2(hd):
+        raise ValueError(f"paged kv cache needs a power-of-two head_dim, "
+                         f"got {hd}")
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(
+            f"paged KV cache supports pure-attention families "
+            f"(dense/vlm/moe); {cfg.family!r} carries recurrent or "
+            f"cross-attention state that has no block structure")
+    n_layers = cfg.num_layers
+    shape = (n_layers, num_blocks, kvh, block_size)
+    return {"attn": {
+        "k": jnp.zeros(shape + (hd,), jnp.int8),
+        "v": jnp.zeros(shape + (hd,), jnp.int8),
+        "k_scale": jnp.zeros(shape + (1,), jnp.float16),
+        "v_scale": jnp.zeros(shape + (1,), jnp.float16),
+    }}
+
+
+def zero_blocks(cache, blocks) -> dict:
+    """Zero the given pool blocks across every layer/plane — quarantine
+    cleanup for numerically poisoned blocks before they return to the free
+    list (stale FINITE garbage is harmless behind the kv_len mask; NaN is
+    not)."""
+    idx = jnp.asarray(list(blocks), jnp.int32)
+
+    def z(leaf):
+        shape = (leaf.shape[0], idx.shape[0]) + leaf.shape[2:]
+        return leaf.at[:, idx].set(jnp.zeros(shape, leaf.dtype))
+
+    return {"attn": {k: z(v) for k, v in cache["attn"].items()}}

@@ -275,16 +275,23 @@ def tp_decode_attn_q8(q, cache, k_tok, v_tok, kv_len, rules: R.Rules, *,
         return decode_attn_q8(q, cache, k_tok, v_tok, kv_len,
                               backend=backend, tt=tt)
     hq = P(None, "model", None, None, None)   # q (B, KV, G, 1, HD)
-    hc = P(None, "model", None, None)         # cache planes (B, KV, T, HD|1)
+    # cache planes: dense (B, KV, T, HD|1) or paged pool (NB, KV, BS, HD|1)
+    # — the kv_heads axis is axis 1 either way, so one spec covers both.
+    hc = P(None, "model", None, None)
+    cache_spec = {key: hc for key in _CACHE_KEYS}
+    cache_arg = {key: cache[key] for key in _CACHE_KEYS}
+    if "table" in cache:
+        # block table (B, MAXB): replicated — block ids index the pool's
+        # block axis, which is unsharded; each shard gathers its own heads.
+        cache_spec["table"] = P(None, None)
+        cache_arg["table"] = cache["table"]
     fn = shard_map(
         lambda q_, c_, kt_, vt_, kl_: decode_attn_q8(
             q_, c_, kt_, vt_, kl_, backend=backend, tt=tt),
         mesh=mesh,
-        in_specs=(hq, {key: hc for key in _CACHE_KEYS}, (hc, hc), (hc, hc),
-                  P(None)),
+        in_specs=(hq, cache_spec, (hc, hc), (hc, hc), P(None)),
         out_specs=hq, check_rep=False)
-    return fn(q, {key: cache[key] for key in _CACHE_KEYS}, k_tok, v_tok,
-              kv_len)
+    return fn(q, cache_arg, k_tok, v_tok, kv_len)
 
 
 def tp_prefill_attn_q8(q, cache, kv_len, q_offset, rules: R.Rules, *,
@@ -296,10 +303,15 @@ def tp_prefill_attn_q8(q, cache, kv_len, q_offset, rules: R.Rules, *,
                                backend=backend, tq=tq, tt=tt)
     hq = P(None, "model", None, None, None)
     hc = P(None, "model", None, None)
+    cache_spec = {key: hc for key in _CACHE_KEYS}
+    cache_arg = {key: cache[key] for key in _CACHE_KEYS}
+    if "table" in cache:
+        cache_spec["table"] = P(None, None)
+        cache_arg["table"] = cache["table"]
     fn = shard_map(
         lambda q_, c_, kl_, off_: prefill_attn_q8(
             q_, c_, kl_, off_, backend=backend, tq=tq, tt=tt),
         mesh=mesh,
-        in_specs=(hq, {key: hc for key in _CACHE_KEYS}, P(None), P(None)),
+        in_specs=(hq, cache_spec, P(None), P(None)),
         out_specs=hq, check_rep=False)
-    return fn(q, {key: cache[key] for key in _CACHE_KEYS}, kv_len, q_offset)
+    return fn(q, cache_arg, kv_len, q_offset)

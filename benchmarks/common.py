@@ -43,6 +43,8 @@ REQUIRED_METRICS_BY_PREFIX = {
     "serve/faults_": ("quarantined", "deadline_expired", "rejected", "shed",
                       "preempted", "resumed", "tok_s", "tokens"),
     "serve/paged_": ("tok_s", "pool_utilization", "max_concurrent"),
+    "serve/spec_": ("tok_s", "acceptance_rate", "tokens_per_step"),
+    "serve/calibration": ("wall_ms",),
 }
 
 # Serving-SLO metrics the regression gate watches on serve/sched_* records,
@@ -52,6 +54,55 @@ SLO_METRIC_SENSE = {
     "queue_wait_ms": "lower",
     "tok_s": "higher",         # higher is better
 }
+
+# Machine-speed calibration: the serve suite stamps a ``serve/calibration``
+# record holding the wall time of this fixed jitted workload on the machine
+# that produced the trajectory. The SLO gate re-times the same workload and
+# widens its tolerance by the speed ratio when the checking machine is
+# SLOWER than the recording machine — absolute wall-clock SLOs only
+# transfer between machines after normalization.
+CALIBRATION_RECORD = "serve/calibration"
+
+
+def calibration_wall_ms(iters: int = 5) -> float:
+    """Median wall ms of a fixed jitted workload — the machine-speed probe
+    behind ``serve/calibration``. Deliberately tiny (a few matmul+reduce
+    steps on a (256, 256) operand) so stamping it costs nothing next to
+    the serve suite itself."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)),
+                    jnp.float32)
+
+    @jax.jit
+    def probe(a):
+        for _ in range(8):
+            a = jnp.tanh(a @ a.T) / 16.0
+        return a.sum()
+
+    jax.block_until_ready(probe(x))  # compile outside the timed region
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(probe(x))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def calibration_ratio(committed_records, fresh_records) -> float:
+    """fresh/committed machine slowdown from the two ``serve/calibration``
+    stamps; 1.0 when either side lacks one (gate falls back to the raw
+    tolerance)."""
+    def wall(records):
+        for r in records:
+            if r.get("name") == CALIBRATION_RECORD:
+                w = r.get("metrics", {}).get("wall_ms")
+                if isinstance(w, (int, float)) and w > 0:
+                    return float(w)
+        return None
+
+    was, now = wall(committed_records), wall(fresh_records)
+    if was is None or now is None:
+        return 1.0
+    return now / was
 
 
 def slo_regressions(committed_records, fresh_records, *, max_ratio: float,
@@ -95,18 +146,28 @@ def assert_no_slo_regression(committed_path, fresh_records, *,
     regress beyond tolerance against the COMMITTED ``BENCH_serve.json``.
     Tolerance defaults to ``SERVE_SLO_MAX_RATIO`` (env, default 2.0 —
     generous because CI machines differ; the gate exists to catch
-    order-of-magnitude lifecycle regressions, not wall-clock noise)."""
+    order-of-magnitude lifecycle regressions, not wall-clock noise). When
+    both sides carry a ``serve/calibration`` stamp the tolerance is
+    additionally widened by the measured machine slowdown — see
+    :func:`calibration_ratio`."""
     if max_ratio is None:
         max_ratio = float(os.environ.get("SERVE_SLO_MAX_RATIO", "2.0"))
     committed = load_and_validate(committed_path, forbid_smoke=True)
+    # machine-aware widening: a checker that is N x slower than the machine
+    # that recorded the trajectory gets N x more wall-clock headroom (a
+    # FASTER checker keeps the raw tolerance — speed never hides a
+    # regression, it only stops a slow machine from faking one)
+    cal = calibration_ratio(committed["records"], fresh_records)
+    effective = max_ratio * max(1.0, cal)
     problems = slo_regressions(committed["records"], fresh_records,
-                               max_ratio=max_ratio, require_all=require_all)
+                               max_ratio=effective, require_all=require_all)
     if problems:
         raise AssertionError(
             "serving SLO regression vs committed trajectory "
             f"({committed_path}):\n  " + "\n  ".join(problems)
-            + "\n(raise SERVE_SLO_MAX_RATIO to override a known machine "
-              "mismatch)")
+            + f"\n(effective tolerance {effective:.2f}x = {max_ratio:.2f}x "
+              f"base * {max(1.0, cal):.2f}x machine calibration; raise "
+              "SERVE_SLO_MAX_RATIO to override a known machine mismatch)")
 
 
 def repo_root() -> Path:

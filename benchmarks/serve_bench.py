@@ -39,6 +39,17 @@ Resilience records (PR 7):
     ``serve/sched_*`` TTFT / queue-wait / tok_s regressions beyond
     ``SERVE_SLO_MAX_RATIO`` (benchmarks/common.py).
 
+Speculative-decoding records (PR 10):
+
+  * ``serve/spec_baseline`` / ``serve/spec_selfdraft`` — the
+    propose/verify/commit pipeline on an acceptance-friendly self-draft
+    pair (target layers >= 1 are exact no-ops): decode tok/s speedup with
+    acceptance rate and mean committed tokens/step, greedy token parity
+    asserted.
+  * ``serve/calibration`` — wall time of a fixed jitted probe on the
+    machine that produced the trajectory; the SLO gate widens its
+    tolerance by the measured slowdown when a different machine checks.
+
 Emits ``BENCH_serve.json`` at the repo root (schema: benchmarks/common.py;
 the scheduler/donation/fault records carry required metric keys the CI
 bench-smoke job validates). Smoke mode writes ``BENCH_serve.smoke.json``
@@ -58,7 +69,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchSuite, assert_no_slo_regression, repo_root
+from benchmarks.common import (
+    BenchSuite, CALIBRATION_RECORD, assert_no_slo_regression,
+    calibration_wall_ms, repo_root,
+)
 from repro.configs.base import get_config, reduced
 from repro.models import lm
 from repro.models.layers import Runtime
@@ -297,6 +311,94 @@ def add_paged_records(suite: BenchSuite, params, cfg, *, smoke: bool) -> None:
                   **extra)
 
 
+def add_spec_records(suite: BenchSuite, cfg, *, smoke: bool) -> None:
+    """``serve/spec_*``: speculative decoding on an acceptance-friendly
+    pair. The target's layers >= 1 get ZERO residual projections (wo/down)
+    — each is an exact passthrough, so the 1-layer self-draft computes the
+    target's logits and greedy acceptance sits at ~100%. That is the
+    honest upper-bound workload for the propose/verify/commit pipeline:
+    it isolates the pipeline's speedup (draft steps are cheap, one batched
+    verify replaces K+1 decode ticks) from draft quality, which is a
+    model-training question, not a serving one. Token parity with the
+    non-speculative engine is asserted — a speedup that changes greedy
+    output is a bug, not a result."""
+    from repro.serve import spec as spec_mod
+
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    layers = {k: dict(v) if isinstance(v, dict) else v
+              for k, v in params["layers"].items()}
+    layers["attn"]["wo"] = layers["attn"]["wo"].at[1:].set(0.0)
+    layers["mlp"]["down"] = layers["mlp"]["down"].at[1:].set(0.0)
+    params = dict(params, layers=layers)
+    qparams = quantize_params(params, "itq3_s")
+    draft, dcfg = spec_mod.draft_from_params(qparams, cfg, 1)
+
+    rtq = Runtime(compute_dtype=jnp.float32, kv_quant=True)
+    slots = 4
+    # long decodes: the speedup under measurement is the DECODE pipeline's;
+    # admission prefill (identical work on both sides) must not dilute it
+    n, max_new, max_len, k = ((4, 12, 64, 4) if smoke
+                              else (8, 96, 128, 8))
+
+    def reqs():
+        rng = np.random.default_rng(17)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=4 + i % 5).astype(np.int32),
+                        max_new=max_new) for i in range(n)]
+
+    def bench(spec_on: bool):
+        kw = dict(draft_params=draft, draft_cfg=dcfg,
+                  num_draft_tokens=k) if spec_on else {}
+        eng = ServeEngine(qparams, cfg, slots=slots, max_len=max_len,
+                          rt=rtq, **kw)
+        eng.run(reqs())  # warmup: compile every wave shape
+        batch = reqs()
+        t0 = time.perf_counter()
+        eng.run(batch)
+        wall = time.perf_counter() - t0
+        st = eng.stats()
+        return {"wall_s": wall,
+                "tokens": sum(len(r.out) for r in batch),
+                "out": {r.rid: list(r.out) for r in batch},
+                "stats": st}
+
+    base = bench(spec_on=False)
+    spec_r = bench(spec_on=True)
+    assert spec_r["out"] == base["out"], \
+        "greedy speculative streams diverged from the non-speculative engine"
+    st = spec_r["stats"]
+    speedup = (base["wall_s"] / spec_r["wall_s"])
+    assert st["acceptance_rate"] >= 0.9, (
+        f"no-op-tail self-draft should verify ~always, got "
+        f"{st['acceptance_rate']:.1%}")
+    if not smoke:  # smoke batches are too small for stable wall-clock
+        assert speedup >= 1.5, (
+            f"speculative decode speedup {speedup:.2f}x < 1.5x on the "
+            f"acceptance-friendly workload")
+    suite.add("serve/spec_baseline",
+              us_per_call=1e6 * base["wall_s"] / max(base["tokens"], 1),
+              tok_s=round(base["tokens"] / base["wall_s"], 2),
+              wall_s=round(base["wall_s"], 3),
+              tokens=base["tokens"],
+              acceptance_rate=0.0,
+              tokens_per_step=1.0,
+              slots=slots)
+    suite.add("serve/spec_selfdraft",
+              us_per_call=1e6 * spec_r["wall_s"] / max(spec_r["tokens"], 1),
+              tok_s=round(spec_r["tokens"] / spec_r["wall_s"], 2),
+              wall_s=round(spec_r["wall_s"], 3),
+              tokens=spec_r["tokens"],
+              acceptance_rate=round(st["acceptance_rate"], 4),
+              tokens_per_step=round(st["tokens_per_step"], 3),
+              speedup_vs_baseline=round(speedup, 3),
+              draft_layers=1,
+              num_draft_tokens=k,
+              spec_steps=st["spec_steps"],
+              tokens_match=True,
+              slots=slots)
+
+
 _TP_SCRIPT = textwrap.dedent("""
     import json, time
     import jax, jax.numpy as jnp, numpy as np
@@ -387,6 +489,9 @@ def add_tp_records(suite: BenchSuite, *, smoke: bool) -> None:
 
 def main(smoke: bool = False) -> None:
     suite = BenchSuite("serve", smoke=smoke)
+    # machine-speed stamp: the SLO gate on FUTURE runs divides out this
+    # machine's speed relative to whoever committed the trajectory
+    suite.add(CALIBRATION_RECORD, wall_ms=round(calibration_wall_ms(), 3))
     cfg = reduced(get_config("smollm-135m"))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     qparams = quantize_params(params, "itq3_s")
@@ -471,6 +576,7 @@ def main(smoke: bool = False) -> None:
 
     add_fault_records(suite, qparams, cfg, smoke=smoke)
     add_paged_records(suite, qparams, cfg, smoke=smoke)
+    add_spec_records(suite, cfg, smoke=smoke)
     add_tp_records(suite, smoke=smoke)
 
     from benchmarks.attn_bench import add_serve_records

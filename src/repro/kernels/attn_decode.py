@@ -686,9 +686,13 @@ def prefill_attn_q8(
         cache_len = (cache["table"].shape[1] * cache["k"].shape[2]
                      if paged else cache["k"].shape[2])
         if tq is None or tt is None:
-            from repro.kernels.autotune import get_attn_tiles
+            from repro.kernels.autotune import SPEC_QWIDTH_MAX, get_attn_tiles
+            # Narrow spans (speculative K+1 verify windows) have their own
+            # tile family: a tq tuned for 512-wide prefill is useless when
+            # the span is 5 rows. Wide spans fall through to the base key.
+            qw = tq_total if tq_total <= SPEC_QWIDTH_MAX else None
             tuned_tq, tuned_tt = get_attn_tiles(
-                cache_len, hd, kv, interpret=interpret)
+                cache_len, hd, kv, interpret=interpret, q_width=qw)
             tq = tq if tq else tuned_tq
             tt = tt if tt else tuned_tt
         r = b * kv

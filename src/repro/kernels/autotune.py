@@ -243,29 +243,66 @@ def _bucket_t(t: int) -> int:
     return b
 
 
-def _attn_key(t: int, head_dim: int, n_heads: int, *, interpret: bool) -> str:
+# Speculative-decoding verify passes run the q-tile kernel at a NARROW
+# query width (K+1 draft-window positions, typically <= 16) over a long
+# cache — a cost surface the wide-prefill winners don't transfer to (the
+# best tq is the window itself, and the best tt trades differently when
+# the per-row q work is tiny). Narrow widths therefore get their own key
+# component: a ``|qN`` suffix with N the window bucketed to a power of
+# two. Wide-prefill keys are unchanged, preserving every previously tuned
+# cache entry.
+SPEC_QWIDTH_MAX = 16
+
+
+def _bucket_q(q_width: int) -> int:
+    b = 1
+    while b < q_width:
+        b *= 2
+    return b
+
+
+def _attn_key(t: int, head_dim: int, n_heads: int, *, interpret: bool,
+              q_width: Optional[int] = None) -> str:
+    qpart = f"|q{_bucket_q(q_width)}" if q_width is not None else ""
     return (f"{device_kind(interpret)}|attn|t{_bucket_t(t)}"
-            f"|hd{head_dim}|h{n_heads}")
+            f"|hd{head_dim}|h{n_heads}{qpart}")
 
 
 def attn_candidates(t: int, head_dim: int, *, decode: bool = False,
-                    ) -> list[tuple[int, int]]:
+                    q_width: Optional[int] = None) -> list[tuple[int, int]]:
     """The (tq, tt) lattice worth sweeping. Decode is the TQ=1
-    specialization — only the key-tile width matters."""
+    specialization — only the key-tile width matters. A narrow ``q_width``
+    (speculative verify) caps the query tile at the window itself: wider
+    tiles would only pad."""
     tts = [c for c in _TT_LADDER if c <= max(t, _TT_LADDER[0])] or [max(t, 1)]
-    tqs = [1] if decode else list(_TQ_LADDER)
+    if decode:
+        tqs = [1]
+    elif q_width is not None:
+        tqs = sorted({w for w in (1, 2, 4, 8, _bucket_q(q_width))
+                      if w <= _bucket_q(q_width)})
+    else:
+        tqs = list(_TQ_LADDER)
     return [(tq, tt) for tq in tqs for tt in tts]
 
 
 def get_attn_tiles(t: int, head_dim: int, n_heads: int, *,
-                   interpret: bool = False) -> tuple[int, int]:
+                   interpret: bool = False,
+                   q_width: Optional[int] = None) -> tuple[int, int]:
     """Cached (tq, tt) winner for this attention shape, or the
     deterministic defaults. Pure lookup, exactly like :func:`get_tiles`:
     interpret mode always resolves to (DEFAULT_TQ, DEFAULT_TT) unless a
-    test recorded an entry explicitly."""
+    test recorded an entry explicitly. With ``q_width`` the narrow-window
+    key family is consulted first, falling back to the base (wide) key so
+    an untuned verify shape still benefits from a tuned tt."""
     from repro.kernels.attn_decode import DEFAULT_TQ, DEFAULT_TT
 
-    ent = _load().get(_attn_key(t, head_dim, n_heads, interpret=interpret))
+    cache = _load()
+    if q_width is not None:
+        ent = cache.get(_attn_key(t, head_dim, n_heads, interpret=interpret,
+                                  q_width=q_width))
+        if ent:
+            return int(ent["tq"]), int(ent["tt"])
+    ent = cache.get(_attn_key(t, head_dim, n_heads, interpret=interpret))
     if ent:
         return int(ent["tq"]), int(ent["tt"])
     return DEFAULT_TQ, DEFAULT_TT
@@ -273,11 +310,12 @@ def get_attn_tiles(t: int, head_dim: int, n_heads: int, *,
 
 def record_attn(t: int, head_dim: int, n_heads: int, tq: int, tt: int, *,
                 interpret: bool = False, us: Optional[float] = None,
-                save: bool = True) -> str:
+                save: bool = True, q_width: Optional[int] = None) -> str:
     """Store an attention tile winner (used by :func:`autotune_attn` and by
     tests)."""
     cache = _load()
-    key = _attn_key(t, head_dim, n_heads, interpret=interpret)
+    key = _attn_key(t, head_dim, n_heads, interpret=interpret,
+                    q_width=q_width)
     cache[key] = {"tq": int(tq), "tt": int(tt)}
     if us is not None:
         cache[key]["us"] = round(float(us), 2)
@@ -289,11 +327,12 @@ def record_attn(t: int, head_dim: int, n_heads: int, tq: int, tt: int, *,
 def autotune_attn(t: int, head_dim: int, n_heads: int, *, batch: int = 4,
                   g: int = 1, decode: bool = False,
                   interpret: Optional[bool] = None, iters: int = 3,
-                  save: bool = True,
+                  save: bool = True, q_width: Optional[int] = None,
                   force_interpret_bench: bool = False) -> tuple[int, int]:
     """Benchmark the fused attention kernel's (tq, tt) lattice on a
     synthetic rotated-int8 cache and record the winner. Interpret mode
-    skips the sweep (same contract as :func:`autotune`)."""
+    skips the sweep (same contract as :func:`autotune`). ``q_width``
+    sweeps (and records under) the narrow-window verify family."""
     from repro.kernels.attn_decode import (
         DEFAULT_TQ, DEFAULT_TT, attn_q8_pallas,
     )
@@ -306,7 +345,12 @@ def autotune_attn(t: int, head_dim: int, n_heads: int, *, batch: int = 4,
 
     rng = np.random.default_rng(0)
     r = batch * n_heads
-    tq_total = 1 if decode else min(t, 512)
+    if decode:
+        tq_total = 1
+    elif q_width is not None:
+        tq_total = q_width
+    else:
+        tq_total = min(t, 512)
     q = np.asarray(rng.normal(size=(r, tq_total, g, head_dim)), np.float32)
     kc = rng.integers(-127, 128, size=(r, t, head_dim)).astype(np.int8)
     vc = rng.integers(-127, 128, size=(r, t, head_dim)).astype(np.int8)
@@ -316,7 +360,8 @@ def autotune_attn(t: int, head_dim: int, n_heads: int, *, batch: int = 4,
     off = np.zeros((r,), np.int32)
 
     best, best_us = (DEFAULT_TQ, DEFAULT_TT), float("inf")
-    for tq, tt in attn_candidates(t, head_dim, decode=decode):
+    for tq, tt in attn_candidates(t, head_dim, decode=decode,
+                                  q_width=q_width):
         us = _time_call(
             lambda: attn_q8_pallas(
                 q, kc, ks, vc, vs, kv_len, off,
@@ -325,7 +370,7 @@ def autotune_attn(t: int, head_dim: int, n_heads: int, *, batch: int = 4,
         if us < best_us:
             best, best_us = (tq, tt), us
     record_attn(t, head_dim, n_heads, *best, interpret=interpret,
-                us=best_us, save=save)
+                us=best_us, save=save, q_width=q_width)
     return best
 
 

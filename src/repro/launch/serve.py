@@ -35,6 +35,13 @@ demo that every failure mode drains to a terminal finish reason:
 
     ... --reduced --kv-quant --chaos --stream --scheduler priority \
         --max-queue 4 --shed-policy shed_lowest
+
+Speculative decoding (PR 10): ``--draft-depth N`` serves with an N-layer
+self-draft (a prefix of the target sharing embedding/head weights) and a
+``--num-draft-tokens``-wide propose/verify/commit window per decode step;
+the run report adds acceptance rate and mean committed tokens/step:
+
+    ... --reduced --kv-quant --draft-depth 2 --num-draft-tokens 4
 """
 from __future__ import annotations
 
@@ -161,6 +168,16 @@ def main() -> None:
                          "clock skip + stall): demos quarantine/deadline/"
                          "watchdog draining to terminal events")
     ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--draft-depth", type=int, default=0,
+                    help="speculative decoding with a self-draft: serve "
+                         "with an N-layer prefix of the target as the "
+                         "draft model (0 = off). The decode tick becomes "
+                         "propose/verify/commit; greedy streams stay "
+                         "bit-identical to non-speculative serving")
+    ap.add_argument("--num-draft-tokens", type=int, default=4,
+                    help="speculative window size K: draft proposes K "
+                         "tokens per slot per step, one batched target "
+                         "pass verifies all K+1 positions")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -231,6 +248,15 @@ def main() -> None:
             args.deadline_ms = 400.0
         print(f"chaos mode: {len(faults.faults)} seeded faults armed "
               f"(seed {args.chaos_seed}, deterministic clock)")
+    draft_kw = {}
+    if args.draft_depth:
+        from repro.serve import spec as spec_mod
+        dparams, dcfg = spec_mod.draft_from_params(params, cfg,
+                                                   args.draft_depth)
+        draft_kw = dict(draft_params=dparams, draft_cfg=dcfg,
+                        num_draft_tokens=args.num_draft_tokens)
+        print(f"speculative decoding: {args.draft_depth}-layer self-draft, "
+              f"K={args.num_draft_tokens} tokens/window")
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                       rt=rt, temperature=args.temperature,
                       sample_on_host=args.sample_on_host,
@@ -239,7 +265,8 @@ def main() -> None:
                       max_queue=args.max_queue, shed_policy=args.shed_policy,
                       watchdog_timeout_s=args.watchdog_timeout_s,
                       faults=faults, paged=args.paged,
-                      num_blocks=args.num_blocks, block_size=args.block_size)
+                      num_blocks=args.num_blocks, block_size=args.block_size,
+                      **draft_kw)
     if args.kv_quant:
         print(f"kv_quant cache: {eng.cache_bytes/1e6:.1f}MB "
               f"({eng.stats()['cache_bytes_per_token']:.0f} B/token)")
@@ -288,6 +315,11 @@ def main() -> None:
           f"{st['syncs_per_token']:.2f} host syncs/token, "
           f"scheduler={st['scheduler']}, "
           f"cache bytes moved {st['cache_bytes_moved']})")
+    if args.draft_depth:
+        print(f"speculation: acceptance {st['acceptance_rate']:.1%} "
+              f"({st['draft_accepted']}/{st['draft_proposed']} drafts), "
+              f"{st['tokens_per_step']:.2f} tokens/step over "
+              f"{st['spec_steps']} windows")
     resil = {k: st[k] for k in ("quarantined", "deadline_expired",
                                 "requests_rejected", "requests_shed",
                                 "preemptions", "stalled_steps") if st.get(k)}

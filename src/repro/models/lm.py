@@ -37,8 +37,8 @@ from repro.models.layers import (
 Params = dict[str, Any]
 
 __all__ = [
-    "init_params", "forward", "decode_step", "init_cache", "model_flops",
-    "sample_tokens", "top_mask", "finite_rows",
+    "init_params", "forward", "decode_step", "score_tokens", "advance_cache",
+    "init_cache", "model_flops", "sample_tokens", "top_mask", "finite_rows",
 ]
 
 
@@ -619,6 +619,47 @@ def decode_step(
     x = _embed(params, tokens, rt, cfg)
     x, new_cache, _ = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos)
     return _head(params, x, rt, cfg), new_cache
+
+
+def score_tokens(
+    params: Params,
+    tokens: jax.Array,  # (B, T) — T consecutive tokens per row
+    cache: Params,
+    pos: jax.Array,  # int32 scalar or (B,): write index of tokens[:, 0]
+    rt: Runtime,
+    cfg,
+) -> tuple[jax.Array, Params]:
+    """Score a T-token window per row against the persistent cache in ONE
+    forward pass — the speculative-decoding verify primitive. Token ``t``
+    is written to cache position ``pos + t`` and attends causally to
+    everything at or before it, so ``logits[:, t]`` is the model's
+    next-token distribution after consuming ``tokens[:, :t+1]`` — exactly
+    what ``decode_step`` would produce after T sequential steps. Under
+    ``kv_quant`` this routes through the batched ``prefill_attn_q8`` q-tile
+    kernel (one fused pass over the rotated-int8 cache for all T
+    positions). Returns (logits (B, T, V), new_cache with the span
+    appended)."""
+    x = _embed(params, tokens, rt, cfg)
+    x, new_cache, _ = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos)
+    return _head(params, x, rt, cfg), new_cache
+
+
+def advance_cache(
+    params: Params,
+    tokens: jax.Array,  # (B, T)
+    cache: Params,
+    pos: jax.Array,
+    rt: Runtime,
+    cfg,
+) -> Params:
+    """Append a token span to the cache WITHOUT computing head logits —
+    used when only the KV state matters (e.g. the draft model's final
+    propose step must cache position ``pos + T - 1`` so a fully-accepted
+    window leaves no stale hole, but its logits are never sampled).
+    Returns the new cache."""
+    x = _embed(params, tokens, rt, cfg)
+    _, new_cache, _ = _run_decoder(params, x, rt, cfg, cache=cache, pos=pos)
+    return new_cache
 
 
 def finite_rows(logits: jax.Array) -> jax.Array:

@@ -91,6 +91,28 @@ neighbor stream):
   step, and adopts its deterministic clock when no explicit ``clock`` is
   given — every policy above is exercised by seeded, reproducible tests
   and ``launch/serve.py --chaos``.
+
+Speculative decoding (``draft_params``/``draft_cfg``/``num_draft_tokens``):
+the one-token decode tick generalizes to a **propose/verify/commit**
+window. A cheap draft model (often a layer-sliced prefix of the target —
+``serve/spec.py:draft_from_params``) decodes K candidates per slot from
+its own dense KV cache; ONE batched ``lm.score_tokens`` pass runs the
+target over all K+1 window positions (under ``kv_quant`` that is one fused
+``prefill_attn_q8`` q-tile call against the rotated-int8 cache — dense or
+paged); ``spec.verify_commit`` decides the accepted prefix + one
+window-end token per slot on device. Every hot-path invariant survives
+with "1 token/slot/step" generalized to "1..K+1 tokens/slot/window": ONE
+device->host transfer moves the (S, K+1) token window + commit counts,
+both caches donate in place, quarantine rides the same ``_POISONED``
+sentinel, deadlines/cancel/preempt land at window boundaries, and paged
+slots pre-extend their block chains by the window lookahead
+(``paged.blocks_needed``). Greedy streams are bitwise identical to the
+non-speculative engine; sampled streams follow Leviathan-style rejection
+sampling under tagged per-request PRNG streams (``draft_tokens=0`` /
+``draft=False`` slots stay bit-identical too — they ride the same window
+machinery with kvec=0). SSM/hybrid targets are rejected: rolling back a
+rejected window needs positional cache indexing, which recurrent state
+lacks (ROADMAP leftover).
 """
 from __future__ import annotations
 
@@ -136,6 +158,10 @@ class Request:
     done: bool = False
     finish_reason: Optional[str] = None
     preemptions: int = 0  # times this request was swapped out mid-flight
+    # --- speculative-decoding accounting (filled by the engine) ---
+    drafted: int = 0       # draft tokens proposed on this request's behalf
+    accepted: int = 0      # of those, tokens the verifier committed
+    spec_windows: int = 0  # propose/verify/commit windows executed
     # --- lifecycle stamps (perf_counter seconds, filled by the engine) ---
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None
@@ -155,6 +181,10 @@ class Request:
             out["decode_tok_s"] = (n - 1) / dt if dt > 0 else float("inf")
         if self.preemptions:
             out["preemptions"] = self.preemptions
+        if self.drafted:
+            out["draft_proposed"] = self.drafted
+            out["draft_accepted"] = self.accepted
+            out["acceptance_rate"] = self.accepted / self.drafted
         return out
 
 
@@ -172,7 +202,10 @@ class ServeEngine:
                  shed_policy: str = "reject",
                  watchdog_timeout_s: Optional[float] = None,
                  faults=None, paged: bool = False,
-                 num_blocks: Optional[int] = None, block_size: int = 16):
+                 num_blocks: Optional[int] = None, block_size: int = 16,
+                 draft_params=None, draft_cfg=None,
+                 draft_rt: Optional[Runtime] = None,
+                 num_draft_tokens: int = 4):
         self.cfg = cfg
         self.rt = rt or Runtime(compute_dtype=jnp.float32)
         self.mesh = mesh
@@ -210,6 +243,48 @@ class ServeEngine:
         self.prompt_chunk = prompt_chunk
         self.seed = int(seed)
         self.sample_on_host = sample_on_host
+        # --- speculative decoding (propose/verify/commit; serve/spec.py) ---
+        self.spec = draft_params is not None
+        self.draft_cfg = draft_cfg
+        if self.spec:
+            if draft_cfg is None:
+                raise ValueError("draft_params needs a draft_cfg")
+            if sample_on_host:
+                raise ValueError(
+                    "sample_on_host is the measured pre-overhaul baseline; "
+                    "speculative decoding needs on-device sampling (the "
+                    "accept/commit decision rides the window's one token "
+                    "transfer)")
+            if num_draft_tokens < 1:
+                raise ValueError(
+                    f"num_draft_tokens must be >= 1, got {num_draft_tokens}")
+            for c, role in ((cfg, "target"), (draft_cfg, "draft")):
+                if c.family not in ("dense", "vlm", "moe"):
+                    raise ValueError(
+                        f"speculative decoding needs pure-attention "
+                        f"families (dense/vlm/moe); the {role} is "
+                        f"{c.family!r} — recurrent state cannot roll back "
+                        f"a rejected window (positional cache indexing is "
+                        f"what makes rejection free)")
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size}: acceptance compares distributions "
+                    f"over the same token ids")
+            self._spec_k = int(num_draft_tokens)
+            drt = draft_rt or self.rt
+            if mesh is not None:
+                from repro.serve import tp as tp_mod
+                drt = dataclasses.replace(
+                    drt, tp_shard_map=self.rt.tp_shard_map)
+                draft_params, drt = tp_mod.place_draft(
+                    draft_params, draft_cfg, mesh, drt)
+            self.draft_rt = drt
+            self.draft_params = draft_params
+        else:
+            self._spec_k = 0
+            self.draft_rt = None
+            self.draft_params = None
         # engine-default sampling for requests that don't carry their own;
         # the legacy ``temperature`` knob folds into it (and stays live via
         # the ``temperature`` property below)
@@ -267,7 +342,12 @@ class ServeEngine:
                     "paged=True requires Runtime(kv_quant=True): the block "
                     "pool is laid out over the rotated-int8 codes + scale "
                     "planes")
-            n_pos = max_len + (cfg.frontend_len if cfg.frontend else 0)
+            # +_spec_k: a speculative verify writes K+1 positions starting
+            # at pos <= max_len - 2, so the address space must reach
+            # max_len - 2 + K (zero when speculation is off — exact old
+            # shapes, byte parity)
+            n_pos = (max_len + self._spec_k
+                     + (cfg.frontend_len if cfg.frontend else 0))
             self.block_size = int(block_size)
             # per-slot table width: enough entries to address every logical
             # position a slot can reach
@@ -287,13 +367,29 @@ class ServeEngine:
             self.block_size = None
             self.num_blocks = None
             self.pool = None
-            self.cache = lm.init_cache(cfg, slots, max_len, dtype=cache_dtype,
+            # +_spec_k for the speculative write horizon (0 when off)
+            self.cache = lm.init_cache(cfg, slots, max_len + self._spec_k,
+                                       dtype=cache_dtype,
                                        kv_quant=self.rt.kv_quant)
         if mesh is not None:
             # per-device KV-cache shards from step 0: codes + scale planes
             # head-sharded over `model` (replicated when GQA doesn't divide)
             from repro.serve import tp as tp_mod
             self.cache = tp_mod.shard_cache(self.cache, cfg, self.rt.rules)
+        if self.spec:
+            # the draft's own KV cache: always dense slot-batched (the
+            # draft is small by construction, so paging it buys nothing),
+            # same +K horizon so a fully-accepted window's final proposal
+            # is cached with no stale hole
+            self.draft_cache = lm.init_cache(
+                draft_cfg, slots, max_len + self._spec_k, dtype=cache_dtype,
+                kv_quant=self.draft_rt.kv_quant)
+            if mesh is not None:
+                from repro.serve import tp as tp_mod
+                self.draft_cache = tp_mod.shard_cache(
+                    self.draft_cache, draft_cfg, self.draft_rt.rules)
+        else:
+            self.draft_cache = None
         self._cache_nbytes = self.cache_bytes  # fixed for the engine's life
         self.pos = np.zeros(slots, dtype=np.int32)  # next write index per slot
         self.active: list[Optional[Request]] = [None] * slots
@@ -305,6 +401,10 @@ class ServeEngine:
         self._keys = np.zeros((slots, 2), np.uint32)
         self._slot_stop: list[frozenset[int]] = [frozenset()] * slots
         self._slot_max_new: list[int] = [0] * slots
+        # per-slot speculative window size (0 = one-token decode; set at
+        # install from SamplingParams.draft/draft_tokens, always 0 on
+        # non-speculative engines)
+        self._slot_draft_k = np.zeros(slots, np.int32)
         self._pending_events: list[StreamEvent] = []
         # --- perf counters (read by benchmarks/serve_bench.py and tests) ---
         self.host_syncs = 0       # device->host transfers
@@ -312,17 +412,47 @@ class ServeEngine:
         self.decode_steps = 0     # jitted decode calls
         self.cache_bytes_moved = 0  # bytes functionally copied (donation off)
         self.cache_donated = False  # did the last decode donate in place?
+        # --- speculative counters ---
+        self.spec_steps = 0       # propose/verify/commit windows executed
+        self.draft_proposed = 0   # draft tokens offered for verification
+        self.draft_accepted = 0   # of those, tokens committed
         self._jit_prefill = jax.jit(self._prefill_impl,
                                     static_argnames=("plen", "fresh"),
                                     donate_argnums=(1,))
         self._jit_decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._jit_decode_logits = jax.jit(self._decode_logits_impl,
                                           donate_argnums=(1,))
+        if self.spec:
+            self._jit_draft_prefill = jax.jit(self._draft_prefill_impl,
+                                              donate_argnums=(1,))
+            self._jit_propose = jax.jit(self._propose_impl,
+                                        donate_argnums=(1,))
+            self._jit_verify = jax.jit(self._verify_impl,
+                                       donate_argnums=(1,))
+            # a speculative engine prices SJF admission by expected slot
+            # OCCUPANCY (prefill + decode STEPS), not prompt length alone:
+            # a draft-enabled request frees its slot up to (K+1)x faster
+            set_cost = getattr(self.scheduler, "set_cost", None)
+            if set_cost is not None:
+                set_cost(self._admission_cost)
         if self.rt.autotune:
             from repro.kernels import autotune as autotune_mod
             # no-op on CPU/interpret; on TPU, pre-tunes every QTensor matmul
             # shape at decode batch = slots so the hot loop runs tuned tiles
             autotune_mod.tune_params_shapes(params, slots)
+            if self.spec and self.rt.kv_quant:
+                # pre-tune the verify pass's NARROW q-width attention shape
+                # (K+1 window positions over the full cache) so the first
+                # speculative window already runs tuned tiles
+                attn = self.cache.get("attn")
+                if attn:
+                    cl = (self._maxb * self.block_size if self.paged
+                          else int(attn["k"].shape[3]))
+                    kvh = cfg.num_kv_heads
+                    autotune_mod.autotune_attn(
+                        cl, cfg.resolved_head_dim, kvh, batch=slots,
+                        g=max(1, getattr(cfg, "num_heads", kvh) // kvh),
+                        q_width=self._spec_k + 1)
 
     @property
     def temperature(self) -> float:
@@ -441,7 +571,112 @@ class ServeEngine:
             new_cache = {"attn": new_cache["attn"]}
         return logits[:, 0], new_cache
 
+    # --- speculative propose/verify (compiled) ----------------------------
+    def _draft_prefill_impl(self, params, cache, tokens, slots, pos0):
+        """Admission-wave prefill of the DRAFT cache: zero the admitted
+        slots and append the padded prompt bucket. No head, no sampling —
+        the target's prefill picks the first token; the draft only needs
+        the KV state. Pad positions hold finite garbage behind the kv_len
+        mask / under the window's sequential overwrites, exactly like the
+        target's bucketed prefill."""
+        g = tokens.shape[0]
+        new_slot = lm.advance_cache(params, tokens,
+                                    _zero_slots_like(cache, g), pos0,
+                                    self.draft_rt, self.draft_cfg)
+        return _put_slots(cache, new_slot, slots)
+
+    def _propose_impl(self, dparams, dcache, tokens, positions, keys, gen,
+                      temp, top_k, top_p):
+        """K sequential draft steps + one final cache advance. Returns
+        (cand (S, K+1) = [anchor, d_1..d_K], qlog (S, K, V) draft
+        scaled+masked logits (None on an all-greedy trace), new draft
+        cache). Proposal w is drawn from the slot's DRAFT_TAG PRNG stream
+        at generation index gen + w — mirroring ``lm.sample_tokens``'s
+        masked-categorical path exactly, so ``qlog`` IS the distribution
+        the draw came from (what rejection sampling requires). The final
+        ``advance_cache`` writes d_K at pos + K: a fully-accepted window
+        leaves no stale hole for the next window to read."""
+        from repro.serve import spec as spec_mod
+        k = self._spec_k
+        cand = [tokens[:, 0]]
+        qlogs = []
+        cur = tokens
+        for w in range(k):
+            logits, dcache = lm.decode_step(dparams, cur, dcache,
+                                            positions + w, self.draft_rt,
+                                            self.draft_cfg)
+            last = logits[:, 0].astype(jnp.float32)
+            if keys is None:  # all-greedy: argmax proposals, no PRNG
+                d = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            else:
+                scaled = last / jnp.maximum(temp, 1e-6)[:, None]
+                if top_k is not None or top_p is not None:
+                    scaled = lm.top_mask(scaled, top_k, top_p)
+                dk = spec_mod.draft_keys(keys, gen, w)
+                sampled = jax.vmap(
+                    lambda kk, row: jax.random.categorical(kk, row)
+                )(dk, scaled).astype(jnp.int32)
+                d = jnp.where(temp > 0, sampled,
+                              jnp.argmax(last, axis=-1).astype(jnp.int32))
+                qlogs.append(scaled)
+            cand.append(jnp.clip(d, 0, self.cfg.vocab_size - 1))
+            cur = cand[-1][:, None]
+        dcache = lm.advance_cache(dparams, cur, dcache, positions + k,
+                                  self.draft_rt, self.draft_cfg)
+        qlog = jnp.stack(qlogs, axis=1) if qlogs else None
+        return jnp.stack(cand, axis=1), qlog, dcache
+
+    def _verify_impl(self, params, cache, cand, positions, kvec, keys, gen,
+                     temp, top_k, top_p, qlog, table=None):
+        """One batched target pass over the K+1 window positions
+        (``lm.score_tokens`` — under kv_quant a single fused
+        ``prefill_attn_q8`` call per layer), then the on-device
+        accept/commit decision. Numeric quarantine generalizes: a slot
+        whose logits went non-finite at any position its window can USE
+        (<= kvec; later rows read lookahead positions past the slot's
+        paged allocation, which hold finite-but-meaningless null-block
+        garbage) reports a fully _POISONED row with n=1, riding the same
+        single transfer."""
+        from repro.serve import spec as spec_mod
+        logits, new_cache = lm.score_tokens(
+            params, cand, self._model_cache(cache, table), positions,
+            self.rt, self.cfg)
+        if table is not None:
+            new_cache = {"attn": new_cache["attn"]}
+        out, n = spec_mod.verify_commit(logits, cand, kvec, keys=keys,
+                                        gen=gen, temp=temp, top_k=top_k,
+                                        top_p=top_p, qlog=qlog)
+        used = jnp.arange(cand.shape[1])[None, :] <= kvec[:, None]
+        ok = jnp.all(lm.finite_rows(logits) | ~used, axis=1)
+        out = jnp.where(ok[:, None], out, _POISONED)
+        n = jnp.where(ok, n, 1)
+        return out, n, new_cache
+
     # --- request lifecycle ------------------------------------------------
+    def _spec_k_for(self, req: Request) -> int:
+        """This request's speculative window size: the engine's
+        ``num_draft_tokens``, capped (never raised) by
+        ``SamplingParams.draft_tokens``, zeroed by ``draft=False`` — and
+        always 0 on a non-speculative engine."""
+        if not self.spec:
+            return 0
+        sp = req.sampling or self.default_sampling
+        if sp.draft is False:
+            return 0
+        if sp.draft_tokens is not None:
+            return max(0, min(int(sp.draft_tokens), self._spec_k))
+        return self._spec_k
+
+    def _admission_cost(self, req: Request) -> float:
+        """SJF job-size estimate under speculation: prefill cost (prompt
+        length) plus expected decode STEPS — the output budget amortized
+        by the request's window size (a K-draft window commits up to K+1
+        tokens per step)."""
+        sp = req.sampling or self.default_sampling
+        new = sp.max_new if sp.max_new is not None else req.max_new
+        return float(len(req.prompt)) + float(new) / (
+            1 + self._spec_k_for(req))
+
     def _resolve(self, req: Request) -> SamplingParams:
         sp = req.sampling or self.default_sampling
         over: dict = {}
@@ -550,6 +785,11 @@ class ServeEngine:
                 _take_slots(self.cache, jnp.asarray([s], jnp.int32)))
             self._swapped[rid] = {"cache": sub, "pos": int(self.pos[s]),
                                   "next_tok": int(self._next_tok[s])}
+        if self.spec:
+            # the draft's slot rows ride the same swap entry, so resume
+            # restores BOTH models' state with no draft re-prefill
+            self._swapped[rid]["draft"] = jax.device_get(
+                _take_slots(self.draft_cache, jnp.asarray([s], jnp.int32)))
         # free the slot WITHOUT finishing the request (no terminal event:
         # the stream simply pauses until resume)
         self.active[s] = None
@@ -557,6 +797,7 @@ class ServeEngine:
         self._temp[s] = 0.0
         self._top_k[s] = 0
         self._top_p[s] = 1.0
+        self._slot_draft_k[s] = 0
         req.preemptions += 1
         self.preemptions += 1
         self.scheduler.add(req)
@@ -617,6 +858,10 @@ class ServeEngine:
             self._swapped.pop(req.rid)
             self.cache = _put_slots(
                 self.cache, jax.tree.map(jnp.asarray, sw["cache"]),
+                jnp.asarray([s], jnp.int32))
+        if self.spec and "draft" in sw:
+            self.draft_cache = _put_slots(
+                self.draft_cache, jax.tree.map(jnp.asarray, sw["draft"]),
                 jnp.asarray([s], jnp.int32))
         self._install_slot(s, req, self._resolve(req), pos=sw["pos"],
                            next_tok=sw["next_tok"])
@@ -833,6 +1078,14 @@ class ServeEngine:
             jnp.asarray([p - 1 for p in plens], jnp.int32),
             jnp.zeros(len(group), jnp.int32),
             keys, temp, top_k, top_p, table, plen=bucket, fresh=True)
+        if self.spec:
+            # the draft consumes the SAME padded bucket (one compiled
+            # shape family per bucket for both models); its pad writes sit
+            # behind the kv_len mask like the target's
+            self.draft_cache = self._jit_draft_prefill(
+                self.draft_params, self.draft_cache, jnp.asarray(toks),
+                jnp.asarray(free, jnp.int32),
+                jnp.zeros(len(group), jnp.int32))
         return self._finish_admission(group, free, plens, sps, tok, last)
 
     def _admit_chunked(self, req: Request, s: int) -> list[StreamEvent]:
@@ -890,12 +1143,17 @@ class ServeEngine:
         self._top_k[s] = sp.top_k
         self._top_p[s] = sp.top_p
         self._keys[s] = sp.key_data(engine_seed=self.seed, rid=req.rid)
+        self._slot_draft_k[s] = self._spec_k_for(req)
         self._next_tok[s] = next_tok
 
     # --- decode -----------------------------------------------------------
     def _step_events(self) -> list[StreamEvent]:
         """One decode step for every active slot -> one StreamEvent per
-        emitted token (terminal events carry finish reason + stats)."""
+        emitted token (terminal events carry finish reason + stats).
+        Speculative engines run a propose/verify/commit WINDOW instead of
+        a single token; both paths share :meth:`_commit_slot`."""
+        if self.spec:
+            return self._spec_step_events()
         if self.faults is not None:
             self.faults.before_decode(self)
         events0: list[StreamEvent] = []
@@ -956,21 +1214,111 @@ class ServeEngine:
                     else int(np.argmax(row))
             else:
                 tok = int(tok_np[s])
+            events += self._commit_slot(s, req, [tok])
+        return events
+
+    def _spec_step_events(self) -> list[StreamEvent]:
+        """One speculative window for every active slot: the draft
+        proposes K candidates from its own cache, ONE batched target pass
+        verifies all K+1 window positions, and each slot commits its
+        accepted prefix plus one window-end token. Every single-token
+        invariant generalizes per-slot-variable-count: one device->host
+        transfer moves the whole (S, K+1) window + commit counts, both
+        caches donate in place, quarantine rides the same _POISONED
+        sentinel, and kvec=0 slots (draft opt-out) commit exactly one
+        token through the identical machinery."""
+        if self.faults is not None:
+            self.faults.before_decode(self)
+        events0: list[StreamEvent] = []
+        if self.paged:
+            events0 = self._ensure_decode_blocks()
+            if not any(r is not None for r in self.active):
+                return events0
+        n_live = sum(r is not None for r in self.active)
+        self.max_concurrent = max(self.max_concurrent, n_live)
+        kvec_np = self._slot_draft_k.copy()
+        toks = jnp.asarray(self._next_tok[:, None])
+        positions = jnp.asarray(self.pos)
+        table = jnp.asarray(self._table) if self.paged else None
+        live = [s for s, r in enumerate(self.active) if r is not None]
+        if all(self._temp[s] <= 0 for s in live):
+            keys = gen = temp = top_k = top_p = None  # argmax-only traces
+        else:
+            gen = jnp.asarray([len(r.out) if r is not None else 0
+                               for r in self.active], jnp.int32)
+            keys = jnp.asarray(self._keys)
+            temp = jnp.asarray(self._temp)
+            top_k, top_p = self._filter_vectors(self._top_k, self._top_p)
+        probe = jax.tree.leaves(self.cache)
+        dprobe = jax.tree.leaves(self.draft_cache)
+        cand, qlog, self.draft_cache = self._jit_propose(
+            self.draft_params, self.draft_cache, toks, positions,
+            keys, gen, temp, top_k, top_p)
+        out_dev, n_dev, self.cache = self._jit_verify(
+            self.params, self.cache, cand, positions,
+            jnp.asarray(kvec_np), keys, gen, temp, top_k, top_p, qlog,
+            table)
+        out_np, n_np = jax.device_get((out_dev, n_dev))  # THE one transfer
+        self.host_syncs += 1
+        self.decode_steps += 1
+        self.spec_steps += 1
+        # both models' caches must donate for the window to be copy-free
+        self.cache_donated = (all(a.is_deleted() for a in probe)
+                              and all(a.is_deleted() for a in dprobe))
+        if not self.cache_donated:
+            self.cache_bytes_moved += self._cache_nbytes
+        if self.watchdog is not None:
+            now = self._clock()
+            self.stalled_steps += len(self.watchdog.failed(now))
+            self.watchdog.beat(0, self.decode_steps, now=now)
+        events = events0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            n = int(n_np[s])
+            window = [int(t) for t in out_np[s, :n]]
+            if window[0] != _POISONED:
+                # acceptance accounting: n - 1 of the kvec proposals were
+                # committed (the window-end token is the engine's, not the
+                # draft's), counted even when a stop/length finish inside
+                # the window drops the tail of the stream
+                kv = int(kvec_np[s])
+                self.draft_proposed += kv
+                self.draft_accepted += n - 1
+                req.drafted += kv
+                req.accepted += n - 1
+                req.spec_windows += 1
+            events += self._commit_slot(s, req, window)
+        return events
+
+    def _commit_slot(self, s: int, req: Request,
+                     toks: list) -> list[StreamEvent]:
+        """Fold committed tokens into one slot's stream state — shared by
+        the one-token step (a 1-element window) and the speculative
+        window. Stops at the first terminal condition: a _POISONED
+        sentinel quarantines the slot (finish_reason="error", cache rows
+        re-zeroed), a stop/length finish drops the rest of the window (the
+        cache holds a few positions past the stream's end; they are never
+        read — kv_len follows ``pos``, which stops advancing)."""
+        events: list[StreamEvent] = []
+        for tok in toks:
             if tok == _POISONED:
                 # numeric quarantine: the slot's logits went non-finite.
-                # Finish the stream loudly (finish_reason="error") and
-                # re-zero the slot's cache rows so the poison can't leak
-                # into a later tenant of the same slot.
+                # Finish the stream loudly and re-zero the slot's cache
+                # rows so the poison can't leak into a later tenant.
                 self.quarantined += 1
                 events.append(self._finish_slot(
                     s, req, FINISH_ERROR, token=None))
                 self._zero_slot(s)
-                continue
+                break
             req.out.append(tok)
             self._next_tok[s] = tok
             self.pos[s] += 1
             self.tokens_decoded += 1
-            events.append(self._emit(s, req, tok))
+            ev = self._emit(s, req, tok)
+            events.append(ev)
+            if ev.finished:
+                break
         return events
 
     def _ensure_decode_blocks(self) -> list[StreamEvent]:
@@ -979,12 +1327,18 @@ class ServeEngine:
         preempt a victim (lowest priority, newest admission) to free its
         blocks; when no victim exists the slot itself error-finishes — the
         pool physically cannot hold it."""
-        from repro.serve.paged import PoolExhausted
+        from repro.serve.paged import PoolExhausted, blocks_needed
         events: list[StreamEvent] = []
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            need = int(self.pos[s]) // self.block_size + 1
+            # speculative slots pre-extend by their window lookahead: the
+            # window can commit (and later read) positions up to
+            # pos + kvec. Verify writes BEYOND pos + kvec (up to the
+            # engine-wide K) land in the null block — never committed,
+            # never read, finite garbage by the paged invariant.
+            need = blocks_needed(self.pos[s], self.block_size,
+                                 lookahead=int(self._slot_draft_k[s]))
             while len(self._slot_blocks[s]) < need:
                 try:
                     blk = self.pool.alloc()
@@ -1022,6 +1376,14 @@ class ServeEngine:
             self.cache = _put_slots(self.cache,
                                     _zero_slots_like(self.cache, 1),
                                     jnp.asarray([s], jnp.int32))
+        if self.spec:
+            # the draft cache is dense even on paged engines; a poisoned
+            # slot's draft rows are re-zeroed for the same reason its
+            # target rows are (NaN is the garbage no mask neutralizes)
+            self.draft_cache = _put_slots(self.draft_cache,
+                                          _zero_slots_like(self.draft_cache,
+                                                           1),
+                                          jnp.asarray([s], jnp.int32))
         self.pos[s] = 0
         self._next_tok[s] = 0
 
@@ -1050,6 +1412,7 @@ class ServeEngine:
         self._temp[s] = 0.0
         self._top_k[s] = 0
         self._top_p[s] = 1.0
+        self._slot_draft_k[s] = 0
         # tokenless terminal events (cancellation) index PAST the stream:
         # len(out), the position no token will ever fill — so (rid, index)
         # never collides with a real token's event
@@ -1147,6 +1510,20 @@ class ServeEngine:
             "act_quant": self.rt.act_quant,
             "max_concurrent": self.max_concurrent,
         }
+        if self.spec:
+            out.update(
+                speculative=True,
+                num_draft_tokens=self._spec_k,
+                spec_steps=self.spec_steps,
+                draft_proposed=self.draft_proposed,
+                draft_accepted=self.draft_accepted,
+                acceptance_rate=(self.draft_accepted / self.draft_proposed
+                                 if self.draft_proposed else float("nan")),
+                tokens_per_step=(self.tokens_decoded / self.decode_steps
+                                 if self.decode_steps else float("nan")),
+                draft_cache_bytes=int(sum(
+                    a.nbytes for a in jax.tree.leaves(self.draft_cache))),
+            )
         if self.paged:
             out.update(
                 paged=True,

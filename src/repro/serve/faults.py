@@ -29,6 +29,15 @@ Pieces:
     ``dt`` seconds (deadline/timeout expiry).
   - ``kind="stall"``: same clock jump, framed as a stalled step — what the
     engine's watchdog counts.
+  - ``kind="cancel"`` / ``kind="preempt"``: call ``engine.cancel(rid)`` /
+    ``engine.preempt(rid)`` at the top of the step. Because
+    ``before_decode`` fires BETWEEN decode windows, on a speculative
+    engine this lands exactly at the propose/verify window boundary — the
+    chaos scenario proving a mid-stream eviction emits exactly one
+    terminal StreamEvent and frees both target and draft cache state,
+    however many tokens the previous window committed. (The engine is
+    synchronous, so "mid-window" interruption can only be observed at
+    this boundary; the window itself is one atomic jitted step.)
 
 * :class:`FaultPlan` — the ordered fault schedule plus the clock. Pass it
   to ``ServeEngine(faults=...)``: the engine calls :meth:`before_decode`
@@ -82,20 +91,23 @@ class Fault:
     the engine skipped (e.g. everything finished early) still fires at the
     next opportunity rather than silently never."""
 
-    kind: str  # "kv_nan" | "clock_skip" | "stall"
+    kind: str  # "kv_nan" | "clock_skip" | "stall" | "cancel" | "preempt"
     step: int  # fires at the first decode step with decode_steps >= step
     slot: int = 0            # kv_nan: which cache slot to poison
     plane: str = "k_scale"   # kv_nan: which attn plane ("k_scale"/"v_scale"
     #   for the quantized cache, "k"/"v" for an fp cache)
     value: float = math.nan  # kv_nan: the poison (nan or +/-inf)
     dt: float = 0.0          # clock_skip/stall: seconds to jump the clock
+    rid: Optional[int] = None  # cancel/preempt: target request id
 
-    _KINDS = ("kv_nan", "clock_skip", "stall")
+    _KINDS = ("kv_nan", "clock_skip", "stall", "cancel", "preempt")
 
     def __post_init__(self):
         if self.kind not in self._KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"options {self._KINDS}")
+        if self.kind in ("cancel", "preempt") and self.rid is None:
+            raise ValueError(f"{self.kind} fault needs a target rid")
 
 
 class FaultPlan:
@@ -124,6 +136,10 @@ class FaultPlan:
             if f.kind == "kv_nan":
                 inject_kv_nan(engine, slot=f.slot, plane=f.plane,
                               value=f.value)
+            elif f.kind == "cancel":
+                engine.cancel(f.rid)
+            elif f.kind == "preempt":
+                engine.preempt(f.rid)
             else:  # clock_skip / stall: both are a deterministic time jump
                 self.clock.advance(f.dt)
 

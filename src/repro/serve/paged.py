@@ -48,11 +48,24 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["BlockPool", "PoolExhausted", "init_paged_cache", "zero_blocks",
-           "NULL_BLOCK"]
+           "blocks_needed", "NULL_BLOCK"]
 
 # Block 0 never leaves the pool: empty table entries and pad writes target
 # it, so a table row of zeros is always safe to gather/scatter through.
 NULL_BLOCK = 0
+
+
+def blocks_needed(pos: int, block_size: int, lookahead: int = 0) -> int:
+    """Blocks a slot must own before a decode window starting at ``pos``:
+    enough to cover every position the window can COMMIT — up to
+    ``pos + lookahead`` inclusive (a speculative window of K drafts commits
+    at most K+1 tokens, landing the last write at ``pos + K``). Speculative
+    writes past what the verifier later accepts land in allocated blocks
+    and are overwritten by the next window; writes the table doesn't cover
+    would land in the null block, which is only safe for positions the mask
+    provably never reads — committed positions are read, hence the
+    lookahead term."""
+    return (int(pos) + int(lookahead)) // int(block_size) + 1
 
 
 class PoolExhausted(RuntimeError):

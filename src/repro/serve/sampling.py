@@ -61,7 +61,15 @@ class SamplingParams:
     request's own ``max_new`` (back-compat with the pre-lifecycle API).
     ``stop`` token ids finish the request the step they are emitted (the
     stop token IS appended to the output, mirroring EOS emission);
-    ``ignore_eos`` opts out of the engine/config-level EOS id."""
+    ``ignore_eos`` opts out of the engine/config-level EOS id.
+
+    Speculative decoding (engines booted with a draft model):
+    ``draft=None`` follows the engine default (speculate when a draft is
+    configured), ``False`` opts this request out (it decodes one token per
+    window, stream-identical to a non-speculative engine), ``True``
+    documents the opt-in explicitly. ``draft_tokens`` caps this request's
+    window below the engine's ``num_draft_tokens`` (clipped, never
+    raised). Both are inert on engines without a draft model."""
 
     temperature: float = 0.0
     top_k: int = 0
@@ -70,6 +78,8 @@ class SamplingParams:
     max_new: Optional[int] = None
     stop: tuple[int, ...] = ()
     ignore_eos: bool = False
+    draft: Optional[bool] = None
+    draft_tokens: Optional[int] = None
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -80,6 +90,10 @@ class SamplingParams:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.max_new is not None and self.max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        if self.draft_tokens is not None and self.draft_tokens < 0:
+            raise ValueError(
+                f"draft_tokens must be >= 0 (0 disables speculation), "
+                f"got {self.draft_tokens}")
         object.__setattr__(self, "stop", tuple(int(t) for t in self.stop))
 
     @property
@@ -123,7 +137,9 @@ class StreamEvent:
     ``(rid, index)`` uniquely keys every event. ``stats`` is populated on
     terminal events: ``queue_wait_s`` (submit -> admission), ``ttft_s``
     (submit -> first token), ``decode_tok_s`` (post-first-token
-    throughput), ``tokens``."""
+    throughput), ``tokens`` — plus ``draft_proposed`` / ``draft_accepted``
+    / ``acceptance_rate`` on speculative engines (the request's own
+    rejection-sampling accounting)."""
 
     rid: int
     token: Optional[int]

@@ -223,11 +223,32 @@ class PriorityScheduler(_HeapScheduler):
 
 
 class ShortestPromptFirstScheduler(_HeapScheduler):
-    """Shortest prompt admitted first (prefill-cost SJF); FIFO on ties."""
+    """Shortest job admitted first; FIFO on ties.
+
+    The default job-size estimate is prompt length (prefill-cost SJF, the
+    pre-speculative behavior). An engine can install a richer cost model
+    via :meth:`set_cost` — ``ServeEngine`` does, pricing a request at
+    ``prefill + expected decode steps``, where a speculative request's
+    decode is amortized by its window size (a draft-enabled request
+    commits up to K+1 tokens per step, so it occupies its slot for fewer
+    steps than an equal-budget non-speculative one). The cost is sampled
+    at ``add`` time, so installing a model only affects requests enqueued
+    afterwards."""
 
     name = "sjf"
 
+    def __init__(self, cost=None):
+        super().__init__()
+        self._cost = cost
+
+    def set_cost(self, fn) -> None:
+        """Install a ``req -> float`` admission cost model (None resets to
+        prompt length)."""
+        self._cost = fn
+
     def _key(self, req):
+        if self._cost is not None:
+            return float(self._cost(req))
         return len(req.prompt)
 
 

@@ -1,0 +1,202 @@
+"""Speculative-decoding acceptance math: propose/verify/commit primitives.
+
+The engine's decode tick generalizes from "one token per slot per step" to
+a K-token speculative window per slot:
+
+* **propose** — a cheap draft model decodes K candidate tokens per slot
+  from its own KV cache (engine-side; this module supplies the PRNG-stream
+  tags and the draft-model constructor).
+* **verify** — the TARGET model scores all K+1 window positions in one
+  batched pass (``lm.score_tokens``, which under ``kv_quant`` is one fused
+  ``prefill_attn_q8`` call over the rotated-int8 cache).
+* **commit** — :func:`verify_commit` turns target logits + candidates into
+  (accepted tokens, per-slot commit counts) entirely on device, so the
+  engine's 1-host-sync-per-step contract holds: one transfer moves the
+  whole window.
+
+Acceptance rules
+----------------
+Greedy slots (temperature 0) accept draft token ``d_{w+1}`` iff it equals
+``argmax`` of the target's logits at window position ``w`` — the committed
+stream is therefore **bitwise identical** to non-speculative greedy
+decoding (the target's argmax sequence), regardless of draft quality.
+
+Sampled slots use standard speculative rejection sampling (Leviathan et
+al.): accept ``d`` with probability ``min(1, p(d)/q(d))`` where ``p`` is
+the target's (temperature/top-k/top-p masked) distribution and ``q`` the
+draft's; on the first rejection the corrected token is drawn from the
+residual ``max(p - q, 0)``. The marginal distribution of every committed
+token equals pure target sampling, but the PRNG *stream* differs from the
+non-speculative engine (documented; greedy is the parity contract).
+
+PRNG streams per slot key (``SamplingParams.key_data``):
+
+* window-end draw at accepted length ``a``: ``fold_in(key, gen + a)`` —
+  the SAME stream the non-speculative engine uses for its one token at
+  generation index ``gen + a``, so a slot with ``draft_tokens=0`` commits
+  a bit-identical sampled stream too.
+* acceptance uniforms: ``fold_in(fold_in(key, ACCEPT_TAG), gen + w)``.
+* draft proposal draws: ``fold_in(fold_in(key, DRAFT_TAG), gen + w)``.
+
+The tags split off independent streams so draft draws never correlate
+with target draws.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+__all__ = ["ACCEPT_TAG", "DRAFT_TAG", "accept_uniforms", "draft_keys",
+           "verify_commit", "draft_from_params"]
+
+# Stream-splitting tags (arbitrary distinct constants folded into the slot
+# key before the per-position fold). The natural stream (no tag) is
+# reserved for committed-token draws so it stays aligned with the
+# non-speculative engine.
+ACCEPT_TAG = 0x5EC0_ACCE
+DRAFT_TAG = 0x5EC0_D4AF
+
+_EPS = 1e-20
+
+
+def _fold_vec(keys: jax.Array, tag: int) -> jax.Array:
+    """fold_in(key, tag) over a (S, 2) raw-key batch."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, tag))(keys)
+
+
+def accept_uniforms(keys: jax.Array, gen: jax.Array, k: int) -> jax.Array:
+    """(S, K) acceptance uniforms: u[s, w] from the slot's ACCEPT stream at
+    generation index ``gen[s] + w``."""
+    tagged = _fold_vec(keys, ACCEPT_TAG)
+
+    def one(key, g):
+        def at(w):
+            return jax.random.uniform(jax.random.fold_in(key, g + w))
+        return jnp.stack([at(w) for w in range(k)])
+
+    return jax.vmap(one)(tagged, gen)
+
+
+def draft_keys(keys: jax.Array, gen: jax.Array, w: int) -> jax.Array:
+    """(S, 2) per-slot keys for the draft's w-th proposal draw."""
+    tagged = _fold_vec(keys, DRAFT_TAG)
+    return jax.vmap(lambda k, g: jax.random.fold_in(k, g + w))(tagged, gen)
+
+
+def _natural_keys(keys: jax.Array, gen: jax.Array, a: jax.Array) -> jax.Array:
+    """(S, 2) window-end keys: the untagged per-generation-index stream."""
+    return jax.vmap(lambda k, g: jax.random.fold_in(k, g))(keys, gen + a)
+
+
+def verify_commit(
+    logits: jax.Array,          # (S, K+1, V) target logits over the window
+    cand: jax.Array,            # (S, K+1) int32: [t0, d_1..d_K]
+    kvec: jax.Array,            # (S,) int32: per-slot draft count in [0, K]
+    *,
+    keys: Optional[jax.Array] = None,    # (S, 2) raw slot keys; None = all-greedy
+    gen: Optional[jax.Array] = None,     # (S,) generation index at window start
+    temp: Optional[jax.Array] = None,    # (S,) temperature
+    top_k: Optional[jax.Array] = None,   # (S,) int32
+    top_p: Optional[jax.Array] = None,   # (S,) float32
+    qlog: Optional[jax.Array] = None,    # (S, K, V) draft scaled+masked logits
+) -> tuple[jax.Array, jax.Array]:
+    """Decide the committed tokens for one speculative window.
+
+    ``logits[:, w]`` is the target's next-token distribution after
+    consuming window tokens ``cand[:, :w+1]`` (``cand[:, 0]`` is the
+    already-emitted anchor token, ``cand[:, 1:]`` the draft proposals).
+    Returns ``(out_toks (S, K+1), n_commit (S,))``: slot ``s`` commits
+    ``out_toks[s, :n_commit[s]]`` — the accepted draft prefix plus exactly
+    one window-end token (correction, residual draw, or bonus token at
+    full acceptance). ``1 <= n_commit <= kvec + 1`` always: a window never
+    commits zero tokens, so the engine always makes progress.
+    """
+    s, k1, _ = logits.shape
+    k = k1 - 1
+    rows = jnp.arange(s)
+    gr = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (S, K+1)
+    greedy_acc = cand[:, 1:] == gr[:, :k]                    # (S, K)
+
+    if keys is None:  # whole batch greedy: no distributions needed
+        accept = greedy_acc
+    else:
+        scaled = (logits.astype(jnp.float32)
+                  / jnp.maximum(temp, 1e-6)[:, None, None])
+        # top-k/top-p masking is (B, V): flatten the window axis and
+        # repeat the per-slot filters across the K+1 positions. A None
+        # filter stays None — same trace-level specialization as the
+        # engine's decode step, which the bit-parity contract needs.
+        if top_k is not None or top_p is not None:
+            masked = lm.top_mask(
+                scaled.reshape(s * k1, -1),
+                None if top_k is None else jnp.repeat(top_k, k1),
+                None if top_p is None else jnp.repeat(top_p, k1))
+            masked = masked.reshape(s, k1, -1)
+        else:
+            masked = scaled
+        p = jax.nn.softmax(masked, axis=-1)                  # (S, K+1, V)
+        q = jax.nn.softmax(qlog.astype(jnp.float32), axis=-1)  # (S, K, V)
+        d_idx = cand[:, 1:, None]                            # (S, K, 1)
+        p_d = jnp.take_along_axis(p[:, :k], d_idx, axis=-1)[..., 0]
+        q_d = jnp.take_along_axis(q, d_idx, axis=-1)[..., 0]
+        u = accept_uniforms(keys, gen, k)                    # (S, K)
+        sampled_acc = u * jnp.maximum(q_d, _EPS) < p_d
+        accept = jnp.where(temp[:, None] > 0, sampled_acc, greedy_acc)
+
+    window = accept & (jnp.arange(k)[None, :] < kvec[:, None])
+    # leading accepted run: first rejection cuts everything after it
+    a = jnp.sum(jnp.cumprod(window.astype(jnp.int32), axis=1), axis=1)
+
+    logits_a = logits[rows, a]                               # (S, V)
+    if keys is None:
+        end_tok = gr[rows, a]
+    else:
+        nat = _natural_keys(keys, gen, a)
+        # direct draw — bitwise the non-speculative engine's sample for
+        # generation index gen + a (same stream, same masking path);
+        # handles temp == 0 rows as argmax internally
+        direct = lm.sample_tokens(logits_a, nat, temp, top_k=top_k,
+                                  top_p=top_p)
+        # residual draw for genuine rejections: max(p - q, 0)
+        p_a = p[rows, a]
+        q_pad = jnp.concatenate([q, jnp.zeros_like(q[:, :1])], axis=1)
+        resid = jnp.maximum(p_a - q_pad[rows, a], 0.0)
+        res_ok = jnp.sum(resid, axis=-1) > _EPS
+        logr = jnp.where(resid > 0, jnp.log(jnp.maximum(resid, 1e-38)),
+                         -jnp.inf)
+        res_tok = jax.vmap(jax.random.categorical)(nat, logr).astype(
+            jnp.int32)
+        use_res = (temp > 0) & (a < kvec) & res_ok
+        end_tok = jnp.where(use_res, res_tok, direct).astype(jnp.int32)
+
+    # out[:, j] = d_{j+1} for j < a, window-end token at j = a (positions
+    # past a are never read: n_commit = a + 1)
+    shifted = jnp.concatenate([cand[:, 1:], cand[:, :1]], axis=1)
+    out = jnp.where(jnp.arange(k1)[None, :] < a[:, None], shifted,
+                    end_tok[:, None]).astype(jnp.int32)
+    return out, (a + 1).astype(jnp.int32)
+
+
+def draft_from_params(params, cfg, n_layers: int):
+    """Self-draft constructor: a ``n_layers``-deep prefix of the target
+    model sharing the embedding / final-norm / head leaves by reference.
+    The stacked ``layers`` pytree is sliced along its leading layer axis
+    (QTensor data planes slice the same way — meta describes the per-layer
+    logical weight and is unchanged). Only pure-attention stacked families
+    qualify (the same families speculative decoding itself supports).
+
+    Returns ``(draft_params, draft_cfg)``."""
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(f"self-draft needs a stacked pure-attention family "
+                         f"(dense/vlm/moe), got {cfg.family!r}")
+    if not 1 <= n_layers <= cfg.num_layers:
+        raise ValueError(f"draft depth {n_layers} outside "
+                         f"[1, {cfg.num_layers}]")
+    draft = dict(params)
+    draft["layers"] = jax.tree.map(lambda a: a[:n_layers], params["layers"])
+    return draft, dataclasses.replace(cfg, num_layers=n_layers)

@@ -54,7 +54,7 @@ from repro.sharding import rules as R
 __all__ = [
     "serve_rules", "serve_param_pspecs", "param_shardings", "shard_params",
     "cache_pspecs", "shard_cache", "cache_bytes_per_device",
-    "restore_shardings", "can_tp_qmatmul", "tp_qmatmul",
+    "restore_shardings", "place_draft", "can_tp_qmatmul", "tp_qmatmul",
     "tp_decode_attn_q8", "tp_prefill_attn_q8",
 ]
 
@@ -148,6 +148,17 @@ def shard_cache(cache, cfg, rules: R.Rules):
     shardings = jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))
     return jax.device_put(cache, shardings)
+
+
+def place_draft(draft_params, draft_cfg, mesh: Mesh, draft_rt):
+    """Place a speculative DRAFT model into the same serving TP layout as
+    the target: its own rules (head/column splits follow the draft's shape,
+    which may differ from the target's), threaded into the draft Runtime so
+    shard_hint / shard_map dispatch inside the propose loop matches the
+    target path's. Returns ``(sharded_params, draft_rt_with_rules)``."""
+    rules = serve_rules(mesh, draft_cfg)
+    draft_rt = dataclasses.replace(draft_rt, rules=rules, mesh=mesh)
+    return shard_params(draft_params, draft_cfg, rules), draft_rt
 
 
 def cache_bytes_per_device(cache) -> int:

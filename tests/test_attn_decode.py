@@ -631,3 +631,82 @@ def test_decode_uses_tuned_tt(rng, tmp_path, monkeypatch):
     np.testing.assert_allclose(np.asarray(out_tuned),
                                np.asarray(out_default), atol=1e-6)
     at.clear_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# Narrow-q-width tile family: speculative K+1 verify windows (PR 10)
+# ---------------------------------------------------------------------------
+
+def test_qwidth_key_family_and_fallback(tmp_path, monkeypatch):
+    """Narrow verify spans get their own |q{bucket} autotune entries;
+    lookup falls back to the base (wide-prefill) key, then to defaults."""
+    from repro.kernels import autotune as at
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    at.clear_memory_cache()
+    # bucketing: pow2 round-up, distinct buckets = distinct keys
+    assert at._bucket_q(1) == 1 and at._bucket_q(5) == 8
+    assert at._attn_key(4096, 64, 8, interpret=True, q_width=5) \
+        == at._attn_key(4096, 64, 8, interpret=True, q_width=8)
+    assert at._attn_key(4096, 64, 8, interpret=True, q_width=5) \
+        != at._attn_key(4096, 64, 8, interpret=True)
+    # no entries at all -> defaults
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True, q_width=5) == (
+        ad.DEFAULT_TQ, ad.DEFAULT_TT)
+    # base (wide) winner recorded -> narrow lookup falls back to it
+    at.record_attn(4096, 64, 8, 64, 512, interpret=True)
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True, q_width=5) == (
+        64, 512)
+    # dedicated narrow winner shadows the base entry for its bucket only
+    at.record_attn(4096, 64, 8, 4, 128, interpret=True, q_width=5)
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True, q_width=5) == (
+        4, 128)
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True, q_width=3) == (
+        64, 512)  # different bucket: still the base entry
+    assert at.get_attn_tiles(4096, 64, 8, interpret=True) == (64, 512)
+    at.clear_memory_cache()
+
+
+def test_qwidth_candidates_capped_at_bucket():
+    from repro.kernels import autotune as at
+
+    for qw in (1, 5, 8, 16):
+        for tq, tt in at.attn_candidates(1024, 64, q_width=qw):
+            assert tq <= at._bucket_q(qw)
+    # wide prefill sweep is unchanged by the family's existence
+    wide = at.attn_candidates(1024, 64)
+    assert any(tq > at.SPEC_QWIDTH_MAX for tq, _ in wide)
+
+
+def test_prefill_narrow_span_uses_qwidth_entry(rng, tmp_path, monkeypatch):
+    """prefill_attn_q8 with a speculative-width span resolves tiles
+    through the q-width key (spied at the pallas entry) and matches the
+    default-tile output bitwise."""
+    import repro.kernels.attn_decode as ad_mod
+    from repro.kernels import autotune as at
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    at.clear_memory_cache()
+    b, kv, g, hd, t, span = 1, 2, 2, 32, 64, 5
+    at.record_attn(t, hd, kv, 2, 16, interpret=True, q_width=span)
+    cache, _, _ = _quant_cache(rng, b, kv, t, hd)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, span, hd)), jnp.float32)
+    kl = jnp.asarray([t], jnp.int32)
+    off = jnp.asarray([t - span], jnp.int32)
+    seen = []
+    real = ad_mod.attn_q8_pallas
+
+    def spy(*a, **kw):
+        seen.append((kw.get("tq"), kw.get("tt")))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ad_mod, "attn_q8_pallas", spy)
+    out_tuned = ad.prefill_attn_q8(q, cache, kl, off, backend="pallas",
+                                   interpret=True)
+    assert seen == [(2, 16)]  # the narrow-span winner, not DEFAULT_TQ
+    out_default = ad.prefill_attn_q8(q, cache, kl, off, backend="pallas",
+                                     interpret=True, tq=ad_mod.DEFAULT_TQ,
+                                     tt=ad_mod.DEFAULT_TT)
+    np.testing.assert_allclose(np.asarray(out_tuned),
+                               np.asarray(out_default), atol=1e-5)
+    at.clear_memory_cache()

@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from benchmarks.common import (
-    BENCH_SCHEMA, assert_no_slo_regression, slo_regressions,
+    BENCH_SCHEMA, CALIBRATION_RECORD, assert_no_slo_regression,
+    calibration_ratio, calibration_wall_ms, slo_regressions,
 )
 from benchmarks.serve_bench import _run_scheduler
 from repro.configs.base import get_config, reduced
@@ -88,6 +89,44 @@ def test_assert_no_slo_regression_env_tolerance(tmp_path, monkeypatch):
     # env knob loosens the gate (known machine mismatch escape hatch)
     monkeypatch.setenv("SERVE_SLO_MAX_RATIO", "10.0")
     assert_no_slo_regression(p, bad)  # 5x worse < 10x tolerance
+
+
+def test_calibration_ratio_and_fallback():
+    # both stamps present -> fresh/committed slowdown; either missing -> 1
+    old = COMMITTED + [_rec(CALIBRATION_RECORD, wall_ms=10.0)]
+    new = [_rec(CALIBRATION_RECORD, wall_ms=30.0)]
+    assert calibration_ratio(old, new) == pytest.approx(3.0)
+    assert calibration_ratio(COMMITTED, new) == 1.0
+    assert calibration_ratio(old, []) == 1.0
+    # non-numeric / nonpositive stamps are ignored, not crashed on
+    assert calibration_ratio(
+        old, [_rec(CALIBRATION_RECORD, wall_ms=0.0)]) == 1.0
+
+
+def test_calibration_widens_gate_on_slower_machine(tmp_path):
+    """A 3x-slower checker gets 3x more wall-clock headroom; a FASTER
+    checker keeps the raw tolerance (speed never hides a regression)."""
+    old = COMMITTED + [_rec(CALIBRATION_RECORD, wall_ms=10.0)]
+    p = _committed_doc(tmp_path, old)
+    # 2.5x-worse ttft: trips the raw 2x gate, passes once the machine is
+    # measured to be 3x slower (effective tolerance 6x)
+    slow = [_sched("serve/sched_fifo", ttft=250.0),
+            _rec(CALIBRATION_RECORD, wall_ms=30.0)]
+    assert_no_slo_regression(p, slow, max_ratio=2.0)
+    # same metrics from an EQUAL-speed machine: still a regression
+    same = [_sched("serve/sched_fifo", ttft=250.0),
+            _rec(CALIBRATION_RECORD, wall_ms=10.0)]
+    with pytest.raises(AssertionError, match="ttft_ms"):
+        assert_no_slo_regression(p, same, max_ratio=2.0)
+    # a 10x FASTER machine does not shrink the tolerance below max_ratio
+    fast = [_sched("serve/sched_fifo", ttft=150.0),
+            _rec(CALIBRATION_RECORD, wall_ms=1.0)]
+    assert_no_slo_regression(p, fast, max_ratio=2.0)
+
+
+def test_calibration_workload_is_measurable():
+    w = calibration_wall_ms(iters=2)
+    assert 0 < w < 60_000
 
 
 def test_assert_no_slo_regression_refuses_smoke_committed(tmp_path):
